@@ -1,0 +1,109 @@
+"""Paper Fig 3 (end-to-end speedup vs sequence length) + Fig 4 (overhead
+ratio vs sequence length) + the Eq. 2-3 identity Speedup = AC / Overhead.
+
+Wall-clock is CPU (this container); the paper's qualitative claims under
+test: (i) speedup > 1 at short sequences with trained heads, (ii) Overhead
+grows with L as attention becomes memory-bound, (iii) the Eq. 2 identity
+holds for measured AC/overhead/speedup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit, trained_stack
+from repro.core.engine import SpecEngine, ar_generate
+from repro.core.tree import cartesian_tree
+
+SEQ_LENGTHS = (128, 256, 512, 1024)
+B, PROMPT, NEW = 4, 16, 32
+
+
+def tpu_projection(ac: float = 1.78, ac_long: float = 1.65):
+    """Fig 3/4 projected on TPU-v5e roofline terms for openPangu-7B.
+
+    Memory-bound decode model (single chip, bf16):
+      t_AR(L)   = (W + KV(L)) / BW
+      t_spec(L) = (W + H + r*KV(L)) / BW
+    W = backbone weights, H = medusa-head weights (K lm projections — the
+    paper's fixed per-step overhead), KV(L) = cache bytes at context L.
+    r = T (the paper's NPU op re-reads the cache per tree node — reproduces
+    its overhead growth 1.32->1.77) or r = 1 (our Pallas flash-decoding
+    kernel: one cache sweep for all T queries — the beyond-paper win).
+    """
+    from repro.configs.registry import get_config
+    from benchmarks.roofline import total_params_bytes
+    cfg7 = get_config("openpangu-7b")
+    W = total_params_bytes(cfg7)                     # bf16 backbone
+    H = 4 * cfg7.d_model * cfg7.vocab_size * 2       # 4 head lm projections
+    T = 26                                           # paper-scale sparse tree
+    kv_per_tok = (2 * cfg7.num_layers * cfg7.num_kv_heads
+                  * cfg7.resolved_head_dim * 2)
+    rows = []
+    for L in (128, 256, 512, 1024, 4096, 32768):
+        kv = L * kv_per_tok
+        t_ar = W + kv
+        ac_L = ac + (ac_long - ac) * min(L / 1024.0, 1.0)
+        for name, r in (("paper_npu_model", T), ("ours_flash_tree", 1)):
+            t_sp = W + H + r * kv
+            overhead = t_sp / t_ar
+            rows.append((f"fig3_proj/{name}/L{L}/speedup", 0.0,
+                         f"{ac_L / overhead:.3f}"))
+            rows.append((f"fig4_proj/{name}/L{L}/overhead", 0.0,
+                         f"{overhead:.3f}"))
+    return rows
+
+
+def run():
+    cfg, model, params, mp, corpus, head_acc = trained_stack()
+    tb = cartesian_tree((4, 2, 1))      # compact tree: T=1+4+8+8=21? -> see tree.py
+    eng = SpecEngine(cfg, tb)
+    rows = [(f"setup/head{h+1}_top1", 0.0, f"{head_acc[h]:.3f}")
+            for h in range(len(head_acc))]
+
+    for L in SEQ_LENGTHS:
+        S_MAX = L + tb.T + 8
+        prompt = jnp.asarray(corpus[:B, :PROMPT].astype(np.int32))
+        lengths = jnp.full((B,), PROMPT, jnp.int32)
+        # pre-fill caches to length ~L-NEW so decode runs at context length L
+        pad_ctx = max(L - NEW - PROMPT, 0)
+        ctx = jnp.concatenate(
+            [prompt, jnp.asarray(corpus[:B, PROMPT:PROMPT + pad_ctx] % cfg.vocab_size,
+                                 jnp.int32)], axis=1) if pad_ctx else prompt
+        ctx_len = jnp.full((B,), ctx.shape[1], jnp.int32)
+
+        # --- AR baseline ---
+        ar_fn = jax.jit(lambda p, t, l, c: ar_generate(cfg, p, t, l, c, NEW))
+        cache = model.init_cache(cfg, B, S_MAX)
+        t_ar = timeit(ar_fn, params, ctx, ctx_len, cache, iters=5, warmup=2)
+
+        # --- Medusa ---
+        sp_fn = jax.jit(lambda p, m, t, l, c: eng.generate(p, m, t, l, c, NEW))
+        cache = model.init_cache(cfg, B, S_MAX)
+        t_sp = timeit(sp_fn, params, mp, ctx, ctx_len, cache, iters=5, warmup=2)
+        _, n_out, stats = sp_fn(params, mp, ctx, ctx_len,
+                                model.init_cache(cfg, B, S_MAX))
+        steps = max(int(stats.steps), 1)
+        ac = float(jnp.mean(n_out)) / steps
+
+        # per-step times: AR does NEW steps; spec does `steps` steps
+        t_ar_step = t_ar / NEW
+        t_sp_step = t_sp / steps
+        overhead = t_sp_step / t_ar_step
+        speedup = t_ar / t_sp
+        eq2 = ac / overhead
+        rows += [
+            (f"fig3/L{L}/speedup", t_sp * 1e6, f"{speedup:.3f}"),
+            (f"fig4/L{L}/overhead", t_sp_step * 1e6, f"{overhead:.3f}"),
+            (f"metrics/L{L}/accept_rate", 0.0, f"{ac:.3f}"),
+            (f"metrics/L{L}/eq2_identity_AC_over_OH", 0.0,
+             f"{eq2:.3f}~={speedup:.3f}"),
+        ]
+    rows += tpu_projection()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,70 @@
+"""Shared benchmark scaffolding: a small trained backbone + trained Medusa
+heads on the synthetic chat grammar (CPU-sized stand-in for OpenPangu-7B)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.tree import cartesian_tree
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+from repro.training import data as D
+from repro.training import optimizer as O
+from repro.training import steps as ST
+
+
+@functools.lru_cache(maxsize=2)
+def trained_stack(arch: str = "openpangu-7b", lm_steps: int = 150,
+                  head_steps: int = 120, K: int = 3, seed: int = 0):
+    """(cfg, model, params, medusa_params, corpus) — backbone pre-trained on
+    the synthetic grammar, heads trained on its self-distilled outputs."""
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(seed), cfg))
+    dcfg = D.SyntheticChatConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                 n_samples=512, noise=0.05, seed=seed)
+    corpus = D.synthetic_chat(dcfg)
+
+    opt = O.adamw_init(params)
+    lm_step = jax.jit(
+        lambda p, o, x, y: ST.lm_train_step(p, o, cfg, x, y, lr=1e-3),
+        donate_argnums=(0, 1))
+    it = D.batches(corpus, 16, seed=seed + 1)
+    for _ in range(lm_steps):
+        b = jnp.asarray(next(it))
+        params, opt, _ = lm_step(params, opt, b[:, :-1], b[:, 1:])
+
+    # self-distillation: backbone's own greedy continuations (paper §4.2)
+    distilled = D.self_distill(params, model, cfg, corpus[:256], gen_len=32)
+
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(seed + 2), cfg, K,
+                                       base_lm_head=params.get("lm_head")))
+    hopt = O.adamw_init(mp)
+    h_step = jax.jit(
+        lambda m, o, t: ST.medusa_train_step(
+            m, o, params, cfg, t, K, lr=1e-3,
+            pad_id=D.special_id(cfg.vocab_size, D.PAD)),
+        donate_argnums=(0, 1))
+    hit = D.batches(distilled, 16, seed=seed + 3)
+    for _ in range(head_steps):
+        mp, hopt, met = h_step(mp, hopt, jnp.asarray(next(hit)))
+    return cfg, model, params, mp, corpus, np.asarray(met["head_acc"])
+
+
+def timeit(fn, *args, iters: int = 20, warmup: int = 3):
+    """Median wall time per call (seconds); blocks on device results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,97 @@
+"""End-to-end driver (paper §4.2): pre-train a small backbone for a few
+hundred steps, build a self-distillation set from its own generations, train
+Medusa heads with Eq. 1, checkpoint/resume, and report the accept rate won.
+
+  PYTHONPATH=src python examples/train_medusa_heads.py \
+      [--arch openpangu-7b] [--lm-steps 150] [--head-steps 150] [--resume]
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine
+from repro.core.tree import cartesian_tree, chain_tree
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+from repro.training import checkpoint as C
+from repro.training import data as D
+from repro.training import optimizer as O
+from repro.training import steps as ST
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="openpangu-7b")
+    ap.add_argument("--lm-steps", type=int, default=150)
+    ap.add_argument("--head-steps", type=int, default=150)
+    ap.add_argument("--heads", type=int, default=3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_heads_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+
+    # --- 1. pre-train the backbone on the synthetic chat grammar -----------
+    dcfg = D.SyntheticChatConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                 n_samples=512, noise=0.05)
+    corpus = D.synthetic_chat(dcfg)
+    opt = O.adamw_init(params)
+    lm_step = jax.jit(lambda p, o, x, y: ST.lm_train_step(p, o, cfg, x, y, lr=1e-3),
+                      donate_argnums=(0, 1))
+    it = D.batches(corpus, 16, seed=1)
+    for i in range(args.lm_steps):
+        b = jnp.asarray(next(it))
+        params, opt, met = lm_step(params, opt, b[:, :-1], b[:, 1:])
+        if i % 50 == 0:
+            print(f"[lm] step {i:4d} loss {float(met['loss']):.3f}")
+
+    # --- 2. self-distillation set (preserving special tokens) --------------
+    distilled = D.self_distill(params, model, cfg, corpus[:256], gen_len=32)
+    print(f"[distill] {distilled.shape[0]} sequences from the backbone")
+
+    # --- 3. Medusa-head training (Eq. 1, AdamW lr=1e-3) + checkpointing ----
+    K = args.heads
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, K,
+                                       base_lm_head=params.get("lm_head")))
+    hopt = O.adamw_init(mp)
+    start = 0
+    ck = C.AsyncCheckpointer(args.ckpt_dir, keep=2)
+    if args.resume:
+        latest = C.restore_latest(args.ckpt_dir, {"mp": mp, "opt": hopt})
+        if latest:
+            start, tree, _ = latest
+            mp, hopt = tree["mp"], tree["opt"]
+            print(f"[resume] from step {start}")
+    h_step = jax.jit(lambda m, o, t: ST.medusa_train_step(
+        m, o, params, cfg, t, K, lr=1e-3,
+        pad_id=D.special_id(cfg.vocab_size, D.PAD)), donate_argnums=(0, 1))
+    hit = D.batches(distilled, 16, seed=2)
+    for i in range(start, args.head_steps):
+        mp, hopt, met = h_step(mp, hopt, jnp.asarray(next(hit)))
+        if i % 50 == 0 or i == args.head_steps - 1:
+            accs = np.round(np.asarray(met["head_acc"]), 3)
+            print(f"[heads] step {i:4d} loss {float(met['loss']):.3f} top1 {accs}")
+            ck.save(i + 1, {"mp": mp, "opt": hopt})
+    ck.wait()
+
+    # --- 4. measure the accept rate the heads buy --------------------------
+    tb = chain_tree(K) if cfg.spec_mode == "chain" else cartesian_tree((4, 2, 1)[:K])
+    eng = SpecEngine(cfg, tb)
+    prompt = jnp.asarray(corpus[:4, :16].astype(np.int32))
+    lengths = jnp.full((4,), 16, jnp.int32)
+    _, n_out, stats = eng.generate(params, mp, prompt, lengths,
+                                   model.init_cache(cfg, 4, 256), 48)
+    ac = float(jnp.mean(n_out)) / max(int(stats.steps), 1)
+    print(f"[result] accept rate (tokens/step) = {ac:.2f}  "
+          f"(paper reports 1.78 at L=128 on the real model)")
+
+
+if __name__ == "__main__":
+    main()

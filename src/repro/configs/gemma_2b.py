@@ -1,0 +1,22 @@
+"""gemma-2b — 18L d=2048 8H (MQA kv=1) d_ff=16384 vocab=256000, GeGLU,
+head_dim=256, tied embeddings. [arXiv:2403.08295; hf]
+"""
+from repro.configs.base import ModelConfig, reduce
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    act="gelu",
+    tie_embeddings=True,
+    spec_mode="tree",
+    source="arXiv:2403.08295",
+)
+
+REDUCED = reduce(CONFIG, head_dim=32)

@@ -1,0 +1,30 @@
+"""mamba2-2.7b — attention-free SSD (state-space duality). 64L d=2560
+vocab=50280, ssm_state=128. [arXiv:2405.21060; unverified]
+
+Arch-applicability (DESIGN.md §4): static *tree* attention cannot branch an
+SSM recurrence, so this arch uses the paper's multi-head prediction +
+zero-copy retrieval in CHAIN mode (a tree degenerated to one path, verified
+in one chunked SSD pass).
+"""
+from repro.configs.base import ModelConfig, reduce
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    norm="rmsnorm",
+    spec_mode="chain",
+    full_attention=False,
+    source="arXiv:2405.21060",
+)
+
+REDUCED = reduce(CONFIG, d_model=64, ssm_head_dim=16, ssm_state=16)

@@ -1,0 +1,23 @@
+"""phi3.5-moe-42b-a6.6b — 32L d=4096 32H (GQA kv=8) d_ff=6400, MoE 16e top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]
+"""
+from repro.configs.base import ModelConfig, reduce
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    vocab_size=32064,
+    num_experts=16,
+    experts_per_tok=2,
+    act="silu",
+    spec_mode="tree",
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)
+
+REDUCED = reduce(CONFIG)

@@ -1,0 +1,45 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+
+# arch id -> module (one module per assigned architecture + the paper's own)
+_MODULES = {
+    "granite-moe-1b-a400m":   "repro.configs.granite_moe_1b_a400m",
+    "phi3.5-moe-42b-a6.6b":   "repro.configs.phi35_moe_42b_a66b",
+    "internvl2-26b":          "repro.configs.internvl2_26b",
+    "whisper-tiny":           "repro.configs.whisper_tiny",
+    "gemma-2b":               "repro.configs.gemma_2b",
+    "granite-8b":             "repro.configs.granite_8b",
+    "qwen1.5-4b":             "repro.configs.qwen15_4b",
+    "qwen1.5-0.5b":           "repro.configs.qwen15_05b",
+    "mamba2-2.7b":            "repro.configs.mamba2_27b",
+    "jamba-1.5-large-398b":   "repro.configs.jamba_15_large_398b",
+    "openpangu-7b":           "repro.configs.openpangu_7b",
+}
+
+ASSIGNED_ARCHS = [a for a in _MODULES if a != "openpangu-7b"]
+ALL_ARCHS = list(_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def iter_cells(include_skipped: bool = False):
+    """Yield (arch, shape, applicable, why) over the assigned 40-cell grid."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            if ok or include_skipped:
+                yield arch, shape.name, ok, why

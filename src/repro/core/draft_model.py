@@ -1,0 +1,113 @@
+"""Classic two-model speculative decoding baseline (Leviathan/Chen 2023).
+
+The paper (§2.2) positions Medusa against the Draft-Model paradigm; we
+implement that baseline on the same static-cache machinery so the comparison
+is apples-to-apples: a small draft model autoregressively proposes a γ-token
+chain, the target verifies it in one forward (chain == degenerate tree), and
+both caches commit with the same zero-copy compaction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import verify as V
+from repro.core.engine import _squeeze_spec
+from repro.core.tree import chain_tree
+from repro.models.api import get_model
+
+
+class DraftSpecEngine:
+    def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
+                 gamma: int = 4):
+        assert target_cfg.vocab_size == draft_cfg.vocab_size, "tokenizer alignment"
+        self.tc, self.dc = target_cfg, draft_cfg
+        self.tm, self.dm = get_model(target_cfg), get_model(draft_cfg)
+        self.gamma = gamma
+        self.tb = chain_tree(gamma)
+        self.dtree = V.device_tree(self.tb)
+
+    def _draft_chain(self, dparams, dcache, dlengths, base):
+        """Draft proposes gamma tokens AR-style. Returns (tokens [B,gamma], dcache').
+
+        Runs gamma+1 steps: a full accept commits gamma+1 tokens
+        [base, d1..d_gamma], so the draft must have written d_gamma's KV row
+        too (otherwise its next round attends over a stale slot and
+        acceptance collapses — caught by the self-draft test)."""
+        chain1 = jnp.ones((1, 1), bool)
+        depth0 = jnp.zeros((1,), jnp.int32)
+        B = base.shape[0]
+
+        def body(i, c):
+            dcache, dlengths, tok, toks = c
+            hidden, dcache = self.dm.decode(dparams, self.dc, dcache,
+                                            tok[:, None], dlengths, chain1, depth0)
+            dcache = _squeeze_spec(self.dm, self.dc, dcache, dlengths)
+            dlengths = dlengths + 1
+            nxt = jnp.argmax(self.dm.unembed(dparams, self.dc, hidden[:, 0]),
+                             axis=-1).astype(jnp.int32)
+            toks = jnp.where(i < self.gamma, toks.at[:, jnp.minimum(i, self.gamma - 1)].set(nxt), toks)
+            return (dcache, dlengths, nxt, toks)
+
+        toks = jnp.zeros((B, self.gamma), jnp.int32)
+        dcache, dlengths, _, toks = jax.lax.fori_loop(
+            0, self.gamma + 1, body, (dcache, dlengths, base, toks))
+        return toks, dcache, dlengths - 1
+
+    def step(self, tparams, dparams, tcache, dcache, lengths, dlengths, base):
+        """One draft-propose / target-verify round."""
+        dt = self.dtree
+        draft_toks, dcache, dlengths = self._draft_chain(dparams, dcache, dlengths, base)
+        mtok = draft_toks[:, :, None]                       # [B, gamma, 1]
+        cand = V.generate_candidates(base, mtok, dt)        # [B, gamma+1]
+        hidden, spec_cache = self.tm.decode(
+            tparams, self.tc, tcache, cand, lengths,
+            jnp.asarray(dt.mask), jnp.asarray(dt.depths))
+        logits = self.tm.unembed(tparams, self.tc, hidden)
+        verdict = V.greedy_verify(cand, logits, dt)
+        tcache, lengths = self.tm.commit(self.tc, spec_cache, lengths,
+                                         verdict.path_slots, verdict.acc)
+        # draft wrote gamma rows from `lengths`; accepted prefix stays, the
+        # rest is dead and gets overwritten — roll dlengths back to match.
+        dlengths = lengths
+        return tcache, dcache, lengths, dlengths, verdict
+
+    def generate(self, tparams, dparams, tokens, prompt_lengths, tcache, dcache,
+                 max_new: int, extra_embeds=None):
+        B = tokens.shape[0]
+        K1 = self.gamma + 1
+        buf_len = max_new + K1 + 1
+
+        th, tcache = self.tm.prefill(tparams, self.tc, tokens, prompt_lengths,
+                                     tcache, extra_embeds=extra_embeds)
+        _, dcache = self.dm.prefill(dparams, self.dc, tokens, prompt_lengths,
+                                    dcache, extra_embeds=extra_embeds)
+        base = jnp.argmax(self.tm.unembed(tparams, self.tc, th), axis=-1).astype(jnp.int32)
+        out = jnp.zeros((B, buf_len), jnp.int32)
+
+        def write_out(out, toks, n_out):
+            def one(o, t, s):
+                return jax.lax.dynamic_update_slice(o, t, (s,))
+            return jax.vmap(one)(out, toks, jnp.minimum(n_out, buf_len - K1))
+
+        def cond(c):
+            return (c[6] < max_new) & jnp.any(c[5] < max_new)
+
+        def body(c):
+            tcache, dcache, lengths, dlengths, base, n_out, steps, out = c
+            tcache, dcache, lengths, dlengths, verdict = self.step(
+                tparams, dparams, tcache, dcache, lengths, dlengths, base)
+            out = write_out(out, verdict.path_tokens, n_out)
+            return (tcache, dcache, lengths, dlengths, verdict.next_token,
+                    n_out + verdict.acc, steps + 1, out)
+
+        state = (tcache, dcache, prompt_lengths, prompt_lengths, base,
+                 jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32), out)
+        tcache, dcache, lengths, dlengths, base, n_out, steps, out = \
+            jax.lax.while_loop(cond, body, state)
+        out = write_out(out, jnp.broadcast_to(base[:, None], (B, K1)), n_out)
+        n_out = n_out + 1
+        return out[:, :max_new], jnp.minimum(n_out, max_new), steps

@@ -1,0 +1,184 @@
+"""Speculative decoding engines.
+
+``SpecEngine`` runs the paper's static Medusa step: candidates from the
+static tree -> one backbone verification forward -> tensorized acceptance ->
+zero-copy commit.  The full generation loop is a single ``lax.while_loop``
+over one compiled step graph — no retraces, no host round-trips; shapes are
+identical every iteration (the NPU "Static Shape" contract, natively XLA).
+
+``ar_generate`` is the autoregressive baseline sharing the same cache
+machinery (T=1 decode), used for the paper's speedup/overhead metrics and
+for the losslessness test (greedy Medusa == greedy AR, token for token).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import medusa as M
+from repro.core import verify as V
+from repro.core.tree import TreeBuffers, default_tree
+from repro.models.api import get_model
+
+
+class StepStats(NamedTuple):
+    tokens_out: jnp.ndarray      # [B] int32 tokens generated so far
+    steps: jnp.ndarray           # scalar int32 decode steps taken
+    accepted_sum: jnp.ndarray    # scalar int32 — sum of per-step acc (for AC)
+
+
+class SpecEngine:
+    """Medusa speculative engine for one (config, tree) pair."""
+
+    def __init__(self, cfg: ModelConfig, tb: Optional[TreeBuffers] = None,
+                 use_kernel: bool = False, accept: str = "greedy",
+                 temperature: float = 0.7, deferred: bool = False):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.tb = tb if tb is not None else default_tree(cfg.spec_mode)
+        if cfg.spec_mode == "chain" and not self.tb.is_chain:
+            raise ValueError(
+                f"{cfg.name}: SSM/hybrid archs verify in CHAIN mode "
+                "(DESIGN.md §4); pass a chain_tree().")
+        self.dtree = V.device_tree(self.tb)
+        self.use_kernel = use_kernel
+        self.deferred = deferred and cfg.family != "encdec"
+        self.accept = accept
+        self.temperature = temperature
+
+    # -- one-shot pieces (jit-friendly pure functions) ----------------------
+
+    def prefill(self, params, medusa_params, tokens, lengths, cache,
+                extra_embeds=None):
+        """-> (cache, lengths, base_token [B], mtok [B,K,tk], mprob)."""
+        last_hidden, cache = self.model.prefill(
+            params, self.cfg, tokens, lengths, cache, extra_embeds=extra_embeds)
+        logits = self.model.unembed(params, self.cfg, last_hidden)
+        base = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        mtok, mprob = self._heads(medusa_params, last_hidden)
+        return cache, lengths, base, mtok, mprob
+
+    def _heads(self, medusa_params, hidden):
+        if self.dtree.K == 0 or medusa_params is None:
+            B = hidden.shape[0]
+            z = jnp.zeros((B, max(self.dtree.K, 1), self.dtree.max_topk), jnp.int32)
+            return z, z.astype(jnp.float32)
+        mtok, mprob = M.medusa_topk(medusa_params, hidden, self.dtree.max_topk)
+        return mtok.transpose(1, 0, 2), mprob.transpose(1, 0, 2)
+
+    def spec_step(self, params, medusa_params, cache, lengths, base, mtok, key):
+        """One static speculative step. Returns (cache, lengths, verdict, mtok')."""
+        dt = self.dtree
+        cand = V.generate_candidates(base, mtok, dt)                  # [B, T]
+        kw = {"deferred": True} if self.deferred else {}
+        hidden, spec_cache = self.model.decode(
+            params, self.cfg, cache, cand, lengths,
+            jnp.asarray(dt.mask), jnp.asarray(dt.depths),
+            use_kernel=self.use_kernel, **kw)
+        logits = self.model.unembed(params, self.cfg, hidden)         # [B, T, V]
+        if self.accept == "typical":
+            verdict = V.typical_verify(cand, logits, dt, key,
+                                       temperature=self.temperature)
+        else:
+            verdict = V.greedy_verify(cand, logits, dt)
+        cache, lengths = self.model.commit(
+            self.cfg, spec_cache, lengths, verdict.path_slots, verdict.acc)
+        h_last = jnp.take_along_axis(
+            hidden, verdict.last_slot[:, None, None], axis=1)[:, 0]   # [B, d]
+        mtok2, _ = self._heads(medusa_params, h_last)
+        return cache, lengths, verdict, mtok2
+
+    # -- full generation loops ----------------------------------------------
+
+    def generate(self, params, medusa_params, tokens, prompt_lengths, cache,
+                 max_new: int, extra_embeds=None, key=None,
+                 collect_stats: bool = True):
+        """Medusa generation: returns (out_tokens [B, max_new+K], n_out [B], stats)."""
+        cfg, dt = self.cfg, self.dtree
+        key = key if key is not None else jax.random.PRNGKey(0)
+        B = tokens.shape[0]
+        K1 = dt.K + 1
+        buf_len = max_new + K1 + 1
+        cache, lengths, base, mtok, _ = self.prefill(
+            params, medusa_params, tokens, prompt_lengths, cache, extra_embeds)
+        out = jnp.zeros((B, buf_len), jnp.int32)
+        max_steps = max_new  # worst case 1 token/step
+
+        def write_out(out, toks, n_out):
+            def one(o, t, s):
+                return jax.lax.dynamic_update_slice(o, t, (s,))
+            return jax.vmap(one)(out, toks, jnp.minimum(n_out, buf_len - K1))
+
+        def cond(c):
+            _, _, _, _, _, n_out, steps, _ = c
+            return (steps < max_steps) & jnp.any(n_out < max_new)
+
+        def body(c):
+            cache, lengths, base, mtok, out, n_out, steps, key = c
+            key, sub = jax.random.split(key)
+            cache, lengths, verdict, mtok = self.spec_step(
+                params, medusa_params, cache, lengths, base, mtok, sub)
+            out = write_out(out, verdict.path_tokens, n_out)
+            n_out = n_out + verdict.acc
+            return (cache, lengths, verdict.next_token, mtok, out, n_out,
+                    steps + 1, key)
+
+        n_out = jnp.zeros((B,), jnp.int32)
+        state = (cache, lengths, base, mtok, out, n_out, jnp.zeros((), jnp.int32), key)
+        # accepted-count accounting folded into n_out / steps
+        cache, lengths, base, mtok, out, n_out, steps, _ = jax.lax.while_loop(
+            cond, body, state)
+        # final certain token
+        out = write_out(out, jnp.broadcast_to(base[:, None], (B, K1)), n_out)
+        n_out = n_out + 1
+        stats = StepStats(tokens_out=n_out, steps=steps,
+                          accepted_sum=jnp.sum(n_out))
+        return out[:, :max_new], jnp.minimum(n_out, max_new), stats
+
+
+def ar_generate(cfg: ModelConfig, params, tokens, prompt_lengths, cache,
+                max_new: int, extra_embeds=None):
+    """Greedy autoregressive baseline on the same cache machinery (T=1)."""
+    model = get_model(cfg)
+    B = tokens.shape[0]
+    chain1 = jnp.ones((1, 1), bool)
+    depth0 = jnp.zeros((1,), jnp.int32)
+
+    last_hidden, cache = model.prefill(params, cfg, tokens, prompt_lengths,
+                                       cache, extra_embeds=extra_embeds)
+    base = jnp.argmax(model.unembed(params, cfg, last_hidden), axis=-1).astype(jnp.int32)
+    out = jnp.zeros((B, max_new), jnp.int32)
+
+    def body(i, c):
+        cache, lengths, tok, out = c
+        out = out.at[:, i].set(tok)
+        hidden, cache = model.decode(params, cfg, cache, tok[:, None], lengths,
+                                     chain1, depth0)
+        # T=1: the written row is already in place; no compaction needed
+        lengths = lengths + 1
+        if cfg.family in ("ssm", "hybrid") or cfg.num_experts == 0:
+            pass
+        # ssm spec states carry a T=1 axis; select it
+        cache = _squeeze_spec(model, cfg, cache, lengths)
+        nxt = jnp.argmax(model.unembed(params, cfg, hidden[:, 0]), axis=-1)
+        return (cache, lengths, nxt.astype(jnp.int32), out)
+
+    cache, lengths, tok, out = jax.lax.fori_loop(
+        0, max_new, body, (cache, prompt_lengths, base, out))
+    return out, lengths
+
+
+def _squeeze_spec(model, cfg, spec_cache, lengths):
+    """Collapse the per-prefix T axis of SSM spec states for T=1 decode."""
+    def fix_entry(entry):
+        if "k" in entry:
+            return {"k": entry["k"], "v": entry["v"]}   # drop in-flight rows
+        return {k: v[:, :, 0] for k, v in entry.items()}
+    if cfg.family == "encdec":
+        return {"self": {"k": spec_cache["self"]["k"], "v": spec_cache["self"]["v"]},
+                "cross": spec_cache["cross"]}
+    return {k: fix_entry(v) for k, v in spec_cache.items()}

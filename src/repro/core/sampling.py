@@ -1,0 +1,22 @@
+"""Token-level sampling utilities shared by the engines."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key, logits, temperature: float = 1.0):
+    if temperature <= 0.0:
+        return greedy(logits)
+    return jax.random.categorical(key, logits.astype(jnp.float32) / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def typical_threshold(logp, eps: float = 0.3, delta: float = 0.09):
+    """Medusa typical-acceptance threshold: min(eps, delta * exp(-H))."""
+    H = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    return jnp.minimum(eps, delta * jnp.exp(-H))

@@ -1,0 +1,121 @@
+"""Static tree verification + zero-copy retrieval (paper §3.2).
+
+Everything here is fixed-shape tensor algebra — no host synchronisation, no
+data-dependent shapes.  The acceptance outcome only changes *values*
+(indices fed to gathers), exactly the paper's reconciliation of dynamic
+speculative verification with static-graph execution.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import TreeBuffers
+
+
+class DeviceTree(NamedTuple):
+    """TreeBuffers uploaded as device constants."""
+    mask: jnp.ndarray            # [T, T] bool
+    depths: jnp.ndarray          # [T] int32
+    node_head: jnp.ndarray       # [T-1] int32
+    node_choice: jnp.ndarray     # [T-1] int32
+    retrieve: jnp.ndarray        # [P, K+1] int32
+    retrieve_valid: jnp.ndarray  # [P, K+1] bool
+    T: int
+    K: int
+    P: int
+    max_topk: int
+
+
+def device_tree(tb: TreeBuffers) -> DeviceTree:
+    return DeviceTree(
+        mask=jnp.asarray(tb.mask), depths=jnp.asarray(tb.depths),
+        node_head=jnp.asarray(tb.node_head), node_choice=jnp.asarray(tb.node_choice),
+        retrieve=jnp.asarray(tb.retrieve), retrieve_valid=jnp.asarray(tb.retrieve_valid),
+        T=tb.T, K=tb.K, P=tb.P, max_topk=tb.max_topk)
+
+
+def generate_candidates(base_token, medusa_tok, dt: DeviceTree):
+    """Assemble the tree token tensor.
+
+    base_token [B] (the certain next token), medusa_tok [B, K, max_topk]
+    (per-head top-k) -> candidates [B, T] via the static ``tree_indices``
+    mapping (node -> (head, slot) gather).
+    """
+    B = base_token.shape[0]
+    if dt.T == 1:
+        return base_token[:, None]
+    others = medusa_tok[:, dt.node_head, dt.node_choice]      # [B, T-1]
+    return jnp.concatenate([base_token[:, None], others], axis=1)
+
+
+class Verdict(NamedTuple):
+    acc: jnp.ndarray             # [B] int32 in [1, K+1] — tokens committed
+    path_slots: jnp.ndarray      # [B, K+1] int32 — best path's node slots
+    path_tokens: jnp.ndarray     # [B, K+1] int32 — committed tokens (first acc valid)
+    next_token: jnp.ndarray      # [B] int32 — next step's certain base token
+    last_slot: jnp.ndarray       # [B] int32 — node whose hidden seeds the next step
+
+
+def _select(acc_per_path, cand_paths, pred_paths, dtree):
+    best = jnp.argmax(acc_per_path, axis=1)                   # [B] first max wins
+    acc = jnp.take_along_axis(acc_per_path, best[:, None], axis=1)[:, 0]
+    path_slots = dtree.retrieve[best]                          # [B, K+1]
+    path_tokens = jnp.take_along_axis(cand_paths, best[:, None, None], axis=1)[:, 0]
+    preds = jnp.take_along_axis(pred_paths, best[:, None, None], axis=1)[:, 0]
+    next_token = jnp.take_along_axis(preds, (acc - 1)[:, None], axis=1)[:, 0]
+    last_slot = jnp.take_along_axis(path_slots, (acc - 1)[:, None], axis=1)[:, 0]
+    return Verdict(acc.astype(jnp.int32), path_slots, path_tokens,
+                   next_token.astype(jnp.int32), last_slot)
+
+
+def greedy_verify(candidates, logits, dtree: DeviceTree) -> Verdict:
+    """Lossless greedy acceptance: a node is accepted iff its token equals the
+    backbone argmax at its parent.  candidates [B, T], logits [B, T, V]."""
+    argm = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # [B, T]
+    cand_paths = candidates[:, dtree.retrieve]                 # [B, P, K+1]
+    pred_paths = argm[:, dtree.retrieve]
+    match = (cand_paths[:, :, 1:] == pred_paths[:, :, :-1]) & dtree.retrieve_valid[None, :, 1:]
+    acc_per_path = 1 + jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1)
+    return _select(acc_per_path, cand_paths, pred_paths, dtree)
+
+
+def typical_verify(candidates, logits, dtree: DeviceTree, key,
+                   temperature: float = 0.7, eps: float = 0.3,
+                   delta: float = 0.09) -> Verdict:
+    """Medusa's typical-acceptance criterion: accept candidate x at a node if
+    p(x|parent) >= min(eps, delta * exp(-H(p))) under temperature sampling."""
+    f32 = logits.astype(jnp.float32) / max(temperature, 1e-4)
+    logp = jax.nn.log_softmax(f32, axis=-1)                    # [B, T, V]
+    H = -jnp.sum(jnp.exp(logp) * logp, axis=-1)                # [B, T]
+    thresh = jnp.minimum(eps, delta * jnp.exp(-H))             # [B, T]
+
+    cand_paths = candidates[:, dtree.retrieve]                 # [B, P, K+1]
+    # p(child token | parent node):
+    parent_logp = logp[:, dtree.retrieve[:, :-1], :]           # [B, P, K, V]
+    child_tok = cand_paths[:, :, 1:]
+    p_child = jnp.take_along_axis(jnp.exp(parent_logp), child_tok[..., None], axis=-1)[..., 0]
+    th = thresh[:, dtree.retrieve[:, :-1]]                     # [B, P, K]
+    match = (p_child >= th) & dtree.retrieve_valid[None, :, 1:]
+    acc_per_path = 1 + jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1)
+
+    pred_paths = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, dtree.retrieve]
+    v = _select(acc_per_path, cand_paths, pred_paths, dtree)
+    # sample the bonus token from the typical set at the last accepted node
+    last_logp = jnp.take_along_axis(
+        logp, v.last_slot[:, None, None], axis=1)[:, 0]        # [B, V]
+    last_H = -jnp.sum(jnp.exp(last_logp) * last_logp, axis=-1)
+    cut = jnp.log(jnp.minimum(eps, delta * jnp.exp(-last_H)))[:, None]
+    trimmed = jnp.where(last_logp >= cut, last_logp, -jnp.inf)
+    # guard: keep at least the argmax
+    amax = jnp.argmax(last_logp, axis=-1)
+    trimmed = jnp.where(jnp.all(jnp.isinf(trimmed), axis=-1, keepdims=True),
+                        jax.nn.one_hot(amax, logits.shape[-1], dtype=jnp.float32) * 0
+                        + jnp.where(jax.nn.one_hot(amax, logits.shape[-1], dtype=bool),
+                                    0.0, -jnp.inf),
+                        trimmed)
+    next_tok = jax.random.categorical(key, trimmed, axis=-1).astype(jnp.int32)
+    return v._replace(next_token=next_tok)

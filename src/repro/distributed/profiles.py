@@ -1,0 +1,107 @@
+"""Sharding profiles: logical-axis -> mesh-axis rule sets per workload kind,
+plus PartitionSpec trees for decode caches.
+
+Mesh axes: ("pod", "data", "model") multi-pod / ("data", "model") single-pod.
+  - model: TP — heads / kv-heads / ffn-hidden / vocab / ssm-inner / ssm-heads
+  - data:  DP over batch, EP over experts, FSDP over the param embed dim
+  - pod:   pure DP (DCN-crossing collectives restricted to gradient/batch)
+
+Divisibility guards in ``spec_for`` demote any assignment that does not
+divide the dimension (e.g. 8 kv heads on the 16-way model axis -> replicated,
+while the 32 q heads still shard).
+"""
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import spec_for
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_rules(kind: str, *, multi_pod: bool = False, fsdp: bool = False,
+               seq_shard: bool | None = None, moe_g_shard: bool = True) -> dict:
+    """kind: train | prefill | decode."""
+    if seq_shard is None:
+        seq_shard = kind == "train"     # megatron-SP: shard saved activations
+    ba = batch_axes(multi_pod)
+    return {
+        # ---- parameters ----
+        "vocab": "model", "heads": "model", "kv_heads": "model",
+        "ff": "model", "experts": "data",
+        "ssm_inner": "model", "ssm_heads": "model",
+        "medusa_ff": "model", "medusa": None,
+        "embed": "data" if fsdp else None,
+        "norm": None, "head_dim": None, "layers": None,
+        # ---- activations ----
+        "batch": ba,
+        "seq": "model" if seq_shard else None,
+        "act_embed": None,
+        "act_ff": "model",
+        "act_heads": "model",
+        "act_kv": "model",
+        "act_vocab": "model",
+        "act_experts": "data",
+        "act_moe_g": "model" if moe_g_shard else None,
+        "act_ssm_heads": "model",
+    }
+
+
+def cache_pspecs(cache_abstract, cfg: ModelConfig, shape: ShapeConfig,
+                 mesh: Mesh, multi_pod: bool):
+    """PartitionSpec tree matching init_cache(abstract=True) output.
+
+    batch>=mesh-data: shard batch over DP axes and KV-seq over model
+    (flash-decoding style sequence parallelism for the cache sweep).
+    batch==1 (long_500k): shard KV-seq over every available axis instead.
+    """
+    ba = batch_axes(multi_pod)
+    b1 = shape.global_batch == 1
+    kvseq = (("pod", "data", "model") if multi_pod else ("data", "model")) if b1 \
+        else "model"
+    batch = None if b1 else ba
+
+    def spec(role, arr):
+        if role in ("k", "v"):
+            axes = (None, batch, kvseq, None, None)
+        elif role == "cross":
+            axes = (None, batch, None, None, None)
+        elif role == "conv_x":
+            axes = (None, batch, "model", None)
+        elif role == "conv_bc":
+            axes = (None, batch, None, None)
+        elif role == "ssm":
+            axes = (None, batch, "model", None, None)
+        else:
+            axes = (None,) * arr.ndim
+        entries = []
+        for i, ax in enumerate(axes):
+            if ax is None:
+                entries.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            entries.append(ax if arr.shape[i] % size == 0 else None)
+        return P(*entries)
+
+    def walk(tree, in_cross=False):
+        out = {}
+        for key, val in tree.items():
+            if isinstance(val, dict):
+                out[key] = walk(val, in_cross=(key == "cross"))
+            else:
+                role = "cross" if (in_cross and key in ("k", "v")) else key
+                out[key] = spec(role, val)
+        return out
+
+    return walk(cache_abstract)
+
+
+def to_named(tree, mesh: Mesh):
+    import jax
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,138 @@
+"""Logical-axis sharding system (MaxText-style, dependency-free).
+
+Model code annotates activations with *logical* axis names via ``logical()``;
+parameters carry logical axes through ``Param`` wrappers created at init.
+A thread-local context installed by ``axis_rules(mesh, rules)`` maps logical
+names -> mesh axes and applies ``with_sharding_constraint``.  Outside the
+context everything is the identity, so the same model code runs on a single
+CPU device for smoke tests.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, NamedTuple, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """A parameter leaf bundled with its logical axis names (one per dim).
+
+    Registered as a pytree node with ``axes`` as *static* aux data, so
+    ``jax.eval_shape`` over an init function yields Param(ShapeDtypeStruct)
+    leaves — which is how the dry-run builds abstract parameter trees.
+    """
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        return f"Param({getattr(self.value, 'shape', self.value)}, axes={self.axes})"
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """(values_tree, axes_tree) from a tree of Param leaves."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+@contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: dict):
+    """Install mesh + logical->mesh-axis rules for ``logical()`` constraints."""
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def current_rules():
+    return getattr(_CTX, "state", None)
+
+
+def spec_for(axes: tuple, rules: dict, shape=None, mesh=None) -> P:
+    """Map logical axis names to a PartitionSpec under ``rules``.
+
+    Guards:
+      * divisibility — an assignment that does not divide the dim is dropped
+        (replicated), e.g. 8 KV heads on a 16-way 'model' axis;
+      * uniqueness — a mesh axis may shard only one dim; the first logical
+        axis claiming it wins (e.g. under train SP rules logits [B, seq, V]
+        keep seq->model and drop vocab->model).
+    """
+    entries = []
+    used = set()
+    for i, name in enumerate(axes):
+        ax = rules.get(name) if name is not None else None
+        if ax is not None:
+            ax_t = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in ax_t):
+                ax = None
+            elif shape is not None and mesh is not None:
+                size = int(np.prod([mesh.shape[a] for a in ax_t]))
+                if shape[i] % size != 0:
+                    ax = None
+            if ax is not None:
+                used.update(ax_t)
+        entries.append(ax)
+    # trailing Nones are implicit
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def rule_size(name: str) -> int:
+    """Mesh-axis product a logical axis would shard over (1 if no context)."""
+    state = current_rules()
+    if state is None or state[0] is None:
+        return 1
+    mesh, rules = state
+    ax = rules.get(name)
+    if ax is None:
+        return 1
+    size = 1
+    for a in (ax if isinstance(ax, tuple) else (ax,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def logical(x, *axes):
+    """Constrain activation ``x`` to the sharding implied by logical ``axes``."""
+    state = current_rules()
+    if state is None:
+        return x
+    mesh, rules = state
+    if mesh is None:
+        return x
+    spec = spec_for(tuple(axes), rules, shape=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(axes_tree, mesh: Mesh, rules: dict, shapes_tree):
+    """NamedSharding tree for parameters given their logical axes + shapes."""
+    def one(axes, arr):
+        return NamedSharding(mesh, spec_for(tuple(axes), rules, shape=arr.shape, mesh=mesh))
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

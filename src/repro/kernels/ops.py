@@ -1,0 +1,84 @@
+"""jit'd wrapper around the Pallas flash-decode kernel: full tree-attention
+semantics = (cache sweep via kernel) ⊕ (tiny tree block) merged exactly via
+partial-softmax stats.
+
+On non-TPU backends the kernel runs in interpret mode (tests); the jnp tree
+block and the merge are backend-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tree_attention import flash_decode
+
+
+def _pick_block(S: int):
+    for bs in (512, 256, 128):
+        if S % bs == 0:
+            return bs
+    return None
+
+
+def tree_attention(q, k, v, tree_mask, lengths, scale, *,
+                   k_tree=None, v_tree=None,
+                   block_s: int | None = None, interpret: bool | None = None):
+    """q [B,T,Hq,D]; k/v [B,S,Hkv,D] (tree rows already written at
+    [lengths, lengths+T)); tree_mask [T,T] bool; lengths [B] or scalar.
+    Pass ``k_tree/v_tree`` [B,T,Hkv,D] (the in-flight tree rows) to skip the
+    gather from a potentially seq-sharded cache. Returns [B,T,Hq,D]."""
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    bs = block_s or _pick_block(S)
+    if bs is None:  # pad tiny/odd caches (tests); pads are masked by length
+        bs = 128
+        pad_s = (-S) % bs
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        S += pad_s
+
+    # fold q: [B,T,Hq,D] -> [B,Hkv,R,D], row r = g*T_pad + t
+    T_pad = T
+    while (G * T_pad) % 8:
+        T_pad += 1
+    qp = jnp.pad(q, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+    qf = qp.reshape(B, T_pad, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    qf = qf.reshape(B, Hkv, G * T_pad, D) * jnp.asarray(scale, q.dtype)
+    kt = k.transpose(0, 2, 1, 3)                            # [B,Hkv,S,D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    acc1, m1, l1 = flash_decode(qf, kt, vt, lengths, block_s=bs,
+                                interpret=interpret)        # [B,Hkv,R,D] f32
+
+    # --- tree block (tiny) --------------------------------------------------
+    if k_tree is None:
+        idx = (lengths[:, None] + jnp.arange(T))[:, :, None, None]
+        k_tree = jnp.take_along_axis(k, idx, axis=1)        # [B,T,Hkv,D]
+        v_tree = jnp.take_along_axis(v, idx, axis=1)
+    scores2 = jnp.einsum("bhrd,bthd->bhrt", qf, k_tree.astype(qf.dtype)).astype(jnp.float32)
+    # row r sees tree col t' iff tree_mask[r % T_pad, t'] (pad rows: self only)
+    row_mask = jnp.zeros((T_pad, T), bool).at[:T, :].set(tree_mask)
+    row_mask = jnp.tile(row_mask, (G, 1))                   # [R, T]
+    scores2 = jnp.where(row_mask[None, None], scores2, -1e30)
+    m2 = jnp.max(scores2, axis=-1, keepdims=True)
+    m2 = jnp.maximum(m2, -1e30)                             # pad rows: all masked
+    p2 = jnp.exp(scores2 - m2)
+    p2 = jnp.where(row_mask[None, None], p2, 0.0)
+    l2 = jnp.sum(p2, axis=-1, keepdims=True)
+    acc2 = jnp.einsum("bhrt,bthd->bhrd", p2.astype(qf.dtype),
+                      v_tree.astype(qf.dtype)).astype(jnp.float32)
+
+    # --- exact merge --------------------------------------------------------
+    m = jnp.maximum(m1, m2)
+    a1, a2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    out = (acc1 * a1 + acc2 * a2) / jnp.maximum(l1 * a1 + l2 * a2, 1e-30)
+
+    out = out.reshape(B, Hkv, G, T_pad, D).transpose(0, 3, 1, 2, 4)
+    return out[:, :T].reshape(B, T, Hq, D).astype(q.dtype)

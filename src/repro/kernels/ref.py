@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the tree-attention decode step.
+
+Semantics: query node t attends to (a) every committed cache slot
+s < lengths[b] and (b) tree slots [lengths[b], lengths[b]+T) visible under
+``tree_mask`` — exactly ``layers.decode_mask``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_mask_ref(tree_mask, lengths, S_max: int):
+    T = tree_mask.shape[0]
+    s_idx = jnp.arange(S_max)
+
+    def one(length):
+        past = s_idx[None, :] < length
+        tree_full = jnp.zeros((T, S_max), bool)
+        tree_full = jax.lax.dynamic_update_slice(tree_full, tree_mask, (0, length))
+        return past | tree_full
+
+    return jax.vmap(one)(lengths)                       # [B, T, S]
+
+
+def tree_attention_ref(q, k, v, tree_mask, lengths, scale):
+    """q [B,T,Hq,D]; k/v [B,S,Hkv,D] with tree rows already written at
+    [lengths, lengths+T).  Returns [B,T,Hq,D] in q.dtype."""
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    mask = decode_mask_ref(tree_mask, lengths, S)       # [B, T, S]
+    qg = q.reshape(B, T, Hkv, G, D)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg,
+                        k.astype(q.dtype)).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(q.dtype))
+    return out.reshape(B, T, Hq, D)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: flash-decoding attention over a KV cache with
+per-row lengths — the compute hot spot of the paper's static tree
+verification step (and of the AR baseline).
+
+TPU adaptation of the paper's fused NPU verification operator
+(DESIGN.md §6): instead of a CUDA-style dynamic kernel, the cache sweep is
+a static grid over KV blocks with an online-softmax carry held in VMEM
+scratch; per-batch ``lengths`` arrive via scalar prefetch so block skipping
+and masking are computed on-chip without any host sync.  The (tiny) tree
+block itself is handled by the wrapper in ``ops.py`` and merged with the
+partial-softmax stats this kernel emits — the merge is exact.
+
+Layout: q is folded to [B, Hkv, R, D] with R = G*T rows (G = q heads per
+kv head, T = tree size padded to a multiple of 8) so the MXU tile contracts
+[R, D] x [D, BS] with hardware-aligned D (head_dim 64/128/256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lengths_ref,                       # scalar prefetch [B]
+            q_ref, k_ref, v_ref,               # VMEM blocks
+            out_ref, m_ref, l_ref,             # outputs
+            acc_ref, m_scr, l_scr,             # scratch
+            *, block_s: int, n_s: int):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    length = lengths_ref[b]
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    s0 = s * block_s
+
+    @pl.when(s0 < length)
+    def _compute():
+        q = q_ref[0, 0]                        # [R, D]  (pre-scaled)
+        k = k_ref[0, 0]                        # [BS, D]
+        v = v_ref[0, 0]                        # [BS, D]
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # [R, BS]
+        col = s0 + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(col < length, scores, NEG_INF)
+
+        m_prev = m_scr[...]                    # [R, 1]
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)            # [R, BS]
+        l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(s == n_s - 1)
+    def _emit():
+        out_ref[0, 0] = acc_ref[...]
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+def flash_decode(q, k, v, lengths, *, block_s: int = 512,
+                 interpret: bool = False):
+    """Partial-softmax decode attention over the committed cache region.
+
+    q [B, Hkv, R, D] (pre-scaled by 1/sqrt(D)); k/v [B, Hkv, S, D];
+    lengths [B] int32.  Returns (acc [B,Hkv,R,D] f32 — un-normalised,
+    m [B,Hkv,R,1] f32, l [B,Hkv,R,1] f32).
+    """
+    B, Hkv, R, D = q.shape
+    S = k.shape[2]
+    assert S % block_s == 0, (S, block_s)
+    n_s = S // block_s
+
+    def q_map(b, h, s, lens):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, s, lens):
+        # beyond-length blocks are skipped in the body; refetch block 0 so the
+        # DMA is a cheap repeat instead of a dead fetch.
+        return (b, h, jnp.where(s * block_s < lens[b], s, 0), 0)
+
+    def o_map(b, h, s, lens):
+        return (b, h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, D), q_map),
+            pl.BlockSpec((1, 1, block_s, D), kv_map),
+            pl.BlockSpec((1, 1, block_s, D), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, R, D), o_map),
+            pl.BlockSpec((1, 1, R, 1), o_map),
+            pl.BlockSpec((1, 1, R, 1), o_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((R, D), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((B, Hkv, R, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hkv, R, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hkv, R, 1), jnp.float32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, n_s=n_s),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+    return fn(lengths, q, k, v)

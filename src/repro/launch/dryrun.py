@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, record memory_analysis / cost_analysis / HLO collective
+bytes.  This is the proof that the distribution config is coherent without
+real hardware (see DESIGN.md §8).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--delta]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+
+The FIRST TWO LINES above must stay before any other import: jax locks the
+device count at first init.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.distributed.sharding import axis_rules
+from repro.distributed import profiles
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, with_num_units
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"(\w+\[[\d,]*\])[^=]*=\s*(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)")
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(tok: str) -> int:
+    m = _TYPE_RE.fullmatch(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum result sizes of collective ops in the (per-device) HLO text.
+
+    Ops are attributed to their enclosing computation; collectives inside a
+    ``while`` body execute once per trip, so their bytes are reported
+    separately (``bytes_body``) and the roofline multiplies them by the scan
+    trip count (the HLO text prints a body once regardless of depth).
+    """
+    # map computation name -> is it a while body?
+    body_names = set(re.findall(r"body=%?([\w\.-]+)", hlo))
+    out = {}
+    current = None
+    for line in hlo.splitlines():
+        # computation definition, e.g. "%region_0.12 (arg: (f32[..])) -> ... {"
+        # (arg tuples nest parens, so match loosely)
+        mdef = re.match(r"(?:ENTRY\s+)?%?([\w\.-]+)\s*\(.*->.*\{\s*$", line)
+        if mdef:
+            current = mdef.group(1)
+        if "-start" in line:   # avoid double count with -done
+            continue
+        kind = None
+        for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute"):
+            if f" {k}(" in line or f"{k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        lhs = line.split("=", 1)
+        size = sum(_type_bytes(t.group(0))
+                   for t in _TYPE_RE.finditer(lhs[1].split(kind)[0])) if len(lhs) > 1 else 0
+        e = out.setdefault(kind, {"count": 0, "bytes": 0, "bytes_body": 0})
+        e["count"] += 1
+        e["bytes"] += size
+        if current in body_names:
+            e["bytes_body"] += size
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, n_units=None,
+             optimized=False, verbose=True):
+    cfg = get_config(arch)
+    if n_units is not None:
+        cfg = with_num_units(cfg, n_units)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = profiles.make_rules(shape.kind, multi_pod=multi_pod,
+                                fsdp=shape.kind == "train")
+    t0 = time.time()
+    with mesh:
+        with axis_rules(mesh, rules):
+            cell = build_cell(cfg, shape, mesh, multi_pod, optimized=optimized)
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "multi_pod": multi_pod, "n_units": n_units, "optimized": optimized,
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                           + mem.generated_code_size_in_bytes),
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "collectives": colls,
+        "meta": cell.meta,
+    }
+    if verbose:
+        args_gb = mem.argument_size_in_bytes / 2**30
+        temp_gb = mem.temp_size_in_bytes / 2**30
+        print(f"  OK {arch} x {shape_name} (multi_pod={multi_pod}, nu={n_units}): "
+              f"compile {t_compile:.1f}s args {args_gb:.2f}GiB temp {temp_gb:.2f}GiB "
+              f"flops/dev {rec['flops_per_device']:.3g} "
+              f"colls {sum(c['bytes'] for c in colls.values())/2**20:.1f}MiB",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="beyond-paper optimized decode variant (deferred write)")
+    ap.add_argument("--delta", action="store_true",
+                    help="also lower at 1 and 2 scanned units for per-layer "
+                         "costing (roofline; single-pod only)")
+    ap.add_argument("--out", default=None, help="write JSONL to this path")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            cfg = get_config(arch)
+            for shape in SHAPES.values():
+                ok, why = shape_applicable(cfg, shape)
+                if ok:
+                    cells.append((arch, shape.name))
+                else:
+                    print(f"  SKIP {arch} x {shape.name}: {why}", flush=True)
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    records, failures = [], []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            try:
+                records.append(run_cell(arch, shape_name, mp,
+                                        optimized=args.optimized))
+                if args.delta and not mp:
+                    for nu in (1, 2):
+                        records.append(run_cell(arch, shape_name, mp, n_units=nu,
+                                                optimized=args.optimized))
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape_name, mp, repr(e)))
+                print(f"  FAIL {arch} x {shape_name} multi_pod={mp}: {e}",
+                      flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "a") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+    print(f"\n{len(records)} compiles OK, {len(failures)} failures")
+    for f_ in failures:
+        print("  FAILED:", f_)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

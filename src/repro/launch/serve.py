@@ -1,0 +1,59 @@
+"""Serving launcher: continuous-batching Medusa server on a reduced model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch openpangu-7b \
+      --requests 16 --slots 4 --max-new 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ALL_ARCHS, get_config
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine
+from repro.core.tree import chain_tree, medusa_63
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+from repro.serving.scheduler import MedusaServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="openpangu-7b", choices=ALL_ARCHS)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=512)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    tb = chain_tree(4) if cfg.spec_mode == "chain" else medusa_63()
+    eng = SpecEngine(cfg, tb)
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, tb.K))
+
+    srv = MedusaServer(eng, params, mp, batch_slots=args.slots,
+                       max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    rids = [srv.submit(rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(4, 48))).astype(np.int32),
+                       max_new=args.max_new)
+            for _ in range(args.requests)]
+    iters = srv.run()
+    dt = time.time() - t0
+    done = [srv.result(r) for r in rids]
+    toks = sum(len(r.output) for r in done if r.status == "done")
+    print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({iters} scheduler iterations, {toks/dt:.1f} tok/s on CPU)")
+    for r in done[:4]:
+        print(f"  req {r.rid}: {r.status} steps={r.steps} "
+              f"tokens/step={len(r.output)/max(r.steps,1):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""Per-cell dry-run specs: abstract inputs + the step function + shardings
+for every (architecture x input-shape x kind) combination.
+
+Everything here is ShapeDtypeStruct-based — no device allocation; the same
+builders feed ``dryrun.py`` (lower+compile) and the roofline benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine
+from repro.core.tree import chain_tree, default_tree, medusa_63
+from repro.distributed import profiles
+from repro.distributed.sharding import spec_for, split_params
+from repro.models.api import get_model
+from repro.models.frontends import frontend_shape
+from repro.training import optimizer as O
+from repro.training import steps as ST
+
+MEDUSA_K = 4
+
+
+class CellSpec(NamedTuple):
+    fn: Any                    # pure step function
+    args: tuple                # ShapeDtypeStruct pytree args
+    in_shardings: tuple
+    donate: tuple              # argnums to donate
+    meta: dict
+
+
+def abstract_params(cfg: ModelConfig, dtype: str):
+    model = get_model(cfg)
+    tree = jax.eval_shape(lambda k: model.init_params(k, cfg, dtype=dtype),
+                          jax.random.PRNGKey(0))
+    return split_params(tree)
+
+
+def abstract_medusa(cfg: ModelConfig, dtype: str):
+    tree = jax.eval_shape(lambda k: M.init_medusa(k, cfg, MEDUSA_K, dtype=dtype),
+                          jax.random.PRNGKey(0))
+    return split_params(tree)
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _param_shardings(axes_tree, sds_tree, mesh, rules):
+    def one(axes, arr):
+        return NamedSharding(mesh, spec_for(tuple(axes), rules,
+                                            shape=arr.shape, mesh=mesh))
+    return jax.tree.map(one, axes_tree, sds_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def _act(shape, axes, mesh, rules, dtype=jnp.int32):
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    sh = NamedSharding(mesh, spec_for(tuple(axes), rules, shape=shape, mesh=mesh))
+    return sds, sh
+
+
+def spec_tree(cfg: ModelConfig):
+    return default_tree(cfg.spec_mode, K=MEDUSA_K)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               multi_pod: bool, *, fsdp: bool | None = None,
+               rules_override: dict | None = None,
+               optimized: bool = False) -> CellSpec:
+    kind = shape.kind
+    if fsdp is None:
+        fsdp = kind == "train"        # FSDP master weights for training
+    rules = rules_override or profiles.make_rules(kind, multi_pod=multi_pod,
+                                                  fsdp=fsdp)
+    ba = tuple(a for a in profiles.batch_axes(multi_pod))
+    model = get_model(cfg)
+    B = shape.global_batch
+
+    if kind == "train":
+        # bf16 master+optimizer for very large models (DESIGN.md §7)
+        pdtype = "bfloat16" if _param_bytes_estimate(cfg) > 60e9 else "float32"
+        params, axes = abstract_params(cfg, pdtype)
+        opt = jax.eval_shape(O.adamw_init, params)
+        psh = _param_shardings(axes, params, mesh, rules)
+        osh = O.AdamWState(step=NamedSharding(mesh, P()), mu=psh, nu=psh)
+        tok_sds, tok_sh = _act((B, shape.seq_len), ("batch", None), mesh, rules)
+        args = [params, opt, tok_sds, tok_sds]
+        shardings = [psh, osh, tok_sh, tok_sh]
+        fe = frontend_shape(cfg, B)
+        if fe is not None:
+            fe_sds, fe_sh = _act(fe, ("batch", None, None), mesh, rules,
+                                 dtype=jnp.bfloat16)
+            args.append(fe_sds)
+            shardings.append(fe_sh)
+
+        def fn(params, opt, tokens, targets, *extra):
+            ee = extra[0] if extra else None
+            return ST.lm_train_step(params, opt, cfg, tokens, targets,
+                                    extra_embeds=ee)
+
+        return CellSpec(fn, tuple(args), tuple(shardings), (0, 1),
+                        {"kind": kind, "param_dtype": pdtype, "fsdp": fsdp})
+
+    # ---- inference cells: bf16 weights ------------------------------------
+    params, axes = abstract_params(cfg, "bfloat16")
+    mp, maxes = abstract_medusa(cfg, "bfloat16")
+    psh = _param_shardings(axes, params, mesh, rules)
+    msh = _param_shardings(maxes, mp, mesh, rules)
+    tb = spec_tree(cfg)
+    eng = SpecEngine(cfg, tb, deferred=optimized)
+
+    if kind == "prefill":
+        S_cache = shape.seq_len
+        cache = model.init_cache(cfg, B, S_cache, abstract=True)
+        csh = _named(profiles.cache_pspecs(cache, cfg, shape, mesh, multi_pod), mesh)
+        tok_sds, tok_sh = _act((B, shape.seq_len), ("batch", None), mesh, rules)
+        len_sds, len_sh = _act((B,), ("batch",), mesh, rules)
+        args = [params, mp, tok_sds, len_sds, cache]
+        shardings = [psh, msh, tok_sh, len_sh, csh]
+        fe = frontend_shape(cfg, B)
+        if fe is not None and cfg.family == "encdec":
+            fe_sds, fe_sh = _act(fe, ("batch", None, None), mesh, rules, jnp.bfloat16)
+            args.append(fe_sds)
+            shardings.append(fe_sh)
+
+            def fn(params, mp, tokens, lengths, cache, frames):
+                return eng.prefill(params, mp, tokens, lengths, cache,
+                                   extra_embeds=frames)
+        elif fe is not None:
+            # vlm/audio decoder-only: frontend prefix + (seq - prefix) tokens
+            n_tok = shape.seq_len - cfg.frontend_len
+            tok_sds = jax.ShapeDtypeStruct((B, n_tok), jnp.int32)
+            args[2] = tok_sds
+            fe_sds, fe_sh = _act(fe, ("batch", None, None), mesh, rules, jnp.bfloat16)
+            args.append(fe_sds)
+            shardings.append(fe_sh)
+
+            def fn(params, mp, tokens, lengths, cache, frames):
+                return eng.prefill(params, mp, tokens, lengths, cache,
+                                   extra_embeds=frames)
+        else:
+            def fn(params, mp, tokens, lengths, cache):
+                return eng.prefill(params, mp, tokens, lengths, cache)
+
+        return CellSpec(fn, tuple(args), tuple(shardings), (4,),
+                        {"kind": kind, "tree_T": tb.T})
+
+    # ---- decode: the paper's static speculative step ----------------------
+    S_cache = shape.seq_len
+    cache = model.init_cache(cfg, B, S_cache, abstract=True)
+    csh = _named(profiles.cache_pspecs(cache, cfg, shape, mesh, multi_pod), mesh)
+    len_sds, len_sh = _act((B,), ("batch",), mesh, rules)
+    base_sds, base_sh = _act((B,), ("batch",), mesh, rules)
+    mtok_sds, mtok_sh = _act((B, MEDUSA_K, tb.max_topk), ("batch", None, None),
+                             mesh, rules)
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    key_sh = NamedSharding(mesh, P())
+
+    def fn(params, mp, cache, lengths, base, mtok, key):
+        return eng.spec_step(params, mp, cache, lengths, base, mtok, key)
+
+    args = (params, mp, cache, len_sds, base_sds, mtok_sds, key_sds)
+    shardings = (psh, msh, csh, len_sh, base_sh, mtok_sh, key_sh)
+    return CellSpec(fn, args, shardings, (2,),
+                    {"kind": kind, "tree_T": tb.T, "spec_mode": cfg.spec_mode,
+                     "optimized": optimized})
+
+
+def _param_bytes_estimate(cfg: ModelConfig) -> float:
+    """Rough non-embedding parameter count * 4 bytes (f32)."""
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.num_layers
+    n = 0.0
+    for i in range(L):
+        if cfg.layer_kind(i) == "attn":
+            hd = cfg.resolved_head_dim
+            n += d * hd * (cfg.num_heads + 2 * cfg.num_kv_heads) + cfg.num_heads * hd * d
+        else:
+            n += 2 * d * cfg.d_inner + cfg.d_inner * d
+        if cfg.ffn_kind(i) == "moe":
+            n += cfg.num_experts * 3 * d * f
+        elif cfg.ffn_kind(i) == "dense":
+            n += (3 if cfg.gated_mlp else 2) * d * f
+    n += 2 * cfg.vocab_size * d
+    return n * 4
+
+
+def with_num_units(cfg: ModelConfig, n: int) -> ModelConfig:
+    """Same arch with n scanned units (delta-costing for while-loop bodies)."""
+    from repro.models.transformer import unit_structure
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, num_layers=n, encoder_layers=n)
+    u = len(unit_structure(cfg))
+    return dataclasses.replace(cfg, num_layers=n * u)

@@ -1,0 +1,11 @@
+"""Uniform model API: dispatch on config family.
+
+Every family module exposes: init_params, forward_train, init_cache,
+prefill, decode, commit, unembed, stacked_axes_fixup, embed_tokens.
+"""
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+def get_model(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else transformer

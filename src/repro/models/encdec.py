@@ -1,0 +1,217 @@
+"""Whisper-style encoder-decoder. The conv/audio frontend is a stub
+(``input_specs`` supplies precomputed frame embeddings, per the assignment);
+the decoder supports the same static tree-decode + zero-copy commit contract
+as the decoder-only stack, with cross-attention reading a fixed encoder KV.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import (_update_rows, tree_stack)
+from repro.distributed.sharding import Param, logical
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {"norm1": L.init_norm(ks[0], cfg), "attn": L.init_attention(ks[1], cfg),
+            "norm2": L.init_norm(ks[2], cfg), "mlp": L.init_mlp(ks[3], cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {"norm1": L.init_norm(ks[0], cfg), "self_attn": L.init_attention(ks[1], cfg),
+            "norm_x": L.init_norm(ks[2], cfg), "cross_attn": L.init_attention(ks[3], cfg),
+            "norm2": L.init_norm(ks[4], cfg), "mlp": L.init_mlp(ks[5], cfg)}
+
+
+def init_params(key, cfg: ModelConfig, dtype=None):
+    if dtype is not None:
+        cfg = __import__("dataclasses").replace(cfg, param_dtype=dtype)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, cfg.encoder_layers + cfg.num_layers + 8)
+    i = 0
+    enc = [_init_enc_layer(ks[i + j], cfg) for j in range(cfg.encoder_layers)]
+    i += cfg.encoder_layers
+    dec = [_init_dec_layer(ks[i + j], cfg) for j in range(cfg.num_layers)]
+    i += cfg.num_layers
+    fd = cfg.frontend_dim or cfg.d_model
+    return {
+        "embed": L.dense_init(ks[i], (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              dt, scale=0.02),
+        "pos_enc": L.dense_init(ks[i + 1], (cfg.frontend_len, cfg.d_model),
+                                (None, "embed"), dt, scale=0.02),
+        "pos_dec": L.dense_init(ks[i + 2], (cfg.max_position, cfg.d_model),
+                                (None, "embed"), dt, scale=0.02),
+        "frontend_proj": L.dense_init(ks[i + 3], (fd, cfg.d_model), (None, "embed"), dt),
+        "enc_units": tree_stack(enc),
+        "enc_final": L.init_norm(ks[i + 4], cfg),
+        "dec_units": tree_stack(dec),
+        "final_norm": L.init_norm(ks[i + 5], cfg),
+        "lm_head": L.dense_init(ks[i + 6], (cfg.d_model, cfg.vocab_size),
+                                ("embed", "vocab"), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames [B, F, frontend_dim] (stub output) -> enc_out [B, F, d]."""
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.einsum("bfe,ed->bfd", frames.astype(dt), params["frontend_proj"].astype(dt))
+    x = x + params["pos_enc"].astype(dt)[None]
+    x = logical(x, "batch", "seq", "act_embed")
+
+    def body(h, unit_p):
+        hh = L.apply_norm(unit_p["norm1"], h, cfg)
+        h = h + L.attention_full(unit_p["attn"], hh, cfg, causal=False)
+        hh = L.apply_norm(unit_p["norm2"], h, cfg)
+        h = h + L.mlp(unit_p["mlp"], hh, cfg)
+        return logical(h, "batch", "seq", "act_embed"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_units"])
+    return L.apply_norm(params["enc_final"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# decoder — train / prefill / decode / commit
+# ---------------------------------------------------------------------------
+
+def _dec_embed(params, cfg, tokens, positions):
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    pos = jnp.take(params["pos_dec"].astype(dt), positions, axis=0)
+    return x + pos
+
+
+def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None, remat=True):
+    """Teacher-forcing decoder over [B, S] with cross-attn to encoded frames."""
+    B, Sd = tokens.shape
+    enc_out = encode(params, cfg, extra_embeds)
+    x = _dec_embed(params, cfg, tokens, jnp.arange(Sd)[None, :])
+
+    def body(h, unit_p):
+        hh = L.apply_norm(unit_p["norm1"], h, cfg)
+        h = h + L.attention_full(unit_p["self_attn"], hh, cfg)
+        hh = L.apply_norm(unit_p["norm_x"], h, cfg)
+        kv = L.cross_kv(unit_p["cross_attn"], enc_out, cfg)
+        h = h + L.attention_cross(unit_p["cross_attn"], hh, kv, cfg)
+        hh = L.apply_norm(unit_p["norm2"], h, cfg)
+        h = h + L.mlp(unit_p["mlp"], hh, cfg)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_units"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
+               abstract: bool = False):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    nu, hd = cfg.num_layers, cfg.resolved_head_dim
+    mk = (jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d)))
+    return {
+        "self": {"k": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt),
+                 "v": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt)},
+        "cross": {"k": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), dt),
+                  "v": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), dt)},
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None):
+    B, Sp = tokens.shape
+    enc_out = encode(params, cfg, extra_embeds)
+    x = _dec_embed(params, cfg, tokens, jnp.arange(Sp)[None, :])
+
+    def body(h, xs):
+        unit_p, cache_u = xs
+        hh = L.apply_norm(unit_p["norm1"], h, cfg)
+        y, (k, v) = L.attention_full(unit_p["self_attn"], hh, cfg, return_kv=True)
+        ck = jax.lax.dynamic_update_slice(cache_u["self"]["k"], k.astype(cache_u["self"]["k"].dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache_u["self"]["v"], v.astype(ck.dtype), (0, 0, 0, 0))
+        h = h + y
+        hh = L.apply_norm(unit_p["norm_x"], h, cfg)
+        xk, xv = L.cross_kv(unit_p["cross_attn"], enc_out, cfg)
+        h = h + L.attention_cross(unit_p["cross_attn"], hh, (xk, xv), cfg)
+        hh = L.apply_norm(unit_p["norm2"], h, cfg)
+        h = h + L.mlp(unit_p["mlp"], hh, cfg)
+        new_cache = {"self": {"k": ck, "v": cv},
+                     "cross": {"k": xk.astype(ck.dtype), "v": xv.astype(ck.dtype)}}
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_units"], cache))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)[:, 0]
+    return last, new_cache
+
+
+def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
+           use_kernel: bool = False, deferred: bool = False):
+    del deferred  # enc-dec keeps the write-then-attend path (tiny caches)
+    B, T = tokens.shape
+    S_max = cache["self"]["k"].shape[2]
+    positions = lengths[:, None] + depths[None, :]
+    x = _dec_embed(params, cfg, tokens, positions)
+    masks = None
+    if not use_kernel:
+        masks = jax.vmap(lambda l: L.decode_mask(tree_mask, l, T, S_max))(lengths)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+
+    def body(h, xs):
+        unit_p, cache_u = xs
+        hh = L.apply_norm(unit_p["norm1"], h, cfg)
+        p = unit_p["self_attn"]
+        q, k, v = L._project_qkv(p, hh, cfg)
+        ck = _update_rows(cache_u["self"]["k"], k, lengths)
+        cv = _update_rows(cache_u["self"]["v"], v, lengths)
+        if use_kernel:
+            from repro.kernels.ops import tree_attention
+            out = tree_attention(q, ck, cv, tree_mask, lengths, scale)
+        else:
+            out = L._gqa_scores_to_out(q, ck.astype(q.dtype), cv.astype(q.dtype), masks, scale)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(h.dtype))
+        hh = L.apply_norm(unit_p["norm_x"], h, cfg)
+        h = h + L.attention_cross(unit_p["cross_attn"], hh,
+                                  (cache_u["cross"]["k"].astype(h.dtype),
+                                   cache_u["cross"]["v"].astype(h.dtype)), cfg)
+        hh = L.apply_norm(unit_p["norm2"], h, cfg)
+        h = h + L.mlp(unit_p["mlp"], hh, cfg)
+        return h, {"self": {"k": ck, "v": cv, "k_new": k, "v_new": v},
+                   "cross": cache_u["cross"]}
+
+    x, spec_cache = jax.lax.scan(body, x, (params["dec_units"], cache))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return x, spec_cache
+
+
+def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc):
+    def fix(c, c_new):  # c [nu,B,S,H,D]; c_new [nu,B,T,H,D]
+        idx = path_slots[None, :, :, None, None]
+        rows = jnp.take_along_axis(c_new, idx, axis=2)
+        return jax.vmap(_update_rows, in_axes=(0, 0, None))(c, rows, lengths)
+
+    new_cache = {"self": {"k": fix(spec_cache["self"]["k"], spec_cache["self"]["k_new"]),
+                          "v": fix(spec_cache["self"]["v"], spec_cache["self"]["v_new"])},
+                 "cross": spec_cache["cross"]}
+    return new_cache, lengths + acc
+
+
+def embed_tokens(params, cfg, tokens):
+    return jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+
+
+def unembed(params, cfg: ModelConfig, hidden):
+    return jnp.einsum("...d,dv->...v", hidden, params["lm_head"].astype(hidden.dtype))

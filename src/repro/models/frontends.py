@@ -1,0 +1,27 @@
+"""Modality frontend STUBS (per the assignment: [audio]/[vlm] entries specify
+the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings)."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_shape(cfg: ModelConfig, batch: int):
+    if not cfg.frontend:
+        return None
+    return (batch, cfg.frontend_len, cfg.frontend_dim or cfg.d_model)
+
+
+def frontend_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    shape = frontend_shape(cfg, batch)
+    return None if shape is None else jax.ShapeDtypeStruct(shape, dtype)
+
+
+def frontend_embeds(cfg: ModelConfig, batch: int, key=None):
+    """Random stand-in embeddings (what a real ViT/conv stack would emit)."""
+    shape = frontend_shape(cfg, batch)
+    if shape is None:
+        return None
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.random.normal(key, shape, jnp.dtype(cfg.dtype)) * 0.02

@@ -1,0 +1,442 @@
+"""Core transformer layers: norms, RoPE, GQA/MQA attention (train + cached
+tree-decode), gated/plain MLPs, and GShard-style static MoE.
+
+All functions are pure; params are pytrees built with ``sharding.Param``
+wrappers carrying logical axis names.  Activation tensors are annotated with
+``logical()`` so the same code runs unsharded on CPU and sharded under
+``axis_rules`` on a production mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Param, logical
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, axes, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    if len(shape) == 3:  # stacked experts [E, d, f]
+        fan_in = shape[1]
+    scale = (1.0 / math.sqrt(fan_in)) if scale is None else scale
+    return Param(jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype), axes)
+
+
+def zeros_init(shape, axes, dtype):
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype):
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(key, cfg: ModelConfig, dim=None):
+    dim = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": ones_init((dim,), ("norm",), jnp.float32),
+                "b": zeros_init((dim,), ("norm",), jnp.float32)}
+    return {"w": ones_init((dim,), ("norm",), jnp.float32)}
+
+
+def apply_norm(params, x, cfg: ModelConfig):
+    if "b" in params:
+        return layer_norm(x, params["w"], params["b"])
+    return rms_norm(x, params["w"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions [...,] int32 -> cos/sin [..., head_dim//2] float32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin broadcastable [..., S, 1, D/2] (half-rotation)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    dt = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, hq, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": dense_init(ks[1], (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": dense_init(ks[2], (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": dense_init(ks[3], (hq, hd, d), ("heads", "head_dim", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((hq, hd), ("heads", "head_dim"), dt)
+        p["bk"] = zeros_init((hkv, hd), ("kv_heads", "head_dim"), dt)
+        p["bv"] = zeros_init((hkv, hd), ("kv_heads", "head_dim"), dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _gqa_scores_to_out(q, k, v, mask, scale):
+    """q [B,T,Hq,D], k/v [B,S,Hkv,D], mask [B? ,T,S] bool or None (full)."""
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, G, D)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None]
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v)
+    return out.reshape(B, T, Hq, D)
+
+
+def _blockwise_causal(q, k, v, scale, block: int):
+    """Memory-lean causal attention: lax.map over query blocks.
+
+    scores memory per step: [B, H, block, S] instead of [B, H, S, S].
+    """
+    B, S, Hq, D = q.shape
+    nblk = S // block
+    q_blocks = q.reshape(B, nblk, block, Hq, D).transpose(1, 0, 2, 3, 4)
+    s_idx = jnp.arange(S)
+
+    def one(args):
+        qb, start = args
+        t_idx = start + jnp.arange(block)
+        mask = s_idx[None, :] <= t_idx[:, None]          # [block, S]
+        return _gqa_scores_to_out(qb, k, v, mask[None], scale)
+
+    starts = jnp.arange(nblk) * block
+    outs = jax.lax.map(one, (q_blocks, starts))          # [nblk, B, block, Hq, D]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, D)
+
+
+def attention_full(p, x, cfg: ModelConfig, positions=None, causal=True,
+                   return_kv=False, block_threshold: int = 8192):
+    """Full-sequence attention (train / prefill / encoder)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, cfg)
+    if cfg.use_rope:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # heads-first TP; when heads don't divide the model axis (e.g. qwen's
+    # 20-head MHA on a 16-way mesh) fall back to sharding the q-seq dim so
+    # the S x S score tensor still partitions (§Perf hillclimb 3).
+    from repro.distributed.sharding import rule_size
+    heads_ok = cfg.num_heads % max(rule_size("act_heads"), 1) == 0
+    if heads_ok:
+        q = logical(q, "batch", None, "act_heads", None)
+        k = logical(k, "batch", None, "act_kv", None)
+        v = logical(v, "batch", None, "act_kv", None)
+    else:
+        q = logical(q, "batch", "seq", None, None)
+        k = logical(k, "batch", None, None, None)
+        v = logical(v, "batch", None, None, None)
+    scale = 1.0 / math.sqrt(hd)
+    if causal and S > block_threshold and S % 1024 == 0:
+        out = _blockwise_causal(q, k, v, scale, block=1024)
+    else:
+        mask = None
+        if causal:
+            idx = jnp.arange(S)
+            mask = (idx[None, :] <= idx[:, None])[None]
+        out = _gqa_scores_to_out(q, k, v, mask, scale)
+    out = (logical(out, "batch", None, "act_heads", None) if heads_ok
+           else logical(out, "batch", "seq", None, None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = logical(y, "batch", "seq", "act_embed")
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_cross(p, x, enc_kv, cfg: ModelConfig):
+    """Cross-attention against precomputed encoder K/V (no mask)."""
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    out = _gqa_scores_to_out(q, k, v, None, scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def decode_mask(tree_mask, length, T: int, S_max: int):
+    """Static visibility mask for a tree-decode step.
+
+    tree_mask [T, T] bool (paper's ``medusa_attn_mask``), ``length`` scalar:
+    key slot s visible if s < length (committed past) or, for
+    length <= s < length+T, per the tree topology.  Returns [T, S_max] bool.
+    """
+    s_idx = jnp.arange(S_max)
+    past = (s_idx[None, :] < length)
+    rel = s_idx - length                                   # [S]
+    within = (rel >= 0) & (rel < T)
+    relc = jnp.clip(rel, 0, T - 1)
+    tree_vals = jnp.take_along_axis(
+        tree_mask, jnp.broadcast_to(relc[None, :], (T, S_max)), axis=1)
+    return past | (within[None, :] & tree_vals)
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache_k, cache_v, length,
+                     tree_mask, depths, use_kernel: bool = False):
+    """Cached tree-decode attention step (the paper's static verification op).
+
+    x [B, T, d]; cache_k/v [B, S_max, Hkv, D]; tree rows are written at
+    slots [length, length+T) — shapes are static regardless of acceptance.
+    """
+    B, T, _ = x.shape
+    S_max = cache_k.shape[1]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, cfg)
+    if cfg.use_rope:
+        positions = (length + depths)[None, :]           # [1, T]
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, length, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, length, 0, 0))
+    scale = 1.0 / math.sqrt(hd)
+    if use_kernel:
+        from repro.kernels.ops import tree_attention
+        out = tree_attention(q, cache_k, cache_v, tree_mask,
+                             jnp.full((B,), length, jnp.int32), scale)
+    else:
+        mask = decode_mask(tree_mask, length, T, S_max)[None]
+        out = _gqa_scores_to_out(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask, scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+def gqa_two_part(q, cache_k, cache_v, k_new, v_new, lengths, tree_mask, scale):
+    """Deferred-write tree attention (beyond-paper §Perf optimization).
+
+    Exact two-part online-softmax merge: (a) sweep the committed cache with
+    a col<length mask (stale rows masked, cache NOT written this step) and
+    (b) the in-flight tree block from k_new/v_new.  Removes one full
+    read+write pass over the KV cache per layer per step relative to the
+    write-then-attend formulation; the only cache write left is commit's.
+    """
+    B, T, Hq, D = q.shape
+    S, Hkv = cache_k.shape[1], cache_k.shape[2]
+    G = Hq // Hkv
+    qg = (q.reshape(B, T, Hkv, G, D) * jnp.asarray(scale, q.dtype))
+    # part 1: committed past
+    s1 = jnp.einsum("bthgd,bshd->bhgts", qg, cache_k.astype(q.dtype)).astype(jnp.float32)
+    past = (jnp.arange(S)[None, :] < lengths[:, None])       # [B, S]
+    s1 = jnp.where(past[:, None, None, None], s1, -1e30)
+    m1 = jnp.max(s1, axis=-1, keepdims=True)
+    p1 = jnp.exp(s1 - m1)
+    p1 = jnp.where(past[:, None, None, None], p1, 0.0)
+    l1 = jnp.sum(p1, axis=-1, keepdims=True)
+    a1 = jnp.einsum("bhgts,bshd->bhgtd", p1.astype(q.dtype), cache_v.astype(q.dtype))
+    # part 2: in-flight tree rows
+    s2 = jnp.einsum("bthgd,bshd->bhgts", qg, k_new.astype(q.dtype)).astype(jnp.float32)
+    s2 = jnp.where(tree_mask[None, None, None], s2, -1e30)
+    m2 = jnp.max(s2, axis=-1, keepdims=True)
+    p2 = jnp.exp(s2 - m2)
+    p2 = jnp.where(tree_mask[None, None, None], p2, 0.0)
+    l2 = jnp.sum(p2, axis=-1, keepdims=True)
+    a2 = jnp.einsum("bhgts,bshd->bhgtd", p2.astype(q.dtype), v_new.astype(q.dtype))
+    # exact merge
+    m = jnp.maximum(m1, m2)
+    w1, w2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    out = (a1.astype(jnp.float32) * w1[..., 0][..., None]
+           + a2.astype(jnp.float32) * w2[..., 0][..., None])
+    denom = jnp.maximum(l1 * w1 + l2 * w2, 1e-30)[..., 0][..., None]
+    out = (out / denom).astype(q.dtype)                      # [B,Hkv,G,T,D]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, f), ("embed", "ff"), dt),
+         "wo": dense_init(ks[1], (f, d), ("ff", "embed"), dt)}
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[2], (d, f), ("embed", "ff"), dt)
+    return p
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def mlp(p, x, cfg: ModelConfig):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = h * _act(g, cfg.act)
+    else:
+        h = _act(h, cfg.act)
+    h = logical(h, "batch", None, "act_ff")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+    return logical(y, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard-style static top-k dispatch; experts shard over the EP axis)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), ("embed", None), jnp.float32),
+        "wi": dense_init(ks[1], (e, d, f), ("experts", "embed", "ff"), dt),
+        "wg": dense_init(ks[2], (e, d, f), ("experts", "embed", "ff"), dt),
+        "wo": dense_init(ks[3], (e, f, d), ("experts", "ff", "embed"), dt),
+    }
+
+
+def _capacity(group_size: int, k: int, e: int, cf: float) -> int:
+    c = int(math.ceil(group_size * k / e * cf))
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor 8
+
+
+def moe(p, x, cfg: ModelConfig, group_size: int = 512):
+    """Static-shape top-k MoE with one-hot dispatch/combine einsums.
+
+    Tokens are bucketed into fixed-capacity expert slots; overflow drops
+    (capacity_factor bounds the drop rate).  The dispatch einsum with
+    'experts' sharded over the EP axis lowers to an all-to-all under SPMD.
+    """
+    B, S, d = x.shape
+    E, K, C_f = cfg.num_experts, cfg.experts_per_tok, cfg.capacity_factor
+    n_tok = B * S
+    g_sz = min(group_size, n_tok)
+    pad = (-n_tok) % g_sz
+    xf = x.reshape(n_tok, d)
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)], axis=0)
+    G = xf.shape[0] // g_sz
+    xg = xf.reshape(G, g_sz, d)
+    xg = logical(xg, "batch", None, "act_embed")
+
+    router_logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                               p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, K)             # [G, s, K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(g_sz, K, E, C_f)
+    oh = jax.nn.one_hot(eids, E, dtype=jnp.int32)         # [G, s, K, E]
+    ohf = oh.reshape(G, g_sz * K, E)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                   # queue position per expert
+    pos = pos.reshape(G, g_sz, K, E)
+
+    # combine kept in activation dtype: its f32 form was the largest
+    # all-gathered tensor in the MoE backward (§Perf hillclimb 2, iter 3)
+    dispatch = jnp.zeros((G, g_sz, E, C), dtype=x.dtype)
+    combine = jnp.zeros((G, g_sz, E, C), dtype=x.dtype)
+    for slot in range(K):                                 # K is small & static
+        slot_pos = jnp.sum(pos[:, :, slot] * oh[:, :, slot], axis=-1)   # [G, s]
+        in_cap = slot_pos < C
+        d_slot = (jax.nn.one_hot(eids[:, :, slot], E, dtype=x.dtype)[..., None]
+                  * jax.nn.one_hot(slot_pos, C, dtype=x.dtype)[:, :, None, :]
+                  * in_cap[..., None, None].astype(x.dtype))
+        # the mask is piecewise-constant: stop_gradient prunes its (zero)
+        # cotangent path, which otherwise all-gathers [G,s,E,C]-sized
+        # tensors in the backward (§Perf hillclimb 2, iter 4)
+        d_slot = jax.lax.stop_gradient(d_slot)
+        dispatch = dispatch + d_slot
+        combine = combine + d_slot * gate_vals[:, :, slot, None, None].astype(x.dtype)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    expert_in = logical(expert_in, "act_experts", "act_moe_g", None, None)
+    wi, wg, wo = (p[n].astype(x.dtype) for n in ("wi", "wg", "wo"))
+    h = jnp.einsum("egcd,edf->egcf", expert_in, wi)
+    h = h * _act(jnp.einsum("egcd,edf->egcf", expert_in, wg), cfg.act)
+    h = logical(h, "act_experts", "act_moe_g", None, "act_ff")
+    eo = jnp.einsum("egcf,efd->egcd", h, wo)
+    eo = logical(eo, "act_experts", "act_moe_g", None, None)
+    yg = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), eo)
+    yf = yg.reshape(-1, d)
+    if pad:
+        yf = yf[:n_tok]
+    y = yf.reshape(B, S, d)
+    return logical(y, "batch", "seq", "act_embed"), router_logits
+
+
+def moe_aux_loss(router_logits, eids_unused=None):
+    """Load-balance auxiliary loss (Switch-style): E * sum(f_e * p_e)."""
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    # fraction routed (by top-1) and mean prob per expert
+    top1 = jnp.argmax(probs, axis=-1)
+    E = probs.shape[-1]
+    f = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=(0, 1))
+    pbar = jnp.mean(probs, axis=(0, 1))
+    return E * jnp.sum(f * pbar)

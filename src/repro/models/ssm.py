@@ -1,0 +1,212 @@
+"""Mamba2 (SSD — state-space duality) mixer, pure JAX.
+
+Train/prefill use the chunked SSD algorithm (quadratic intra-chunk attention
+dual + inter-chunk state recurrence via ``lax.scan``); decode uses the linear
+recurrence.  ``decode`` processes T tokens (the speculative CHAIN) in one
+call and returns per-prefix states so the engine can commit exactly the
+accepted number of tokens without re-running the backbone — the SSM analogue
+of the paper's zero-copy KV compaction.
+
+TP layout: the fused Mamba in_proj is split into separately shardable
+projections (z/x over ``ssm_inner``→model, dt over ``ssm_heads``→model,
+B/C replicated — ngroups=1 broadcasts them to every head anyway), so the
+SSD head dimension shards over the model axis exactly like attention heads,
+and ``out_proj`` is row-parallel (psum at the output, Megatron-style).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import Param, logical
+from repro.models.layers import dense_init, ones_init, rms_norm
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    N, H, W = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 9)
+    dt = jnp.dtype(cfg.param_dtype)
+    # inverse-softplus of dt in [1e-3, 1e-1]
+    u = jax.random.uniform(ks[0], (H,), jnp.float32,
+                           math.log(1e-3), math.log(1e-1))
+    dt_init = jnp.exp(u)
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "wz": dense_init(ks[1], (d, d_in), ("embed", "ssm_inner"), dt),
+        "wx": dense_init(ks[2], (d, d_in), ("embed", "ssm_inner"), dt),
+        "wB": dense_init(ks[3], (d, N), ("embed", None), dt),
+        "wC": dense_init(ks[4], (d, N), ("embed", None), dt),
+        "wdt": dense_init(ks[5], (d, H), ("embed", "ssm_heads"), dt),
+        "conv_x": dense_init(ks[6], (d_in, W), ("ssm_inner", None), dt,
+                             scale=1.0 / math.sqrt(W)),
+        "conv_x_b": Param(jnp.zeros((d_in,), dt), ("ssm_inner",)),
+        "conv_bc": dense_init(ks[7], (2 * N, W), (None, None), dt,
+                              scale=1.0 / math.sqrt(W)),
+        "conv_bc_b": Param(jnp.zeros((2 * N,), dt), (None,)),
+        "A_log": Param(jnp.log(jax.random.uniform(ks[8], (H,), jnp.float32, 1.0, 16.0)),
+                       ("ssm_heads",)),
+        "dt_bias": Param(dt_bias.astype(jnp.float32), ("ssm_heads",)),
+        "D": Param(jnp.ones((H,), jnp.float32), ("ssm_heads",)),
+        "norm_w": ones_init((d_in,), ("ssm_inner",), jnp.float32),
+        "out_proj": dense_init(ks[0], (d_in, d), ("ssm_inner", "embed"), dt),
+    }
+
+
+def _causal_conv(x, w, b, W: int):
+    """Depthwise causal conv via W static shifts. x [B,S,C], w [C,W]."""
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x)
+    S = x.shape[1]
+    for i in range(W):
+        y = y + pads[:, i: i + S, :] * w[:, i]
+    return jax.nn.silu(y + b)
+
+
+def _project(p, x):
+    """x [B,S,d] -> (z, x_raw, bc_raw, dt_raw)."""
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"].astype(x.dtype))
+    xr = jnp.einsum("bsd,di->bsi", x, p["wx"].astype(x.dtype))
+    bc = jnp.einsum("bsd,dn->bsn", x,
+                    jnp.concatenate([p["wB"], p["wC"]], axis=1).astype(x.dtype))
+    dtr = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+    return z, xr, bc, dtr
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD. x [B,S,H,P], dt [B,S,H] (post-softplus), A [H] (negative),
+    Bm/Cm [B,S,N].  Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:  # dt=0 on pads => decay 1, zero update: state passes through
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_p = S + pad
+    nc = S_p // Q
+    f32 = jnp.float32
+    xc = x.reshape(B_, nc, Q, H, P)
+    dtc = dt.reshape(B_, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(B_, nc, Q, N).astype(f32)
+
+    dA = dtc * A                                           # [B,nc,Q,H]
+    cs = jnp.cumsum(dA, axis=2)
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]      # [B,nc,Q(q),Q(t),H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    scores = jnp.einsum("bcqn,bctn->bcqt", Cc, Bc)
+    M = scores[..., None] * L                              # [B,nc,Q,Q,H]
+    xdt = xc.astype(f32) * dtc[..., None]                  # [B,nc,Q,H,P]
+    y_diag = jnp.einsum("bcqth,bcthp->bcqhp", M, xdt)
+
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)          # [B,nc,Q,H]
+    states = jnp.einsum("bctn,bcth,bcthp->bchpn", Bc, decay_to_end * dtc, xc.astype(f32))
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                 # [B,nc,H]
+
+    s0 = jnp.zeros((B_, H, P, N), f32) if initial_state is None else initial_state.astype(f32)
+
+    def scanf(s_prev, inp):
+        st_c, dec_c = inp
+        s_new = s_prev * dec_c[:, :, None, None] + st_c
+        return s_new, s_prev
+
+    final, prev_states = jax.lax.scan(
+        scanf, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [B,nc,H,P,N]
+    y_off = jnp.einsum("bcqn,bchpn->bcqhp", Cc, prev_states) * jnp.exp(cs)[..., None]
+    y = (y_diag + y_off).reshape(B_, S_p, H, P)[:, :S]
+    return y.astype(x.dtype), final
+
+
+def mamba2_full(p, x, cfg: ModelConfig, return_state: bool = False,
+                valid=None, lengths=None):
+    """Train / prefill forward. x [B,S,d] -> y [B,S,d] (+ states).
+
+    ``valid`` [B,S] bool freezes the recurrence at padded positions
+    (dt masked to 0 => decay 1, zero update), so the final state equals the
+    state at each row's true length.  ``lengths`` [B] selects the per-row
+    raw conv windows for the decode conv state.
+    """
+    B, S, _ = x.shape
+    d_in, N, H, P, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    z, x_raw, bc_raw, dt_raw = _project(p, x)
+    xc = _causal_conv(x_raw, p["conv_x"].astype(x.dtype), p["conv_x_b"].astype(x.dtype), W)
+    bcc = _causal_conv(bc_raw, p["conv_bc"].astype(x.dtype), p["conv_bc_b"].astype(x.dtype), W)
+    xs = xc.reshape(B, S, H, P)
+    xs = logical(xs, "batch", None, "act_ssm_heads", None)
+    Bm, Cm = bcc[..., :N], bcc[..., N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    if valid is not None:
+        dt = dt * valid[..., None].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    y, final = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xs
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm_w"])
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    out = logical(out, "batch", "seq", "act_embed")
+    if return_state:
+        # per-row last W-1 *valid* raw inputs become the decode conv state
+        if lengths is None:
+            lengths = jnp.full((B,), S, jnp.int32)
+
+        def tail(r):
+            padded = jnp.pad(r, ((0, 0), (W - 1, 0), (0, 0)))
+            idx = lengths[:, None] + jnp.arange(W - 1)[None, :]   # [B, W-1]
+            t = jnp.take_along_axis(padded, idx[:, :, None], axis=1)
+            return t.transpose(0, 2, 1)                    # [B, C, W-1]
+        return out, (tail(x_raw), tail(bc_raw), final)
+    return out
+
+
+def mamba2_decode(p, x, cfg: ModelConfig, conv_x_st, conv_bc_st, ssm_state):
+    """Chain-decode T tokens with the linear recurrence.
+
+    x [B,T,d]; conv_x_st [B,d_in,W-1]; conv_bc_st [B,2N,W-1];
+    ssm_state [B,H,P,N] float32.  Returns (y [B,T,d], per-prefix states
+    (conv_x [B,T,d_in,W-1], conv_bc [B,T,2N,W-1], ssm [B,T,H,P,N])) where
+    index t holds the state *after* token t — commit selects index acc-1.
+    """
+    B, T, _ = x.shape
+    d_in, N, H, P, W = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    z, x_raw, bc_raw, dt_raw = _project(p, x)
+    A = -jnp.exp(p["A_log"])
+    cw_x = p["conv_x"].astype(x.dtype)
+    cb_x = p["conv_x_b"].astype(x.dtype)
+    cw_bc = p["conv_bc"].astype(x.dtype)
+    cb_bc = p["conv_bc_b"].astype(x.dtype)
+
+    def step(carry, inp):
+        cx, cbc, sst = carry
+        xr_t, bc_t, dt_t = inp                              # [B,d_in], [B,2N], [B,H]
+        win_x = jnp.concatenate([cx, xr_t[:, :, None]], axis=-1)      # [B,d_in,W]
+        win_bc = jnp.concatenate([cbc, bc_t[:, :, None]], axis=-1)
+        xt = jax.nn.silu(jnp.sum(win_x * cw_x[None], axis=-1) + cb_x[None])
+        bct = jax.nn.silu(jnp.sum(win_bc * cw_bc[None], axis=-1) + cb_bc[None])
+        xt = xt.reshape(B, H, P)
+        Bt, Ct = bct[:, :N], bct[:, N:]
+        dt = jax.nn.softplus(dt_t.astype(jnp.float32) + p["dt_bias"])
+        decay = jnp.exp(dt * A)                             # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bt.astype(jnp.float32), xt.astype(jnp.float32))
+        new_sst = sst * decay[:, :, None, None] + upd
+        y_t = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), new_sst)
+        y_t = y_t + p["D"][None, :, None] * xt.astype(jnp.float32)
+        new_cx, new_cbc = win_x[:, :, 1:], win_bc[:, :, 1:]
+        return (new_cx, new_cbc, new_sst), (y_t.astype(x.dtype), new_cx, new_cbc, new_sst)
+
+    _, (ys, cxs, cbcs, ssts) = jax.lax.scan(
+        step, (conv_x_st, conv_bc_st, ssm_state.astype(jnp.float32)),
+        (x_raw.transpose(1, 0, 2), bc_raw.transpose(1, 0, 2), dt_raw.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, d_in)        # [B,T,H*P]
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm_w"])
+    out = jnp.einsum("bti,id->btd", y, p["out_proj"].astype(x.dtype))
+    return out, (cxs.transpose(1, 0, 2, 3), cbcs.transpose(1, 0, 2, 3),
+                 ssts.transpose(1, 0, 2, 3, 4))

@@ -1,0 +1,203 @@
+"""Serving engine: static-slot continuous batching over the Medusa engine.
+
+Static-graph discipline (the paper's core constraint) shapes the design:
+the decode batch is B fixed slots; admission scatters a new request's
+prefilled cache rows into its slot (all shapes static, prompt lengths are
+bucketed so prefill compiles once per bucket); every decode step runs all
+B slots with per-slot lengths — empty slots carry a dummy row and are
+masked out at the bookkeeping level, never in tensor shapes.
+
+Fault tolerance / straggler mitigation: per-request step budgets and
+deadlines; a request that exceeds them is cancelled and its slot freed; a
+failed step (injectable for tests) re-queues every in-flight request so a
+restarted server loses no work (at-least-once semantics).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SpecEngine
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [len] int32
+    max_new: int
+    eos_id: Optional[int] = None
+    deadline_s: Optional[float] = None  # wall-clock straggler bound
+    max_steps: Optional[int] = None     # decode-step budget
+    submitted_at: float = field(default_factory=time.monotonic)
+    output: List[int] = field(default_factory=list)
+    steps: int = 0
+    retries: int = 0
+    status: str = "queued"              # queued|running|done|cancelled|failed
+
+
+@dataclass
+class _Slot:
+    request: Optional[Request] = None
+
+    @property
+    def free(self):
+        return self.request is None
+
+
+class MedusaServer:
+    def __init__(self, engine: SpecEngine, params, medusa_params,
+                 batch_slots: int, max_len: int,
+                 prompt_buckets=(32, 128, 512), max_retries: int = 1):
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.model = engine.model
+        self.params = params
+        self.medusa_params = medusa_params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.buckets = tuple(sorted(prompt_buckets))
+        self.max_retries = max_retries
+
+        self.queue: deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(self.B)]
+        self.done: Dict[int, Request] = {}
+        self._rid = 0
+
+        self.cache = self.model.init_cache(self.cfg, self.B, max_len)
+        self.lengths = jnp.ones((self.B,), jnp.int32)
+        K = max(engine.dtree.K, 1)
+        self.base = jnp.zeros((self.B,), jnp.int32)
+        self.mtok = jnp.zeros((self.B, K, engine.dtree.max_topk), jnp.int32)
+        self._key = jax.random.PRNGKey(0)
+
+        self._prefill_jit = {}
+        self._step_jit = jax.jit(self.engine.spec_step)
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt: np.ndarray, max_new: int, eos_id=None,
+               deadline_s=None, max_steps=None) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
+                                  max_new, eos_id, deadline_s,
+                                  max_steps or 4 * max_new))
+        return self._rid
+
+    def result(self, rid: int) -> Optional[Request]:
+        return self.done.get(rid)
+
+    def run(self, max_iters: int = 10_000,
+            fail_hook: Optional[Callable[[int], bool]] = None):
+        """Drive until all work is done. ``fail_hook(iter)`` returning True
+        simulates a step failure (tests node-failure recovery)."""
+        it = 0
+        while (self.queue or any(not s.free for s in self.slots)) and it < max_iters:
+            self._admit()
+            try:
+                if fail_hook is not None and fail_hook(it):
+                    raise RuntimeError("injected step failure")
+                self._decode_step()
+            except RuntimeError:
+                self._recover()
+            self._reap()
+            it += 1
+        return it
+
+    # ------------------------------------------------------------- internals
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def _prefill_one(self, req: Request, slot_idx: int):
+        bucket = self._bucket(len(req.prompt))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, : len(req.prompt)] = req.prompt[:bucket]
+        if bucket not in self._prefill_jit:
+            self._prefill_jit[bucket] = jax.jit(
+                lambda p, mp, t, l, c: self.engine.prefill(p, mp, t, l, c))
+        cache1 = self.model.init_cache(self.cfg, 1, self.max_len)
+        lengths1 = jnp.asarray([len(req.prompt)], jnp.int32)
+        cache1, lengths1, base1, mtok1, _ = self._prefill_jit[bucket](
+            self.params, self.medusa_params, jnp.asarray(toks), lengths1, cache1)
+        # scatter the single-row cache into this slot (batch axis = 1)
+        def insert(big, one):
+            idx = (0, slot_idx) + (0,) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(big, one.astype(big.dtype), idx)
+        self.cache = jax.tree.map(insert, self.cache, cache1)
+        self.lengths = self.lengths.at[slot_idx].set(lengths1[0])
+        self.base = self.base.at[slot_idx].set(base1[0])
+        self.mtok = self.mtok.at[slot_idx].set(mtok1[0])
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if not slot.free or not self.queue:
+                continue
+            req = self.queue.popleft()
+            if len(req.prompt) + req.max_new + self.engine.dtree.T + 2 > self.max_len:
+                req.status = "failed"
+                self.done[req.rid] = req
+                continue
+            req.status = "running"
+            slot.request = req
+            self._prefill_one(req, i)
+
+    def _decode_step(self):
+        self._key, sub = jax.random.split(self._key)
+        self.cache, self.lengths, verdict, self.mtok = self._step_jit(
+            self.params, self.medusa_params, self.cache, self.lengths,
+            self.base, self.mtok, sub)
+        self.base = verdict.next_token
+        accs = np.asarray(verdict.acc)
+        toks = np.asarray(verdict.path_tokens)
+        for i, slot in enumerate(self.slots):
+            req = slot.request
+            if req is None:
+                continue
+            req.steps += 1
+            req.output.extend(int(t) for t in toks[i, : accs[i]])
+
+    def _reap(self):
+        now = time.monotonic()
+        for slot in self.slots:
+            req = slot.request
+            if req is None:
+                continue
+            hit_eos = req.eos_id is not None and req.eos_id in req.output
+            over = (len(req.output) >= req.max_new or hit_eos)
+            straggler = ((req.deadline_s and now - req.submitted_at > req.deadline_s)
+                         or (req.max_steps and req.steps >= req.max_steps))
+            if over or straggler:
+                req.output = req.output[: req.max_new]
+                if req.eos_id is not None and req.eos_id in req.output:
+                    req.output = req.output[: req.output.index(req.eos_id) + 1]
+                req.status = "done" if over else "cancelled"
+                self.done[req.rid] = req
+                slot.request = None
+
+    def _recover(self):
+        """Node-failure recovery: re-queue all in-flight work (their caches
+        are lost), reset device state."""
+        for slot in self.slots:
+            if slot.request is not None:
+                req = slot.request
+                req.retries += 1
+                if req.retries > self.max_retries:
+                    req.status = "failed"
+                    self.done[req.rid] = req
+                else:
+                    req.output = []
+                    req.steps = 0
+                    req.status = "queued"
+                    self.queue.appendleft(req)
+                slot.request = None
+        self.cache = self.model.init_cache(self.cfg, self.B, self.max_len)
+        self.lengths = jnp.ones((self.B,), jnp.int32)

@@ -1,0 +1,120 @@
+"""Fault-tolerant checkpointing (no orbax): atomic npz shards + msgpack
+manifest, keep-last-N retention, async writer thread, resume-from-latest.
+
+Crash-safety: a checkpoint is written into ``<dir>/tmp.<step>`` and
+``os.replace``'d to ``<dir>/step_<step>`` only when complete — a partially
+written checkpoint can never be mistaken for a valid one.  Restart recovery
+is therefore: ``restore_latest(dir)`` (used by launch/train.py --resume).
+Elastic scaling: arrays are saved in logical (unsharded) form; resharding
+onto whatever mesh the restarted job has happens at load time.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            for path, _ in leaves]
+    vals = [v for _, v in leaves]
+    return keys, vals, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None):
+    """Atomic synchronous save."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    keys, vals, _ = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(v) for i, v in enumerate(vals)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "dtypes": [str(np.asarray(v).dtype) for v in vals],
+        "shapes": [list(np.asarray(v).shape) for v in vals],
+        "meta": meta or {},
+    }
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def restore(path: str, template: Any = None):
+    """-> (step, tree, meta). With a template, unflattens into its structure
+    (and validates keys); without, returns a flat {key: array} dict."""
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    arrays = [data[f"a{i}"] for i in range(len(manifest["keys"]))]
+    if template is None:
+        return manifest["step"], dict(zip(manifest["keys"], arrays)), manifest["meta"]
+    keys, vals, treedef = _flatten(template)
+    if keys != manifest["keys"]:
+        raise ValueError(f"checkpoint/template key mismatch: "
+                         f"{set(keys) ^ set(manifest['keys'])}")
+    tree = jax.tree_util.tree_unflatten(treedef, arrays)
+    return manifest["step"], tree, manifest["meta"]
+
+
+def list_checkpoints(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append((int(m.group(1)), os.path.join(ckpt_dir, name)))
+    return sorted(steps)
+
+
+def restore_latest(ckpt_dir: str, template: Any = None):
+    ckpts = list_checkpoints(ckpt_dir)
+    if not ckpts:
+        return None
+    return restore(ckpts[-1][1], template)
+
+
+def retain(ckpt_dir: str, keep: int = 3):
+    for _, path in list_checkpoints(ckpt_dir)[:-keep]:
+        shutil.rmtree(path, ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint I/O with training (one in-flight save)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot off-device
+
+        def run():
+            save(self.ckpt_dir, step, host_tree, meta)
+            retain(self.ckpt_dir, self.keep)
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

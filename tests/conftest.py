@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see exactly
+one device; multi-device tests spawn subprocesses with their own flags."""
+import os
+
+import jax
+import pytest
+
+# keep test compiles light on the 1-core container
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

@@ -1,0 +1,101 @@
+"""THE paper invariant: greedy Medusa speculative decode is lossless —
+byte-identical to greedy autoregressive decode — for every architecture
+family and for the Pallas kernel path (deliverable c, integration tier).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine, ar_generate
+from repro.core.tree import chain_tree, medusa_63
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+from repro.models.frontends import frontend_embeds
+
+B, S_PROMPT, MAX_NEW = 2, 8, 20
+
+# one representative per family + the paper's own model
+FAMILY_ARCHS = ["granite-moe-1b-a400m", "whisper-tiny", "gemma-2b",
+                "qwen1.5-0.5b", "mamba2-2.7b", "jamba-1.5-large-398b",
+                "internvl2-26b", "openpangu-7b"]
+
+
+def _setup(arch, seed=1):
+    cfg = get_config(arch, reduced=True)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops (MoE caveat: DESIGN.md)
+    m = get_model(cfg)
+    params, _ = split_params(m.init_params(jax.random.PRNGKey(seed), cfg))
+    tb = chain_tree(4) if cfg.spec_mode == "chain" else medusa_63()
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(seed + 1), cfg, tb.K))
+    # random resblock so candidates are non-trivial (zero-init == identity)
+    mp["w1"] = jax.random.normal(jax.random.PRNGKey(seed + 2), mp["w1"].shape,
+                                 mp["w1"].dtype) * 0.1
+    return cfg, m, params, mp, tb
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_greedy_medusa_equals_greedy_ar(arch):
+    cfg, m, params, mp, tb = _setup(arch)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S_PROMPT), 0, cfg.vocab_size)
+    fe = frontend_embeds(cfg, B)
+    prefix = cfg.frontend_len if (cfg.frontend and cfg.family != "encdec") else 0
+    lengths = jnp.full((B,), S_PROMPT + prefix, jnp.int32)
+    S_MAX = S_PROMPT + prefix + MAX_NEW + tb.T + 8
+
+    ar, _ = ar_generate(cfg, params, tokens, lengths,
+                        m.init_cache(cfg, B, S_MAX), MAX_NEW, extra_embeds=fe)
+    sp, n_out, stats = SpecEngine(cfg, tb).generate(
+        params, mp, tokens, lengths, m.init_cache(cfg, B, S_MAX), MAX_NEW,
+        extra_embeds=fe)
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(sp))
+    assert int(stats.steps) <= MAX_NEW
+    assert (np.asarray(n_out) == MAX_NEW).all()
+
+
+def test_equivalence_with_pallas_kernel():
+    cfg, m, params, mp, tb = _setup("granite-8b")
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S_PROMPT), 0, cfg.vocab_size)
+    lengths = jnp.full((B,), S_PROMPT, jnp.int32)
+    ar, _ = ar_generate(cfg, params, tokens, lengths,
+                        m.init_cache(cfg, B, 256), 16)
+    sp, _, _ = SpecEngine(cfg, tb, use_kernel=True).generate(
+        params, mp, tokens, lengths, m.init_cache(cfg, B, 256), 16)
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(sp))
+
+
+def test_ragged_prompt_lengths():
+    """Continuous-batching precondition: rows with different prompt lengths
+    decode exactly like the same prompts run alone."""
+    cfg, m, params, mp, tb = _setup("qwen1.5-0.5b")
+    p1 = jax.random.randint(jax.random.PRNGKey(5), (1, 4), 0, cfg.vocab_size)
+    p2 = jax.random.randint(jax.random.PRNGKey(6), (1, 8), 0, cfg.vocab_size)
+    # run together (right-padded batch)
+    toks = jnp.zeros((2, 8), jnp.int32)
+    toks = toks.at[0, :4].set(p1[0]).at[1].set(p2[0])
+    lengths = jnp.asarray([4, 8], jnp.int32)
+    both, _, _ = SpecEngine(cfg, tb).generate(
+        params, mp, toks, lengths, m.init_cache(cfg, 2, 128), 12)
+    # run alone
+    for i, (p, ln) in enumerate([(p1, 4), (p2, 8)]):
+        alone, _, _ = SpecEngine(cfg, tb).generate(
+            params, mp, p, jnp.asarray([ln], jnp.int32),
+            m.init_cache(cfg, 1, 128), 12)
+        np.testing.assert_array_equal(np.asarray(both[i]), np.asarray(alone[0]))
+
+
+def test_typical_acceptance_commits_and_terminates():
+    cfg, m, params, mp, tb = _setup("qwen1.5-0.5b")
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S_PROMPT), 0, cfg.vocab_size)
+    lengths = jnp.full((B,), S_PROMPT, jnp.int32)
+    eng = SpecEngine(cfg, tb, accept="typical", temperature=0.8)
+    out, n_out, stats = eng.generate(params, mp, tokens, lengths,
+                                     m.init_cache(cfg, B, 128), 12,
+                                     key=jax.random.PRNGKey(9))
+    assert (np.asarray(n_out) == 12).all()
+    assert (np.asarray(out) >= 0).all() and (np.asarray(out) < cfg.vocab_size).all()

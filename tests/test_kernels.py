@@ -1,0 +1,89 @@
+"""Pallas tree-attention kernel vs the pure-jnp oracle: shape/dtype sweep
+(interpret mode on CPU), per the deliverable spec."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tree import chain_tree, medusa_63
+from repro.kernels.ops import tree_attention
+from repro.kernels.ref import tree_attention_ref
+
+CASES = [
+    # B, S, Hq, Hkv, D, tree, dtype
+    (2, 1024, 8, 2, 64, "medusa", jnp.float32),
+    (1, 512, 4, 4, 128, "chain", jnp.float32),
+    (3, 2048, 8, 1, 128, "medusa", jnp.bfloat16),   # MQA fold
+    (2, 640, 6, 2, 64, "chain", jnp.float32),       # odd S -> pad path
+    (1, 256, 2, 2, 256, "chain", jnp.bfloat16),     # gemma-style head_dim
+    (2, 512, 16, 8, 64, "medusa", jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,tree,dt", CASES)
+def test_kernel_matches_oracle(rng, B, S, Hq, Hkv, D, tree, dt):
+    tb = medusa_63() if tree == "medusa" else chain_tree(4)
+    T = tb.T
+    q = jnp.asarray(rng.standard_normal((B, T, Hq, D)), dt)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), dt)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), dt)
+    lengths = jnp.asarray(rng.integers(1, S - T - 1, size=(B,)), jnp.int32)
+    mask = jnp.asarray(tb.mask)
+    scale = 1.0 / np.sqrt(D)
+    out_k = tree_attention(q, k, v, mask, lengths, scale, interpret=True)
+    out_r = tree_attention_ref(q, k, v, mask, lengths, scale)
+    tol = 2e-2 if dt == jnp.bfloat16 else 3e-5
+    err = float(jnp.max(jnp.abs(out_k.astype(jnp.float32) - out_r.astype(jnp.float32))))
+    assert err < tol, err
+
+
+def test_kernel_length_one(rng):
+    """Edge: minimal cache occupancy (only slot 0 committed)."""
+    tb = chain_tree(2)
+    q = jnp.asarray(rng.standard_normal((1, tb.T, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 512, 4, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 512, 4, 64)), jnp.float32)
+    lengths = jnp.asarray([1], jnp.int32)
+    out_k = tree_attention(q, k, v, jnp.asarray(tb.mask), lengths, 0.125, interpret=True)
+    out_r = tree_attention_ref(q, k, v, jnp.asarray(tb.mask), lengths, 0.125)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=3e-5)
+
+
+def test_kernel_accepts_inflight_tree_rows(rng):
+    """k_tree/v_tree bypass (used when the cache is seq-sharded)."""
+    tb = chain_tree(3)
+    T = tb.T
+    q = jnp.asarray(rng.standard_normal((2, T, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 512, 2, 64)), jnp.float32)
+    lengths = jnp.asarray([100, 200], jnp.int32)
+    idx = (lengths[:, None] + jnp.arange(T))[:, :, None, None]
+    kt = jnp.take_along_axis(k, idx, axis=1)
+    vt = jnp.take_along_axis(v, idx, axis=1)
+    a = tree_attention(q, k, v, jnp.asarray(tb.mask), lengths, 0.125, interpret=True)
+    b = tree_attention(q, k, v, jnp.asarray(tb.mask), lengths, 0.125,
+                       k_tree=kt, v_tree=vt, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_inplace_commit_kernel(rng):
+    """In-place cache commit (hillclimb iter 3): O(rows) traffic on TPU."""
+    import jax.numpy as jnp
+    from repro.kernels.cache_update import commit_rows, commit_rows_stacked
+    B, S, H, D, K1 = 3, 256, 2, 16, 5
+    cache = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    rows = jnp.asarray(rng.standard_normal((B, K1, H, D)), jnp.float32)
+    lens = jnp.asarray([10, 100, 200], jnp.int32)
+    out = commit_rows(cache, rows, lens, interpret=True)
+    ref = np.array(cache)
+    for b in range(B):
+        ref[b, int(lens[b]):int(lens[b]) + K1] = np.asarray(rows)[b]
+    np.testing.assert_allclose(np.asarray(out), ref)
+    nu = 4
+    c2 = jnp.asarray(rng.standard_normal((nu, B, S, H, D)), jnp.float32)
+    r2 = jnp.asarray(rng.standard_normal((nu, B, K1, H, D)), jnp.float32)
+    o2 = commit_rows_stacked(c2, r2, lens, interpret=True)
+    ref2 = np.array(c2)
+    for u in range(nu):
+        for b in range(B):
+            ref2[u, b, int(lens[b]):int(lens[b]) + K1] = np.asarray(r2)[u, b]
+    np.testing.assert_allclose(np.asarray(o2), ref2)

@@ -1,0 +1,93 @@
+"""Serving scheduler: continuous batching correctness, straggler
+cancellation, node-failure recovery (at-least-once)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine, ar_generate
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+from repro.serving.scheduler import MedusaServer
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    m = get_model(cfg)
+    params, _ = split_params(m.init_params(jax.random.PRNGKey(0), cfg))
+    eng = SpecEngine(cfg)
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, eng.dtree.K))
+    return cfg, m, params, eng, mp
+
+
+def test_continuous_batching_matches_ar(served, rng):
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=3, max_len=256)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 9, 17, 3, 30)]
+    rids = [srv.submit(p, max_new=10) for p in prompts]
+    srv.run()
+    for rid, p in zip(rids, prompts):
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 10
+        ar, _ = ar_generate(cfg, params, jnp.asarray(p)[None],
+                            jnp.asarray([len(p)], jnp.int32),
+                            m.init_cache(cfg, 1, 256), 10)
+        np.testing.assert_array_equal(np.asarray(ar)[0], np.asarray(req.output))
+
+
+def test_eos_truncation(served, rng):
+    cfg, m, params, eng, mp = served
+    p = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    ar, _ = ar_generate(cfg, params, jnp.asarray(p)[None],
+                        jnp.asarray([6], jnp.int32), m.init_cache(cfg, 1, 256), 12)
+    eos = int(np.asarray(ar)[0, 4])   # force an EOS hit at step 5
+    srv = MedusaServer(eng, params, mp, batch_slots=1, max_len=256)
+    rid = srv.submit(p, max_new=12, eos_id=eos)
+    srv.run()
+    req = srv.result(rid)
+    assert req.status == "done"
+    assert req.output[-1] == eos and len(req.output) <= 12
+
+
+def test_straggler_cancelled(served, rng):
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=1, max_len=256)
+    rid = srv.submit(rng.integers(0, cfg.vocab_size, size=4).astype(np.int32),
+                     max_new=50, max_steps=3)
+    srv.run()
+    req = srv.result(rid)
+    assert req.status == "cancelled"
+    assert req.steps <= 4
+
+
+def test_failure_recovery_at_least_once(served, rng):
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256)
+    rids = [srv.submit(rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
+                       max_new=8) for _ in range(3)]
+    srv.run(fail_hook=lambda it: it == 1)
+    for rid in rids:
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 8
+
+
+def test_retry_budget_exhaustion(served, rng):
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=1, max_len=256, max_retries=1)
+    rid = srv.submit(rng.integers(0, cfg.vocab_size, size=4).astype(np.int32),
+                     max_new=8)
+    srv.run(fail_hook=lambda it: it < 5)   # persistent failure
+    assert srv.result(rid).status == "failed"
+
+
+def test_oversized_prompt_rejected(served, rng):
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=1, max_len=64)
+    rid = srv.submit(rng.integers(0, cfg.vocab_size, size=60).astype(np.int32),
+                     max_new=40)
+    srv.run()
+    assert srv.result(rid).status == "failed"

@@ -1,0 +1,75 @@
+"""Property tests of the static tree topology (paper §3.2 buffers)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import (MC_SIM_7B_63, build_tree, cartesian_tree,
+                             chain_tree, medusa_63)
+
+
+def paths_strategy():
+    node = st.tuples(*[st.integers(0, 4)])
+    return st.lists(
+        st.lists(st.integers(0, 4), min_size=1, max_size=4).map(tuple),
+        min_size=1, max_size=24).map(lambda ps: [tuple(p) for p in ps])
+
+
+@settings(max_examples=60, deadline=None)
+@given(paths_strategy())
+def test_tree_invariants(paths):
+    tb = build_tree(paths)
+    T, K, P = tb.T, tb.K, tb.P
+    # mask is ancestor-closed and lower-triangular under the (depth, path) sort
+    assert tb.mask.shape == (T, T)
+    assert tb.mask[:, 0].all(), "every node sees the root"
+    assert np.diag(tb.mask).all(), "self-visibility"
+    assert not np.triu(tb.mask, 1).any(), "static layout is topologically sorted"
+    # ancestor closure: if i sees j, i sees all of j's ancestors
+    for i in range(T):
+        for j in range(1, T):
+            if tb.mask[i, j]:
+                assert tb.mask[i, tb.parent[j]]
+    # depths consistent with parents
+    for i in range(1, T):
+        assert tb.depths[i] == tb.depths[tb.parent[i]] + 1
+    # visibility count equals depth+1 (exactly the ancestor chain)
+    assert (tb.mask.sum(1) == tb.depths + 1).all()
+    # retrieve paths are root-started ancestor chains
+    assert (tb.retrieve[:, 0] == 0).all()
+    for r in range(P):
+        L = tb.path_len[r]
+        for j in range(1, L):
+            assert tb.parent[tb.retrieve[r, j]] == tb.retrieve[r, j - 1]
+        assert tb.retrieve_valid[r, :L].all()
+        assert not tb.retrieve_valid[r, L:].any()
+    # every leaf is covered by exactly one retrieval row
+    leaves = set(range(T)) - set(tb.parent[1:].tolist())
+    leaves.discard(0) if T > 1 else None
+    assert leaves == set(tb.retrieve[np.arange(P), tb.path_len - 1].tolist())
+    # topk_per_head is exactly what candidate assembly needs
+    for h in range(K):
+        sel = tb.node_head == h
+        if sel.any():
+            assert tb.node_choice[sel].max() + 1 == tb.topk_per_head[h]
+
+
+def test_chain_tree_is_chain():
+    tb = chain_tree(4)
+    assert tb.is_chain and tb.T == 5 and tb.P == 1
+    assert np.array_equal(tb.mask, np.tril(np.ones((5, 5), bool)))
+    assert np.array_equal(tb.retrieve[0], np.arange(5))
+
+
+def test_medusa63_matches_paper_scale():
+    tb = medusa_63()
+    assert tb.T == 64                # 63 nodes + root
+    assert tb.K == 4                 # 4 medusa heads
+    assert len(MC_SIM_7B_63) == 63
+    assert not tb.is_chain
+
+
+def test_cartesian_tree():
+    tb = cartesian_tree((3, 2))
+    assert tb.T == 1 + 3 + 6
+    assert tb.P == 6
+    assert tb.topk_per_head == (3, 2)

@@ -1,0 +1,92 @@
+"""Unit tests for candidate assembly + tensorized acceptance (paper §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import verify as V
+from repro.core.tree import build_tree, cartesian_tree, chain_tree
+
+
+def test_generate_candidates_gather():
+    tb = cartesian_tree((2, 2))
+    dt = V.device_tree(tb)
+    base = jnp.array([7, 9], jnp.int32)
+    # mtok[b, head, slot]
+    mtok = jnp.array([[[10, 11], [20, 21]],
+                      [[30, 31], [40, 41]]], jnp.int32)
+    cand = V.generate_candidates(base, mtok, dt)
+    assert cand.shape == (2, tb.T)
+    assert cand[0, 0] == 7 and cand[1, 0] == 9
+    # node order: depth-1 (choices 0,1), then depth-2
+    np.testing.assert_array_equal(np.asarray(cand[0, 1:3]), [10, 11])
+    assert set(np.asarray(cand[0, 3:]).tolist()) == {20, 21}
+
+
+def _mk_logits(V_, argmax_tokens):
+    """logits [B, T, V] whose argmax per node equals argmax_tokens."""
+    B, T = argmax_tokens.shape
+    logits = np.zeros((B, T, V_), np.float32)
+    for b in range(B):
+        for t in range(T):
+            logits[b, t, argmax_tokens[b, t]] = 5.0
+    return jnp.asarray(logits)
+
+
+def test_greedy_verify_full_accept():
+    tb = chain_tree(3)
+    dt = V.device_tree(tb)
+    cand = jnp.array([[1, 2, 3, 4]], jnp.int32)          # root + chain
+    # backbone agrees everywhere: argmax at node j == cand[j+1]
+    argm = np.array([[2, 3, 4, 9]])
+    verdict = V.greedy_verify(cand, _mk_logits(16, argm), dt)
+    assert int(verdict.acc[0]) == 4
+    assert int(verdict.next_token[0]) == 9
+    np.testing.assert_array_equal(np.asarray(verdict.path_tokens[0]), [1, 2, 3, 4])
+
+
+def test_greedy_verify_partial_and_reject():
+    tb = chain_tree(3)
+    dt = V.device_tree(tb)
+    cand = jnp.array([[1, 2, 99, 4]], jnp.int32)         # node2 wrong
+    argm = np.array([[2, 3, 4, 9]])
+    verdict = V.greedy_verify(cand, _mk_logits(128, argm), dt)
+    assert int(verdict.acc[0]) == 2                       # root + matching node1
+    assert int(verdict.next_token[0]) == 3                # argmax at last accepted
+    # total reject: only the certain root commits
+    cand = jnp.array([[1, 50, 60, 70]], jnp.int32)
+    verdict = V.greedy_verify(cand, _mk_logits(128, argm), dt)
+    assert int(verdict.acc[0]) == 1
+    assert int(verdict.next_token[0]) == 2
+
+
+def test_greedy_verify_picks_best_path():
+    tb = cartesian_tree((2,))                             # two depth-1 paths
+    dt = V.device_tree(tb)
+    cand = jnp.array([[5, 8, 7]], jnp.int32)              # root, choice0, choice1
+    argm = np.array([[7, 0, 1]])                          # backbone wants 7 => path 1
+    verdict = V.greedy_verify(cand, _mk_logits(16, argm), dt)
+    assert int(verdict.acc[0]) == 2
+    assert int(verdict.last_slot[0]) == 2                 # node holding token 7
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_typical_always_commits_at_least_one(K, seed):
+    tb = chain_tree(K)
+    dt = V.device_tree(tb)
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    cand = jax.random.randint(k1, (2, tb.T), 0, 64)
+    logits = jax.random.normal(k2, (2, tb.T, 64))
+    v = V.typical_verify(cand, logits, dt, k3)
+    assert (np.asarray(v.acc) >= 1).all()
+    assert (np.asarray(v.acc) <= K + 1).all()
+    # committed tokens come from the claimed path slots
+    pt = np.asarray(v.path_tokens)
+    ps = np.asarray(v.path_slots)
+    cd = np.asarray(cand)
+    for b in range(2):
+        for j in range(int(v.acc[b])):
+            assert pt[b, j] == cd[b, ps[b, j]]
