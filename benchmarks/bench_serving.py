@@ -1,0 +1,145 @@
+"""Serving scheduler benchmark (DESIGN.md §9): v1-style serial admission vs
+scheduler v2 batched bucketed prefill, plus a Poisson arrival-trace replay.
+
+Two measurements:
+
+* **Admission phase** — 16 queued requests admitted into 16 free slots.
+  Serial mode issues one [1, bucket] prefill call plus a host-side cache
+  insert per request; batched mode issues one [n_bucket, bucket] call per
+  prompt bucket with the slot merge fused into the same compiled call.
+  Reported as us per admission round and requests/s; the speedup row is the
+  acceptance gate (>= 1.5x).
+* **Trace replay** — a Poisson arrival trace driven through ``step_once``;
+  reports end-to-end throughput (tok/s) and p50/p99 request latency.
+
+Everything runs on CPU with a reduced backbone and random weights (admission
+cost does not depend on weight quality).
+
+  PYTHONPATH=src python -m benchmarks.bench_serving
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+from repro.serving.scheduler import MedusaServer
+
+N_QUEUED = 16          # acceptance gate: admission speedup at 16 queued requests
+SLOTS = 16
+MAX_LEN = 256
+PROMPT_SIZES = (5, 9, 17, 3, 30, 7, 12, 4, 21, 40, 60, 90, 33, 110, 14, 26)
+
+
+def _stack():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    eng = SpecEngine(cfg)
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, eng.dtree.K))
+    return cfg, model, params, eng, mp
+
+
+def _admission_time(srv: MedusaServer, prompts, reps: int = 4) -> float:
+    """Median seconds per admission round of len(prompts) requests.
+    Round 0 is compile warmup and excluded."""
+    times = []
+    for rep in range(reps + 1):
+        for p in prompts:
+            srv.submit(p, max_new=8)
+        jax.block_until_ready(srv.cache)
+        t0 = time.perf_counter()
+        srv._admit()
+        jax.block_until_ready(srv.cache)
+        dt = time.perf_counter() - t0
+        if rep:
+            times.append(dt)
+        srv.release_all()
+    return float(np.median(times))
+
+
+def _replay_trace(srv: MedusaServer, cfg, rng, n_req: int = 24,
+                  rate_hz: float = 4.0, max_new: int = 8):
+    """Replay a Poisson arrival trace; returns (total_s, tokens, latencies)."""
+    # pre-warm admission group sizes (1..SLOTS pow2) and the decode step so
+    # compiles don't pollute trace latencies
+    for k in sorted({1, 2, 4, 8, min(16, srv.B)}):
+        for _ in range(k):
+            srv.submit(rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
+                       max_new=2)
+        srv.run()
+
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_req))
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 30))).astype(np.int32)
+               for _ in range(n_req)]
+    t0 = time.perf_counter()
+    submitted, it = 0, 0
+    arrival_of, pending, lat, tokens = {}, set(), [], 0
+    while submitted < n_req or pending or srv.busy:
+        now = time.perf_counter() - t0
+        while submitted < n_req and arrivals[submitted] <= now:
+            rid = srv.submit(prompts[submitted], max_new=max_new)
+            arrival_of[rid] = arrivals[submitted]
+            pending.add(rid)
+            submitted += 1
+        if not srv.queue and all(s.free for s in srv.slots):
+            if submitted < n_req:       # idle: wait for the next arrival
+                time.sleep(min(0.005, arrivals[submitted] - now))
+                continue
+            break
+        srv.step_once(it=it)
+        it += 1
+        now = time.perf_counter() - t0
+        for rid in [r for r in pending if srv.result(r) is not None]:
+            pending.discard(rid)
+            req = srv.result(rid)
+            if req.status == "done":
+                lat.append(now - arrival_of[rid])
+                tokens += len(req.output)
+    return time.perf_counter() - t0, tokens, lat
+
+
+def run():
+    cfg, model, params, eng, mp = _stack()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in PROMPT_SIZES]
+
+    rows = []
+    t_mode = {}
+    for mode in ("serial", "batched"):
+        srv = MedusaServer(eng, params, mp, batch_slots=SLOTS, max_len=MAX_LEN,
+                           admission=mode)
+        t = _admission_time(srv, prompts)
+        t_mode[mode] = t
+        rows.append((f"serving/admit{N_QUEUED}/{mode}", t * 1e6,
+                     f"{N_QUEUED / t:.1f}req_s"))
+    speedup = t_mode["serial"] / t_mode["batched"]
+    rows.append((f"serving/admit{N_QUEUED}/batched_speedup", 0.0,
+                 f"{speedup:.2f}x"))
+
+    srv = MedusaServer(eng, params, mp, batch_slots=8, max_len=MAX_LEN,
+                       admission="batched")
+    total, tokens, lat = _replay_trace(srv, cfg, rng)
+    lat = np.asarray(sorted(lat)) if lat else np.asarray([0.0])
+    rows += [
+        ("serving/trace/throughput", 0.0, f"{tokens / total:.1f}tok_s"),
+        ("serving/trace/p50_latency", float(np.percentile(lat, 50)) * 1e6,
+         f"{np.percentile(lat, 50) * 1e3:.0f}ms"),
+        ("serving/trace/p99_latency", float(np.percentile(lat, 99)) * 1e6,
+         f"{np.percentile(lat, 99) * 1e3:.0f}ms"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

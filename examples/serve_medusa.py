@@ -1,4 +1,5 @@
-"""Serving example: continuous batching with the Medusa engine, including a
+"""Serving example: scheduler v2 continuous batching with the Medusa engine
+(DESIGN.md §9) — batched bucketed prefill, on-device EOS reaping, and a
 simulated node failure mid-run (requests are re-queued and still complete).
 
   PYTHONPATH=src python examples/serve_medusa.py
@@ -29,10 +30,14 @@ def main():
         rids.append(srv.submit(
             rng.integers(0, cfg.vocab_size, size=n).astype(np.int32),
             max_new=16))
-    print(f"submitted {len(rids)} requests into 4 static slots")
+    print(f"submitted {len(rids)} requests into 4 static slots "
+          f"(admission={srv.admission})")
     iters = srv.run(fail_hook=lambda it: it == 3)   # inject a failure
     done = sum(srv.result(r).status == "done" for r in rids)
     print(f"scheduler iterations: {iters} (one injected failure, recovered)")
+    print(f"{srv.stats['admitted']} slot admissions (incl. retries) in "
+          f"{srv.stats['prefill_calls']} bucketed prefill calls, "
+          f"{srv.stats['steps']} decode steps")
     for rid in rids[:3]:
         req = srv.result(rid)
         print(f"  req {rid}: status={req.status} retries={req.retries} "

@@ -70,8 +70,16 @@ class SpecEngine:
         mtok, mprob = M.medusa_topk(medusa_params, hidden, self.dtree.max_topk)
         return mtok.transpose(1, 0, 2), mprob.transpose(1, 0, 2)
 
-    def spec_step(self, params, medusa_params, cache, lengths, base, mtok, key):
-        """One static speculative step. Returns (cache, lengths, verdict, mtok')."""
+    def spec_step(self, params, medusa_params, cache, lengths, base, mtok, key,
+                  active=None):
+        """One static speculative step. Returns (cache, lengths, verdict, mtok').
+
+        ``active`` [B] bool (optional) enables the masked-commit variant used
+        by the serving scheduler (DESIGN.md §9): all B slots run through the
+        same static graph, but only active slots advance their cache length —
+        empty or finished slots are masked out of the commit so their state
+        stays frozen until admission overwrites the whole slot row.
+        """
         dt = self.dtree
         cand = V.generate_candidates(base, mtok, dt)                  # [B, T]
         kw = {"deferred": True} if self.deferred else {}
@@ -86,7 +94,8 @@ class SpecEngine:
         else:
             verdict = V.greedy_verify(cand, logits, dt)
         cache, lengths = self.model.commit(
-            self.cfg, spec_cache, lengths, verdict.path_slots, verdict.acc)
+            self.cfg, spec_cache, lengths, verdict.path_slots, verdict.acc,
+            active=active)
         h_last = jnp.take_along_axis(
             hidden, verdict.last_slot[:, None, None], axis=1)[:, 0]   # [B, d]
         mtok2, _ = self._heads(medusa_params, h_last)

@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--admission", default="batched",
+                    choices=("batched", "serial"),
+                    help="scheduler v2 batched bucketed prefill (default) "
+                         "or v1-style per-request admission")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -37,7 +41,7 @@ def main():
     mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, tb.K))
 
     srv = MedusaServer(eng, params, mp, batch_slots=args.slots,
-                       max_len=args.max_len)
+                       max_len=args.max_len, admission=args.admission)
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = [srv.submit(rng.integers(0, cfg.vocab_size,
@@ -50,6 +54,9 @@ def main():
     toks = sum(len(r.output) for r in done if r.status == "done")
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({iters} scheduler iterations, {toks/dt:.1f} tok/s on CPU)")
+    print(f"admission={args.admission}: {srv.stats['admitted']} slot "
+          f"admissions (incl. retries) in {srv.stats['prefill_calls']} "
+          f"prefill calls")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.status} steps={r.steps} "
               f"tokens/step={len(r.output)/max(r.steps,1):.2f}")

@@ -197,7 +197,7 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
     return x, spec_cache
 
 
-def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc):
+def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
     def fix(c, c_new):  # c [nu,B,S,H,D]; c_new [nu,B,T,H,D]
         idx = path_slots[None, :, :, None, None]
         rows = jnp.take_along_axis(c_new, idx, axis=2)
@@ -206,7 +206,8 @@ def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc):
     new_cache = {"self": {"k": fix(spec_cache["self"]["k"], spec_cache["self"]["k_new"]),
                           "v": fix(spec_cache["self"]["v"], spec_cache["self"]["v_new"])},
                  "cross": spec_cache["cross"]}
-    return new_cache, lengths + acc
+    adv = acc if active is None else jnp.where(active, acc, 0)
+    return new_cache, lengths + adv
 
 
 def embed_tokens(params, cfg, tokens):

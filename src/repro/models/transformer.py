@@ -381,13 +381,19 @@ def cache_max_len(cache):
     return 0
 
 
-def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc):
+def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
     """Zero-copy compaction: keep exactly the accepted prefix.
 
     path_slots [B, K+1]: tree-node slots of the best path (0..T-1);
     acc [B] in [1, K+1].  Attn: gather best-path KV rows and write them back
     at [len, len+K+1) (rows past ``acc`` are dead and will be overwritten).
     SSM: select the state after ``acc`` tokens of the chain.
+
+    ``active`` [B] bool (optional) is the serving scheduler's masked-commit
+    path (DESIGN.md §9): rows whose slot is empty/finished do not advance
+    ``lengths``, so idle slots stay frozen inside the shared static step.
+    Their (dead) row writes still happen — admission replaces the whole slot
+    row, so nothing stale is ever read.
     Returns (cache, new_lengths).
     """
     K1 = path_slots.shape[1]
@@ -406,4 +412,5 @@ def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc):
                 idx = idx.reshape((1, -1, 1) + (1,) * (st.ndim - 3))
                 return jnp.take_along_axis(st, idx, axis=2)[:, :, 0]
             new_cache[pos] = {k: sel(v) for k, v in entry.items()}
-    return new_cache, lengths + acc
+    adv = acc if active is None else jnp.where(active, acc, 0)
+    return new_cache, lengths + adv

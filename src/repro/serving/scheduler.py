@@ -1,29 +1,50 @@
-"""Serving engine: static-slot continuous batching over the Medusa engine.
+"""Serving engine v2: static-slot continuous batching over the Medusa engine.
 
 Static-graph discipline (the paper's core constraint) shapes the design:
-the decode batch is B fixed slots; admission scatters a new request's
-prefilled cache rows into its slot (all shapes static, prompt lengths are
-bucketed so prefill compiles once per bucket); every decode step runs all
-B slots with per-slot lengths — empty slots carry a dummy row and are
-masked out at the bookkeeping level, never in tensor shapes.
+the decode batch is B fixed slots; every decode step runs all B slots with
+per-slot lengths — empty slots carry a dummy row and are masked out of the
+commit (``spec_step(..., active=...)``), never out of tensor shapes.
+
+Scheduler v2 (DESIGN.md §9) replaces v1's per-request host loops with two
+batched device paths:
+
+* **Batched bucketed prefill** — each admission round groups every queued
+  request by prompt bucket and prefills a whole bucket group in ONE jitted
+  call of shape [n_bucket, bucket] (group sizes padded to powers of two so
+  the compile count stays O(log B) per bucket).  The same call merges the
+  freshly prefilled cache rows into their slots with a single fused
+  gather + select per cache leaf (the ``_update_rows`` idiom: a slot-indexed
+  gather from the small group batch plus a ``where`` on the slot mask, which
+  the SPMD partitioner keeps local, unlike a scatter).
+* **On-device bookkeeping** — per-slot ``n_out``, ``max_new``, ``eos_id``
+  and the EOS scan over each step's accepted tokens live inside the jitted
+  step; finished slots are masked out of the commit and the host only syncs
+  a small per-step verdict struct (``SlotSync``: acc/tokens/done).
+  Reaping and slot refill happen in batches on the host side of that sync.
 
 Fault tolerance / straggler mitigation: per-request step budgets and
 deadlines; a request that exceeds them is cancelled and its slot freed; a
 failed step (injectable for tests) re-queues every in-flight request so a
 restarted server loses no work (at-least-once semantics).
+
+``admission="serial"`` keeps the v1 per-request admission path (one
+[1, bucket] prefill call plus a host-side cache insert per request) for the
+equality tests and the `benchmarks/bench_serving.py` comparison.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SpecEngine
+
+NO_EOS = -1  # device-side "no eos configured" sentinel (token ids are >= 0)
 
 
 @dataclass
@@ -50,10 +71,26 @@ class _Slot:
         return self.request is None
 
 
+class SlotSync(NamedTuple):
+    """The only per-step device->host sync: three [B]-sized fields."""
+    acc: jnp.ndarray        # [B] int32 — tokens to append (EOS/budget-clipped)
+    tokens: jnp.ndarray     # [B, K+1] int32 — this step's committed path
+    done: jnp.ndarray       # [B] bool — slot finished (EOS hit or budget met)
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 class MedusaServer:
     def __init__(self, engine: SpecEngine, params, medusa_params,
                  batch_slots: int, max_len: int,
-                 prompt_buckets=(32, 128, 512), max_retries: int = 1):
+                 prompt_buckets=(32, 128, 512), max_retries: int = 1,
+                 admission: str = "batched"):
+        assert admission in ("batched", "serial"), admission
         self.engine = engine
         self.cfg = engine.cfg
         self.model = engine.model
@@ -61,23 +98,40 @@ class MedusaServer:
         self.medusa_params = medusa_params
         self.B = batch_slots
         self.max_len = max_len
-        self.buckets = tuple(sorted(prompt_buckets))
+        # a bucket wider than the cache cannot be prefilled (the padded
+        # [n, bucket] write would overrun [n, max_len] rows) — clamp to
+        # max_len so every prompt that fits the cache stays servable;
+        # prompts beyond the largest bucket are rejected at admission
+        self.buckets = tuple(sorted({min(b, max_len) for b in prompt_buckets}))
         self.max_retries = max_retries
+        self.admission = admission
 
         self.queue: deque[Request] = deque()
         self.slots = [_Slot() for _ in range(self.B)]
         self.done: Dict[int, Request] = {}
         self._rid = 0
+        self.stats = {"prefill_calls": 0, "admitted": 0, "steps": 0}
 
-        self.cache = self.model.init_cache(self.cfg, self.B, max_len)
-        self.lengths = jnp.ones((self.B,), jnp.int32)
-        K = max(engine.dtree.K, 1)
-        self.base = jnp.zeros((self.B,), jnp.int32)
-        self.mtok = jnp.zeros((self.B, K, engine.dtree.max_topk), jnp.int32)
+        self._reset_device_state()
         self._key = jax.random.PRNGKey(0)
 
-        self._prefill_jit = {}
-        self._step_jit = jax.jit(self.engine.spec_step)
+        # host mirrors of the per-slot device bookkeeping inputs
+        self._active = np.zeros((self.B,), bool)
+        self._eos = np.full((self.B,), NO_EOS, np.int32)
+        self._maxnew = np.zeros((self.B,), np.int32)
+        self._done_now = np.zeros((self.B,), bool)
+        self._slotmeta_dev = None   # device copies, refreshed only on mutation
+
+        # one jitted callable each; XLA re-specialises per input shape, so the
+        # [n_group, bucket] admission variants share a single cache here.
+        # The B-slot cache/state args are donated: the old buffers are dead
+        # after each call, so XLA aliases them instead of holding 2x cache.
+        self._admit_jit = jax.jit(self._admit_bucket_impl,
+                                  donate_argnums=(4, 5, 6, 7, 8))
+        self._prefill_jit = jax.jit(
+            lambda p, mp, t, l, c: self.engine.prefill(p, mp, t, l, c))
+        self._step_jit = jax.jit(self._serve_step_impl,
+                                 donate_argnums=(2, 3, 4, 5, 6))
 
     # ------------------------------------------------------------------ API
 
@@ -92,22 +146,109 @@ class MedusaServer:
     def result(self, rid: int) -> Optional[Request]:
         return self.done.get(rid)
 
+    @property
+    def busy(self) -> bool:
+        """True while any work is queued or in flight."""
+        return bool(self.queue) or any(not s.free for s in self.slots)
+
+    def step_once(self, fail_hook: Optional[Callable[[int], bool]] = None,
+                  it: int = 0):
+        """One scheduler iteration: batched admit -> decode step -> batched
+        reap. ``fail_hook(it)`` returning True simulates a step failure.
+
+        Admission sits inside the recovery scope: its jitted call donates the
+        slot state too, so a failure there must re-queue and rebuild exactly
+        like a failed decode step (requests attach to slots before prefill,
+        so ``_recover`` sees them)."""
+        try:
+            self._admit()
+            if fail_hook is not None and fail_hook(it):
+                raise RuntimeError("injected step failure")
+            self._decode_step()
+        except RuntimeError:
+            self._recover()
+        self._reap()
+
     def run(self, max_iters: int = 10_000,
             fail_hook: Optional[Callable[[int], bool]] = None):
-        """Drive until all work is done. ``fail_hook(iter)`` returning True
-        simulates a step failure (tests node-failure recovery)."""
+        """Drive until all work is done."""
         it = 0
-        while (self.queue or any(not s.free for s in self.slots)) and it < max_iters:
-            self._admit()
-            try:
-                if fail_hook is not None and fail_hook(it):
-                    raise RuntimeError("injected step failure")
-                self._decode_step()
-            except RuntimeError:
-                self._recover()
-            self._reap()
+        while self.busy and it < max_iters:
+            self.step_once(fail_hook, it)
             it += 1
         return it
+
+    def release_all(self):
+        """Cancel and resolve every queued and in-flight request (benchmark/
+        test helper; device state is dead until the slots are re-admitted)."""
+        for req in list(self.queue):
+            req.status = "cancelled"
+            self.done[req.rid] = req
+        self.queue.clear()
+        for slot in self.slots:
+            if slot.request is not None:
+                slot.request.status = "cancelled"
+                self.done[slot.request.rid] = slot.request
+                slot.request = None
+        self._active[:] = False
+        self._done_now[:] = False
+        self._slotmeta_dev = None
+
+    # ---------------------------------------------------- jitted device code
+
+    def _admit_bucket_impl(self, params, medusa_params, toks, plens,
+                           cache, lengths, base, mtok, n_out, src, mask):
+        """Prefill one bucket group [n, bucket] and merge it into the B-slot
+        state in the same compiled call.
+
+        src [B] int32: for each slot, its row in the group (garbage where
+        mask is False); mask [B] bool: slot receives a new request.  The
+        merge is a gather from the small group batch + elementwise select —
+        the scatter-free formulation ``_update_rows`` uses, which keeps a
+        seq-sharded cache local under SPMD.
+        """
+        n = toks.shape[0]
+        cache_n = self.model.init_cache(self.cfg, n, self.max_len)
+        cache_n, len_n, base_n, mtok_n, _ = self.engine.prefill(
+            params, medusa_params, toks, plens, cache_n)
+        srcc = jnp.clip(src, 0, n - 1)
+
+        def merge(big, small):
+            rows = jnp.take(small, srcc, axis=1).astype(big.dtype)
+            m = mask.reshape((1, -1) + (1,) * (big.ndim - 2))
+            return jnp.where(m, rows, big)
+
+        cache = jax.tree.map(merge, cache, cache_n)
+        lengths = jnp.where(mask, len_n[srcc], lengths)
+        base = jnp.where(mask, base_n[srcc], base)
+        mtok = jnp.where(mask[:, None, None], mtok_n[srcc], mtok)
+        n_out = jnp.where(mask, 0, n_out)
+        return cache, lengths, base, mtok, n_out
+
+    def _serve_step_impl(self, params, medusa_params, cache, lengths, base,
+                         mtok, n_out, key, active, eos_id, max_new):
+        """One masked speculative step + on-device bookkeeping.
+
+        EOS detection, budget clipping and the done mask are folded into the
+        compiled step so the host only reads the small ``SlotSync`` struct.
+        """
+        cache, lengths, verdict, mtok = self.engine.spec_step(
+            params, medusa_params, cache, lengths, base, mtok, key,
+            active=active)
+        K1 = verdict.path_tokens.shape[1]
+        pos = jnp.arange(K1)
+        within = pos[None, :] < verdict.acc[:, None]
+        is_eos = (within & (verdict.path_tokens == eos_id[:, None])
+                  & (eos_id != NO_EOS)[:, None])
+        has_eos = jnp.any(is_eos, axis=1)
+        eos_pos = jnp.argmax(is_eos, axis=1).astype(jnp.int32)
+        n_take = jnp.where(has_eos, eos_pos + 1, verdict.acc)
+        n_take = jnp.minimum(n_take, jnp.maximum(max_new - n_out, 0))
+        n_take = jnp.where(active, n_take, 0)
+        n_out = n_out + n_take
+        done = active & ((n_out >= max_new) | has_eos)
+        sync = SlotSync(n_take, verdict.path_tokens, done)
+        return cache, lengths, verdict.next_token, mtok, n_out, sync
 
     # ------------------------------------------------------------- internals
 
@@ -117,17 +258,70 @@ class MedusaServer:
                 return b
         return self.buckets[-1]
 
+    def _admit(self):
+        free = [i for i, s in enumerate(self.slots) if s.free]
+        take: List[Request] = []
+        while self.queue and len(take) < len(free):
+            req = self.queue.popleft()
+            # reject what cannot run losslessly: prompts that don't fit the
+            # cache budget, or exceed the largest prefill bucket (prefill
+            # would silently truncate the prompt but keep the full length)
+            if (len(req.prompt) + req.max_new + self.engine.dtree.T + 2 > self.max_len
+                    or len(req.prompt) > self.buckets[-1]):
+                req.status = "failed"
+                self.done[req.rid] = req
+                continue
+            take.append(req)
+        if not take:
+            return
+        pairs = list(zip(free, take))
+        for i, req in pairs:
+            req.status = "running"
+            self.slots[i].request = req
+            self._active[i] = True
+            self._eos[i] = NO_EOS if req.eos_id is None else req.eos_id
+            self._maxnew[i] = req.max_new
+        self._slotmeta_dev = None
+        self.stats["admitted"] += len(pairs)
+        if self.admission == "serial":
+            for i, req in pairs:
+                self._prefill_one(req, i)
+        else:
+            self._admit_batched(pairs)
+
+    def _admit_batched(self, pairs):
+        groups: Dict[int, list] = {}
+        for i, req in pairs:
+            groups.setdefault(self._bucket(len(req.prompt)), []).append((i, req))
+        for bucket, grp in groups.items():
+            n = _pow2(len(grp))
+            toks = np.zeros((n, bucket), np.int32)
+            plens = np.ones((n,), np.int32)      # padding rows: dummy length-1
+            src = np.zeros((self.B,), np.int32)
+            mask = np.zeros((self.B,), bool)
+            for j, (i, req) in enumerate(grp):
+                toks[j, : len(req.prompt)] = req.prompt[:bucket]
+                plens[j] = len(req.prompt)
+                src[i] = j
+                mask[i] = True
+            (self.cache, self.lengths, self.base, self.mtok,
+             self.n_out) = self._admit_jit(
+                self.params, self.medusa_params, jnp.asarray(toks),
+                jnp.asarray(plens), self.cache, self.lengths, self.base,
+                self.mtok, self.n_out, jnp.asarray(src), jnp.asarray(mask))
+            self.stats["prefill_calls"] += 1
+
     def _prefill_one(self, req: Request, slot_idx: int):
+        """v1 serial admission: one [1, bucket] prefill + host-side insert."""
         bucket = self._bucket(len(req.prompt))
         toks = np.zeros((1, bucket), np.int32)
         toks[0, : len(req.prompt)] = req.prompt[:bucket]
-        if bucket not in self._prefill_jit:
-            self._prefill_jit[bucket] = jax.jit(
-                lambda p, mp, t, l, c: self.engine.prefill(p, mp, t, l, c))
         cache1 = self.model.init_cache(self.cfg, 1, self.max_len)
         lengths1 = jnp.asarray([len(req.prompt)], jnp.int32)
-        cache1, lengths1, base1, mtok1, _ = self._prefill_jit[bucket](
+        cache1, lengths1, base1, mtok1, _ = self._prefill_jit(
             self.params, self.medusa_params, jnp.asarray(toks), lengths1, cache1)
+        self.stats["prefill_calls"] += 1
+
         # scatter the single-row cache into this slot (batch axis = 1)
         def insert(big, one):
             idx = (0, slot_idx) + (0,) * (big.ndim - 2)
@@ -136,52 +330,54 @@ class MedusaServer:
         self.lengths = self.lengths.at[slot_idx].set(lengths1[0])
         self.base = self.base.at[slot_idx].set(base1[0])
         self.mtok = self.mtok.at[slot_idx].set(mtok1[0])
-
-    def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if not slot.free or not self.queue:
-                continue
-            req = self.queue.popleft()
-            if len(req.prompt) + req.max_new + self.engine.dtree.T + 2 > self.max_len:
-                req.status = "failed"
-                self.done[req.rid] = req
-                continue
-            req.status = "running"
-            slot.request = req
-            self._prefill_one(req, i)
+        self.n_out = self.n_out.at[slot_idx].set(0)
 
     def _decode_step(self):
+        if not self._active.any():
+            return
         self._key, sub = jax.random.split(self._key)
-        self.cache, self.lengths, verdict, self.mtok = self._step_jit(
+        if self._slotmeta_dev is None:
+            self._slotmeta_dev = (jnp.asarray(self._active),
+                                  jnp.asarray(self._eos),
+                                  jnp.asarray(self._maxnew))
+        active, eos, maxnew = self._slotmeta_dev
+        (self.cache, self.lengths, self.base, self.mtok, self.n_out,
+         sync) = self._step_jit(
             self.params, self.medusa_params, self.cache, self.lengths,
-            self.base, self.mtok, sub)
-        self.base = verdict.next_token
-        accs = np.asarray(verdict.acc)
-        toks = np.asarray(verdict.path_tokens)
+            self.base, self.mtok, self.n_out, sub, active, eos, maxnew)
+        self.stats["steps"] += 1
+        acc = np.asarray(sync.acc)
+        toks = np.asarray(sync.tokens)
+        self._done_now = np.array(sync.done)   # copy: host-mutated at reap
         for i, slot in enumerate(self.slots):
             req = slot.request
             if req is None:
                 continue
             req.steps += 1
-            req.output.extend(int(t) for t in toks[i, : accs[i]])
+            req.output.extend(int(t) for t in toks[i, : acc[i]])
 
     def _reap(self):
+        """Batch-reap every slot the device marked done plus host-side
+        stragglers; freed slots refill together on the next ``_admit``."""
         now = time.monotonic()
-        for slot in self.slots:
+        freed = []
+        for i, slot in enumerate(self.slots):
             req = slot.request
             if req is None:
                 continue
-            hit_eos = req.eos_id is not None and req.eos_id in req.output
-            over = (len(req.output) >= req.max_new or hit_eos)
+            finished = bool(self._done_now[i])
             straggler = ((req.deadline_s and now - req.submitted_at > req.deadline_s)
                          or (req.max_steps and req.steps >= req.max_steps))
-            if over or straggler:
-                req.output = req.output[: req.max_new]
-                if req.eos_id is not None and req.eos_id in req.output:
-                    req.output = req.output[: req.output.index(req.eos_id) + 1]
-                req.status = "done" if over else "cancelled"
+            if finished or straggler:
+                # device already clipped output at the EOS token / budget
+                req.status = "done" if finished else "cancelled"
                 self.done[req.rid] = req
                 slot.request = None
+                freed.append(i)
+        if freed:
+            self._active[freed] = False
+            self._done_now[freed] = False
+            self._slotmeta_dev = None
 
     def _recover(self):
         """Node-failure recovery: re-queue all in-flight work (their caches
@@ -199,5 +395,18 @@ class MedusaServer:
                     req.status = "queued"
                     self.queue.appendleft(req)
                 slot.request = None
+        # rebuild EVERY donated device array: a failure raised after the
+        # jitted step dispatched has already invalidated the old buffers
+        self._reset_device_state()
+        self._active[:] = False
+        self._done_now[:] = False
+        self._slotmeta_dev = None
+
+    def _reset_device_state(self):
+        """(Re)create all per-slot device arrays that jitted calls donate."""
         self.cache = self.model.init_cache(self.cfg, self.B, self.max_len)
         self.lengths = jnp.ones((self.B,), jnp.int32)
+        K = max(self.engine.dtree.K, 1)
+        self.base = jnp.zeros((self.B,), jnp.int32)
+        self.mtok = jnp.zeros((self.B, K, self.engine.dtree.max_topk), jnp.int32)
+        self.n_out = jnp.zeros((self.B,), jnp.int32)

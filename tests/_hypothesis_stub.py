@@ -1,0 +1,57 @@
+"""Property-testing shim: re-exports hypothesis when installed, otherwise a
+tiny deterministic random-sampling stand-in (no shrinking, fixed seed) so
+``pytest -q`` collects and runs on minimal installs.
+
+Only the strategy surface the suite uses is implemented: ``st.integers``,
+``st.lists``, ``st.tuples`` and ``.map``.  Install ``hypothesis`` (see
+requirements-dev.txt) to get real property testing.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # minimal install: sampling fallback
+    HAVE_HYPOTHESIS = False
+    import random
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+        def map(self, fn):
+            return _Strategy(lambda r: fn(self.sample(r)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda r: [elements.sample(r)
+                                        for _ in range(r.randint(min_size, max_size))])
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(lambda r: tuple(e.sample(r) for e in elements))
+
+    st = _Strategies()
+
+    class settings:
+        def __init__(self, max_examples=20, deadline=None, **_):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._max_examples = self.max_examples
+            return fn
+
+    def given(*strategies):
+        def deco(fn):
+            # zero-arg signature: pytest must not see fn's params as fixtures
+            def wrapper():
+                r = random.Random(0)
+                for _ in range(getattr(wrapper, "_max_examples", 20)):
+                    fn(*[s.sample(r) for s in strategies])
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -1,7 +1,7 @@
 """Data pipeline properties (paper §4.2 knobs)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.training import data as D
 

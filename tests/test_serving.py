@@ -84,6 +84,121 @@ def test_retry_budget_exhaustion(served, rng):
     assert srv.result(rid).status == "failed"
 
 
+def test_batched_admission_matches_serial(served, rng):
+    """Scheduler v2 batched bucketed prefill is token-identical to v1-style
+    serial admission for the same request set (greedy acceptance)."""
+    cfg, m, params, eng, mp = served
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 40, 9, 100, 17, 3)]   # spans two prompt buckets
+    outs = {}
+    for mode in ("serial", "batched"):
+        srv = MedusaServer(eng, params, mp, batch_slots=4, max_len=256,
+                           admission=mode)
+        rids = [srv.submit(p, max_new=10) for p in prompts]
+        srv.run()
+        for rid in rids:
+            assert srv.result(rid).status == "done"
+        outs[mode] = [srv.result(rid).output for rid in rids]
+    assert outs["batched"] == outs["serial"]
+    # batched mode admits bucket groups, not requests: fewer prefill calls
+    assert srv.stats["prefill_calls"] < len(prompts)
+
+
+def test_eos_reaped_on_device(served, rng):
+    """EOS detection runs inside the jitted step: outputs arrive already
+    truncated at the first EOS for several slots finishing independently."""
+    cfg, m, params, eng, mp = served
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (6, 11)]
+    expected, eos_ids = [], []
+    for p in prompts:
+        ar, _ = ar_generate(cfg, params, jnp.asarray(p)[None],
+                            jnp.asarray([len(p)], jnp.int32),
+                            m.init_cache(cfg, 1, 256), 12)
+        toks = np.asarray(ar)[0].tolist()
+        eos = toks[5]                      # force an EOS hit mid-stream
+        eos_ids.append(eos)
+        expected.append(toks[: toks.index(eos) + 1])
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256)
+    rids = [srv.submit(p, max_new=12, eos_id=e)
+            for p, e in zip(prompts, eos_ids)]
+    srv.run()
+    for rid, exp in zip(rids, expected):
+        req = srv.result(rid)
+        assert req.status == "done"
+        assert req.output == exp
+
+
+def test_failure_recovery_under_batched_prefill(served, rng):
+    """Injected step failure with mixed-bucket batched admission: every
+    request is re-queued, re-admitted in batches, and completes losslessly."""
+    cfg, m, params, eng, mp = served
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 60, 9, 40, 3)]
+    clean = MedusaServer(eng, params, mp, batch_slots=3, max_len=256)
+    clean_rids = [clean.submit(p, max_new=6) for p in prompts]
+    clean.run()
+    srv = MedusaServer(eng, params, mp, batch_slots=3, max_len=256)
+    rids = [srv.submit(p, max_new=6) for p in prompts]
+    srv.run(fail_hook=lambda it: it == 1)
+    for rid, crid in zip(rids, clean_rids):
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 6
+        assert req.output == clean.result(crid).output
+
+
+def test_recovery_after_post_dispatch_failure(served, rng):
+    """A failure raised AFTER the jitted step dispatched (a real device
+    error) has already consumed the donated state buffers; recovery must
+    rebuild every one of them, not just the cache."""
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256,
+                       max_retries=2)
+    real_step = srv._step_jit
+    calls = {"n": 0}
+
+    def flaky(*args):
+        out = real_step(*args)        # inputs are donated (deleted) here
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("post-dispatch device failure")
+        return out
+
+    srv._step_jit = flaky
+    rids = [srv.submit(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32),
+                       max_new=6) for n in (5, 9, 14)]
+    srv.run()
+    for rid in rids:
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 6
+
+
+def test_recovery_after_admission_failure(served, rng):
+    """Batched admission donates the slot state too; a device failure raised
+    by the admission call must re-queue the attached requests and rebuild
+    state, same as a failed decode step."""
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256,
+                       max_retries=2)
+    real_admit = srv._admit_jit
+    calls = {"n": 0}
+
+    def flaky(*args):
+        out = real_admit(*args)       # inputs are donated (deleted) here
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("post-dispatch admission failure")
+        return out
+
+    srv._admit_jit = flaky
+    rids = [srv.submit(rng.integers(0, cfg.vocab_size, size=n).astype(np.int32),
+                       max_new=6) for n in (5, 9, 14)]
+    srv.run()
+    for rid in rids:
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 6
+
+
 def test_oversized_prompt_rejected(served, rng):
     cfg, m, params, eng, mp = served
     srv = MedusaServer(eng, params, mp, batch_slots=1, max_len=64)
@@ -91,3 +206,34 @@ def test_oversized_prompt_rejected(served, rng):
                      max_new=40)
     srv.run()
     assert srv.result(rid).status == "failed"
+
+
+def test_prompt_beyond_largest_bucket_rejected(served, rng):
+    """A prompt longer than the largest prefill bucket cannot be prefilled
+    losslessly (it would be silently truncated) — rejected at admission."""
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=1, max_len=256,
+                       prompt_buckets=(8, 16))
+    rid = srv.submit(rng.integers(0, cfg.vocab_size, size=40).astype(np.int32),
+                     max_new=4)
+    ok = srv.submit(rng.integers(0, cfg.vocab_size, size=12).astype(np.int32),
+                    max_new=4)
+    srv.run()
+    assert srv.result(rid).status == "failed"
+    assert srv.result(ok).status == "done" and len(srv.result(ok).output) == 4
+
+
+def test_bucket_wider_than_cache_clamped(served, rng):
+    """Default buckets include 512; with max_len=256 that bucket is clamped
+    to 256, so a 150-token prompt (which fits the cache) is served instead
+    of crashing prefill with an over-wide padded write."""
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256)
+    assert srv.buckets == (32, 128, 256)
+    big = srv.submit(rng.integers(0, cfg.vocab_size, size=150).astype(np.int32),
+                     max_new=8)
+    ok = srv.submit(rng.integers(0, cfg.vocab_size, size=10).astype(np.int32),
+                    max_new=4)
+    srv.run()
+    assert srv.result(big).status == "done" and len(srv.result(big).output) == 8
+    assert srv.result(ok).status == "done" and len(srv.result(ok).output) == 4

@@ -1,7 +1,7 @@
 """Property tests of the static tree topology (paper §3.2 buffers)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.tree import (MC_SIM_7B_63, build_tree, cartesian_tree,
                              chain_tree, medusa_63)
