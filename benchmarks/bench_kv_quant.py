@@ -1,0 +1,95 @@
+"""Int8 KV-cache quantization benchmark (DESIGN.md §10).
+
+Three measurements on the trained CPU-sized stack:
+
+* **bytes/step** — the memory model's per-step cache-sweep traffic term,
+  ``kv_cache_bytes_per_token() * context``, for the fp vs int8 layouts
+  (the paper's Memory Wall: decode time ~ bytes swept per emitted token).
+* **accepted-length drift** — mean accepted tokens per spec step under the
+  int8 cache vs fp.  Greedy acceptance is exact-match on argmax, so
+  quantization can only shorten accepted paths, never corrupt output; the
+  acceptance gate is drift < 5% (on the trained stack it is typically 0).
+* **slot capacity** — decode slots a fixed HBM cache budget sustains at
+  ``MAX_LEN`` (``serving.scheduler.slots_for_budget``); gate >= 1.8x for
+  int8 vs fp16/bf16.
+
+  PYTHONPATH=src python -m benchmarks.bench_kv_quant
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit, trained_stack
+from repro.configs.registry import get_config
+from repro.core.engine import SpecEngine, ar_generate
+from repro.core.tree import cartesian_tree
+from repro.serving.scheduler import cache_bytes_per_slot, slots_for_budget
+
+B, PROMPT, NEW = 4, 16, 32
+MAX_LEN = 2048                      # capacity-planning context
+HBM_BUDGET = 1 << 30                # 1 GiB cache budget for the slot table
+
+
+def run():
+    rows = []
+
+    # --- capacity: bytes/slot and slots at fixed budget (paper-scale cfg) ---
+    pangu = get_config("openpangu-7b")
+    per = {}
+    for cd in ("bfloat16", "int8"):
+        c = dataclasses.replace(pangu, cache_dtype=cd)
+        bps = cache_bytes_per_slot(c, MAX_LEN)
+        per[cd] = bps
+        rows.append((f"kv_quant/bytes_per_slot/{cd}", 0.0,
+                     f"{bps / 2**20:.1f}MiB@L{MAX_LEN}"))
+        rows.append((f"kv_quant/slots@1GiB/{cd}", 0.0,
+                     f"{slots_for_budget(c, MAX_LEN, HBM_BUDGET)}"))
+    gain = per["bfloat16"] / per["int8"]
+    rows.append(("kv_quant/slot_capacity_gain", 0.0, f"{gain:.2f}x"))
+    assert gain >= 1.8, f"slot-capacity gain {gain:.2f}x < 1.8x gate"
+
+    # --- bytes/step traffic at decode contexts -----------------------------
+    for L in (512, 2048, 32768):
+        for cd in ("bfloat16", "int8"):
+            c = dataclasses.replace(pangu, cache_dtype=cd)
+            rows.append((f"kv_quant/bytes_per_step/L{L}/{cd}", 0.0,
+                         f"{c.kv_cache_bytes_per_token() * L / 2**20:.1f}MiB"))
+
+    # --- accepted-length drift + wall time on the trained stack ------------
+    cfg, model, params, mp, corpus, _ = trained_stack()
+    tb = cartesian_tree((4, 2, 1))
+    prompt = jnp.asarray(corpus[:B, :PROMPT].astype(np.int32))
+    lengths = jnp.full((B,), PROMPT, jnp.int32)
+    S_MAX = PROMPT + NEW + tb.T + 8
+    ac, toks = {}, {}
+    for cd in ("", "int8"):
+        c = dataclasses.replace(cfg, cache_dtype=cd)
+        eng = SpecEngine(c, tb)
+        out, n_out, stats = eng.generate(params, mp, prompt, lengths,
+                                         model.init_cache(c, B, S_MAX), NEW)
+        steps = max(int(stats.steps), 1)
+        ac[cd] = float(np.mean(np.asarray(n_out))) / steps
+        toks[cd] = np.asarray(out)
+        t = timeit(lambda: eng.generate(params, mp, prompt, lengths,
+                                        model.init_cache(c, B, S_MAX), NEW),
+                   iters=3, warmup=1)
+        name = cd or "fp"
+        rows.append((f"kv_quant/accepted_len/{name}", t * 1e6, f"{ac[cd]:.3f}"))
+        # losslessness under each layout: spec == AR on the same cache dtype
+        ar, _ = ar_generate(c, params, prompt, lengths,
+                            model.init_cache(c, B, S_MAX), NEW)
+        assert (np.asarray(ar) == toks[cd]).all(), f"{name}: spec != AR"
+    drift = abs(1.0 - ac["int8"] / ac[""])
+    rows.append(("kv_quant/accepted_len_drift", 0.0, f"{drift * 100:.2f}%"))
+    assert drift < 0.05, f"accepted-length drift {drift:.3f} >= 5% gate"
+    rows.append(("kv_quant/token_identical_int8_vs_fp", 0.0,
+                 f"{bool((toks[''] == toks['int8']).all())}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -125,6 +125,7 @@ def run():
     speedup = t_mode["serial"] / t_mode["batched"]
     rows.append((f"serving/admit{N_QUEUED}/batched_speedup", 0.0,
                  f"{speedup:.2f}x"))
+    assert speedup >= 1.5, f"admission speedup {speedup:.2f}x < 1.5x gate"
 
     srv = MedusaServer(eng, params, mp, batch_slots=8, max_len=MAX_LEN,
                        admission="batched")

@@ -53,11 +53,13 @@ class ModelConfig:
     frontend: str = ""             # "" | "vit" | "conv_audio"
     frontend_len: int = 0          # number of precomputed prefix embeddings
     frontend_dim: int = 0          # raw embedding dim of the stub output (0 => d_model)
-    # --- speculative decoding mode (DESIGN.md §Arch-applicability) ---
+    # --- speculative decoding mode (DESIGN.md §4) ---
     spec_mode: str = "tree"        # tree | chain
     # --- numerics ---
     dtype: str = "bfloat16"        # activation / inference weight dtype
     param_dtype: str = "float32"   # training master weight dtype
+    cache_dtype: str = ""          # KV-cache storage dtype; "" => dtype;
+                                   # "int8" => quantized layout (DESIGN.md §10)
     max_position: int = 1 << 20    # rope table upper bound (lazy — computed per call)
     # --- attention flavour ---
     full_attention: bool = True    # False for ssm; hybrid is "not full" (sub-quadratic)
@@ -105,6 +107,19 @@ class ModelConfig:
     @property
     def is_subquadratic(self) -> bool:
         return self.family in ("ssm", "hybrid")
+
+    @property
+    def resolved_cache_dtype(self) -> str:
+        """Storage dtype of the attention KV cache (DESIGN.md §10)."""
+        return self.cache_dtype or self.dtype
+
+    def kv_cache_bytes_per_token(self) -> int:
+        """Bytes of attention KV cache per committed token across all layers
+        (k+v values plus, for int8, the per-head-per-row f32 scales) — the
+        per-step sweep traffic term of the memory model (DESIGN.md §10)."""
+        from repro.kernels.quant import cache_bytes_per_token
+        return self.num_attn_layers * cache_bytes_per_token(
+            self.num_kv_heads, self.resolved_head_dim, self.resolved_cache_dtype)
 
 
 def reduce(cfg: ModelConfig, **overrides) -> ModelConfig:

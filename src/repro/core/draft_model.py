@@ -30,6 +30,13 @@ class DraftSpecEngine:
         self.tb = chain_tree(gamma)
         self.dtree = V.device_tree(self.tb)
 
+    def init_caches(self, batch: int, max_len: int):
+        """(target_cache, draft_cache) for ``batch`` rows, each honouring its
+        own ``cfg.cache_dtype`` (DESIGN.md §10) — the two caches may use
+        different storage layouts (e.g. int8 target, fp draft)."""
+        return (self.tm.init_cache(self.tc, batch, max_len),
+                self.dm.init_cache(self.dc, batch, max_len))
+
     def _draft_chain(self, dparams, dcache, dlengths, base):
         """Draft proposes gamma tokens AR-style. Returns (tokens [B,gamma], dcache').
 

@@ -9,6 +9,12 @@ identical every iteration (the NPU "Static Shape" contract, natively XLA).
 ``ar_generate`` is the autoregressive baseline sharing the same cache
 machinery (T=1 decode), used for the paper's speedup/overhead metrics and
 for the losslessness test (greedy Medusa == greedy AR, token for token).
+
+Cache storage dtype (``cfg.cache_dtype``, DESIGN.md §10) threads through
+every path here implicitly: ``init_cache`` builds the int8 layout, prefill
+and the T=1/T=T decode steps quantize on write, ``commit`` re-quantizes the
+accepted rows, and the losslessness invariant is preserved because both
+engines read identical (fake-quantized) values.
 """
 from __future__ import annotations
 
@@ -49,6 +55,11 @@ class SpecEngine:
         self.deferred = deferred and cfg.family != "encdec"
         self.accept = accept
         self.temperature = temperature
+
+    def init_cache(self, batch: int, max_len: int):
+        """Decode cache for ``batch`` slots honouring ``cfg.cache_dtype``
+        (int8 layout halves cache bytes per slot — DESIGN.md §10)."""
+        return self.model.init_cache(self.cfg, batch, max_len)
 
     # -- one-shot pieces (jit-friendly pure functions) ----------------------
 
@@ -182,12 +193,19 @@ def ar_generate(cfg: ModelConfig, params, tokens, prompt_lengths, cache,
 
 
 def _squeeze_spec(model, cfg, spec_cache, lengths):
-    """Collapse the per-prefix T axis of SSM spec states for T=1 decode."""
+    """Collapse the per-prefix T axis of SSM spec states for T=1 decode.
+
+    Attn entries drop only the in-flight ``*_new`` rows; persistent leaves
+    (k/v and, under the int8 cache layout, k_scale/v_scale — DESIGN.md §10)
+    pass through untouched.
+    """
+    def keep(entry):
+        return {n: x for n, x in entry.items() if not n.endswith("_new")}
+
     def fix_entry(entry):
         if "k" in entry:
-            return {"k": entry["k"], "v": entry["v"]}   # drop in-flight rows
+            return keep(entry)
         return {k: v[:, :, 0] for k, v in entry.items()}
     if cfg.family == "encdec":
-        return {"self": {"k": spec_cache["self"]["k"], "v": spec_cache["self"]["v"]},
-                "cross": spec_cache["cross"]}
+        return {"self": keep(spec_cache["self"]), "cross": spec_cache["cross"]}
     return {k: fix_entry(v) for k, v in spec_cache.items()}

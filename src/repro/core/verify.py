@@ -31,6 +31,12 @@ class DeviceTree(NamedTuple):
 
 
 def device_tree(tb: TreeBuffers) -> DeviceTree:
+    """Upload the offline numpy tree buffers as device constants.
+
+    tb: ``core.tree.TreeBuffers`` -> DeviceTree with mask [T, T] bool,
+    depths [T] int32, node_head/node_choice [T-1] int32, retrieve
+    [P, K+1] int32, retrieve_valid [P, K+1] bool (shapes fixed for the
+    lifetime of the compiled step — DESIGN.md §2)."""
     return DeviceTree(
         mask=jnp.asarray(tb.mask), depths=jnp.asarray(tb.depths),
         node_head=jnp.asarray(tb.node_head), node_choice=jnp.asarray(tb.node_choice),
@@ -41,9 +47,9 @@ def device_tree(tb: TreeBuffers) -> DeviceTree:
 def generate_candidates(base_token, medusa_tok, dt: DeviceTree):
     """Assemble the tree token tensor.
 
-    base_token [B] (the certain next token), medusa_tok [B, K, max_topk]
-    (per-head top-k) -> candidates [B, T] via the static ``tree_indices``
-    mapping (node -> (head, slot) gather).
+    base_token [B] int32 (the certain next token), medusa_tok
+    [B, K, max_topk] int32 (per-head top-k) -> candidates [B, T] int32 via
+    the static ``tree_indices`` mapping (node -> (head, slot) gather).
     """
     B = base_token.shape[0]
     if dt.T == 1:
@@ -73,8 +79,14 @@ def _select(acc_per_path, cand_paths, pred_paths, dtree):
 
 
 def greedy_verify(candidates, logits, dtree: DeviceTree) -> Verdict:
-    """Lossless greedy acceptance: a node is accepted iff its token equals the
-    backbone argmax at its parent.  candidates [B, T], logits [B, T, V]."""
+    """Lossless greedy acceptance: a node is accepted iff its token equals
+    the backbone argmax at its parent.
+
+    candidates [B, T] int32, logits [B, T, V] f32/bf16 -> Verdict (all [B]-
+    leading int32 fields, see the NamedTuple).  Acceptance is exact-match on
+    argmax, so it commutes with any deterministic cache transform — int8 KV
+    quantization can only shorten accepted paths, never corrupt output
+    (DESIGN.md §10)."""
     argm = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # [B, T]
     cand_paths = candidates[:, dtree.retrieve]                 # [B, P, K+1]
     pred_paths = argm[:, dtree.retrieve]
@@ -87,7 +99,11 @@ def typical_verify(candidates, logits, dtree: DeviceTree, key,
                    temperature: float = 0.7, eps: float = 0.3,
                    delta: float = 0.09) -> Verdict:
     """Medusa's typical-acceptance criterion: accept candidate x at a node if
-    p(x|parent) >= min(eps, delta * exp(-H(p))) under temperature sampling."""
+    p(x|parent) >= min(eps, delta * exp(-H(p))) under temperature sampling.
+
+    candidates [B, T] int32, logits [B, T, V] f32/bf16, key: PRNG for the
+    bonus-token draw -> Verdict; ``next_token`` is sampled from the typical
+    set at the last accepted node rather than argmax."""
     f32 = logits.astype(jnp.float32) / max(temperature, 1e-4)
     logp = jax.nn.log_softmax(f32, axis=-1)                    # [B, T, V]
     H = -jnp.sum(jnp.exp(logp) * logp, axis=-1)                # [B, T]
@@ -110,12 +126,13 @@ def typical_verify(candidates, logits, dtree: DeviceTree, key,
     last_H = -jnp.sum(jnp.exp(last_logp) * last_logp, axis=-1)
     cut = jnp.log(jnp.minimum(eps, delta * jnp.exp(-last_H)))[:, None]
     trimmed = jnp.where(last_logp >= cut, last_logp, -jnp.inf)
-    # guard: keep at least the argmax
-    amax = jnp.argmax(last_logp, axis=-1)
+    # degenerate trim (the threshold can exceed even max(logp) in f32 at
+    # extreme temperatures, leaving an all -inf row): fall back to a point
+    # mass on the argmax so `categorical` stays well-defined
+    argmax_only = jnp.where(jax.nn.one_hot(jnp.argmax(last_logp, axis=-1),
+                                           logits.shape[-1], dtype=bool),
+                            0.0, -jnp.inf)
     trimmed = jnp.where(jnp.all(jnp.isinf(trimmed), axis=-1, keepdims=True),
-                        jax.nn.one_hot(amax, logits.shape[-1], dtype=jnp.float32) * 0
-                        + jnp.where(jax.nn.one_hot(amax, logits.shape[-1], dtype=bool),
-                                    0.0, -jnp.inf),
-                        trimmed)
+                        argmax_only, trimmed)
     next_tok = jax.random.categorical(key, trimmed, axis=-1).astype(jnp.int32)
     return v._replace(next_token=next_tok)

@@ -5,7 +5,8 @@ multiplies the currently held x-chunk against the matching W row-block while
 the next chunk is in flight on a ``collective_permute`` — the pattern XLA's
 latency-hiding scheduler overlaps (the TPU analogue of the paper's concern
 that communication must never stall the static pipeline).  Used as a
-drop-in for TP projections during the §Perf iterations.
+drop-in for TP projections in the distributed-optimization work of
+DESIGN.md §7.
 """
 from __future__ import annotations
 

@@ -65,7 +65,10 @@ def cache_pspecs(cache_abstract, cfg: ModelConfig, shape: ShapeConfig,
     batch = None if b1 else ba
 
     def spec(role, arr):
-        if role in ("k", "v"):
+        if role in ("k", "v", "k_scale", "v_scale"):
+            # int8-layout scales [nu, B, S, Hkv, 1] shard with their values
+            # along the KV-seq axis (DESIGN.md §10): a kernel block fetch
+            # finds block + scale column on the same shard
             axes = (None, batch, kvseq, None, None)
         elif role == "cross":
             axes = (None, batch, None, None, None)

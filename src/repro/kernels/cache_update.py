@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: in-place KV-cache commit (§Perf hillclimb 1, iter 3).
+"""Pallas TPU kernel: in-place KV-cache commit (traffic model: DESIGN.md
+§6; bytes/step accounting: DESIGN.md §10).
 
 The pure-XLA commit (gather + select) rewrites the whole cache shard every
 step (read+write = 2 full passes over k and v).  On TPU the committed rows
@@ -29,8 +30,10 @@ def _kernel(lens_ref, rows_ref, cache_ref, out_ref, sem, *, K1: int):
 
 
 def commit_rows(cache, rows, lengths, *, interpret: bool | None = None):
-    """cache [B,S,H,D] (donated), rows [B,K1,H,D], lengths [B] int32.
-    Writes rows at [lengths[b], lengths[b]+K1) in place; returns cache."""
+    """cache [B, S, H, D] any dtype (donated), rows [B, K1, H, D] (cast to
+    cache dtype), lengths [B] int32.  Writes rows at
+    [lengths[b], lengths[b]+K1) in place via per-row async DMA; returns
+    cache.  Traffic is O(K1 rows), not O(cache)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, S, H, D = cache.shape
@@ -56,9 +59,26 @@ def commit_rows(cache, rows, lengths, *, interpret: bool | None = None):
 
 
 def commit_rows_stacked(cache, rows, lengths, **kw):
-    """cache [nu,B,S,H,D], rows [nu,B,K1,H,D], lengths [B]: fold nu into B."""
+    """cache [nu, B, S, H, D], rows [nu, B, K1, H, D], lengths [B] int32:
+    fold nu into B and commit in one grid."""
     nu, B = cache.shape[:2]
     out = commit_rows(cache.reshape((nu * B,) + cache.shape[2:]),
                       rows.reshape((nu * B,) + rows.shape[2:]),
                       jnp.tile(lengths, nu), **kw)
     return out.reshape(cache.shape)
+
+
+def commit_rows_quantized(cache, scale_cache, rows, lengths, **kw):
+    """In-place commit into the int8 cache layout (DESIGN.md §10).
+
+    cache [B, S, H, D] int8 (donated), scale_cache [B, S, H, 1] f32
+    (donated), rows [B, K1, H, D] fp, lengths [B] int32.  Quantization is
+    fused into the commit path: rows quantize once on-device and the two
+    per-row async-DMA writes (values + scales) replace the single fp write —
+    total committed traffic O(K1 rows) at ~half the fp byte count.
+    Returns (cache, scale_cache).
+    """
+    from repro.kernels.quant import quantize_rows
+    qrows, srows = quantize_rows(rows)
+    return (commit_rows(cache, qrows, lengths, **kw),
+            commit_rows(scale_cache, srows, lengths, **kw))

@@ -2,16 +2,17 @@
 semantics = (cache sweep via kernel) ⊕ (tiny tree block) merged exactly via
 partial-softmax stats.
 
-On non-TPU backends the kernel runs in interpret mode (tests); the jnp tree
-block and the merge are backend-agnostic.
+Accepts both cache layouts (DESIGN.md §10): fp k/v, or int8 k/v with
+per-head-per-row f32 scales.  On non-TPU backends the kernel runs in
+interpret mode (tests); the jnp tree block and the merge are
+backend-agnostic.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import quant as Q
 from repro.kernels.tree_attention import flash_decode
 
 
@@ -23,26 +24,27 @@ def _pick_block(S: int):
 
 
 def tree_attention(q, k, v, tree_mask, lengths, scale, *,
-                   k_tree=None, v_tree=None,
+                   k_scale=None, v_scale=None, k_tree=None, v_tree=None,
                    block_s: int | None = None, interpret: bool | None = None):
-    """q [B,T,Hq,D]; k/v [B,S,Hkv,D] (tree rows already written at
-    [lengths, lengths+T)); tree_mask [T,T] bool; lengths [B] or scalar.
-    Pass ``k_tree/v_tree`` [B,T,Hkv,D] (the in-flight tree rows) to skip the
-    gather from a potentially seq-sharded cache. Returns [B,T,Hq,D]."""
+    """Tree-decode attention over a committed cache plus T in-flight rows.
+
+    q [B, T, Hq, D] f32/bf16; k/v [B, S, Hkv, D] — fp, or int8 with
+    ``k_scale``/``v_scale`` [B, S, Hkv, 1] f32 (the int8 cache layout,
+    DESIGN.md §10); tree rows already written at [lengths, lengths+T).
+    tree_mask [T, T] bool; lengths [B] int32 or scalar.  Pass
+    ``k_tree``/``v_tree`` [B, T, Hkv, D] fp (the in-flight tree rows —
+    fake-quantized by the caller under int8) to skip the gather from a
+    potentially seq-sharded cache.  Returns [B, T, Hq, D] in q.dtype.
+    """
     B, T, Hq, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
+    quantized = k.dtype == jnp.int8
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
-
-    bs = block_s or _pick_block(S)
-    if bs is None:  # pad tiny/odd caches (tests); pads are masked by length
-        bs = 128
-        pad_s = (-S) % bs
-        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
-        S += pad_s
+    # tiny/odd caches fall through to flash_decode's pad/clamp path
+    bs = block_s or _pick_block(S) or 128
 
     # fold q: [B,T,Hq,D] -> [B,Hkv,R,D], row r = g*T_pad + t
     T_pad = T
@@ -53,15 +55,22 @@ def tree_attention(q, k, v, tree_mask, lengths, scale, *,
     qf = qf.reshape(B, Hkv, G * T_pad, D) * jnp.asarray(scale, q.dtype)
     kt = k.transpose(0, 2, 1, 3)                            # [B,Hkv,S,D]
     vt = v.transpose(0, 2, 1, 3)
+    kst = k_scale.transpose(0, 2, 1, 3) if quantized else None
+    vst = v_scale.transpose(0, 2, 1, 3) if quantized else None
 
-    acc1, m1, l1 = flash_decode(qf, kt, vt, lengths, block_s=bs,
-                                interpret=interpret)        # [B,Hkv,R,D] f32
+    acc1, m1, l1 = flash_decode(qf, kt, vt, lengths, k_scale=kst, v_scale=vst,
+                                block_s=bs, interpret=interpret)  # [B,Hkv,R,D] f32
 
     # --- tree block (tiny) --------------------------------------------------
     if k_tree is None:
         idx = (lengths[:, None] + jnp.arange(T))[:, :, None, None]
         k_tree = jnp.take_along_axis(k, idx, axis=1)        # [B,T,Hkv,D]
         v_tree = jnp.take_along_axis(v, idx, axis=1)
+        if quantized:
+            ks_tree = jnp.take_along_axis(k_scale, idx, axis=1)
+            vs_tree = jnp.take_along_axis(v_scale, idx, axis=1)
+            k_tree = Q.dequantize(k_tree, ks_tree, q.dtype)
+            v_tree = Q.dequantize(v_tree, vs_tree, q.dtype)
     scores2 = jnp.einsum("bhrd,bthd->bhrt", qf, k_tree.astype(qf.dtype)).astype(jnp.float32)
     # row r sees tree col t' iff tree_mask[r % T_pad, t'] (pad rows: self only)
     row_mask = jnp.zeros((T_pad, T), bool).at[:T, :].set(tree_mask)

@@ -1,0 +1,64 @@
+"""Symmetric int8 KV-cache quantization helpers (DESIGN.md §10).
+
+The cache memory model: decode throughput on NPU/TPU is bound by cache
+bytes swept per step, so the int8 layout halves (vs bf16) the dominant
+traffic term.  Scales are per-head-per-row — one float32 per ``[Hkv]`` head
+per sequence slot — stored alongside the cache so a kernel block fetch
+brings its scales in the same DMA schedule.
+
+Layout convention (matching the cache pytree in ``models/transformer.py``):
+
+  * values  ``k``/``v``            [..., S, Hkv, D] int8
+  * scales  ``k_scale``/``v_scale`` [..., S, Hkv, 1] float32
+
+Quantization is *deterministic* (round-half-to-even, no stochastic
+rounding): the losslessness argument for greedy speculative decode requires
+that verification reads bit-identical values to what AR decode would read,
+which holds iff quant(x) is a pure function of x (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+_EPS = 1e-8  # all-zero rows: avoid 0/0, quantize to zeros with scale eps/127
+
+
+def quantize_rows(x):
+    """Symmetric per-head-per-row int8 quantization over the D axis.
+
+    x [..., Hkv, D] float -> (q [..., Hkv, D] int8, scale [..., Hkv, 1] f32)
+    with q = round(x / scale) clipped to [-127, 127], scale = amax(|x|)/127.
+    Deterministic (see module docstring); dequantize(q, scale) == the values
+    every later attention sweep over the cache will read.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / INT8_MAX
+    q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    """q [..., Hkv, D] int8, scale [..., Hkv, 1] f32 -> values [..., Hkv, D]
+    in ``dtype``.  Exact in float32 (|q| <= 127 and the product is a single
+    rounding), so fp32 test configs see one deterministic value per row."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def is_quantized(dtype) -> bool:
+    """True if ``dtype`` (str or jnp dtype) selects the int8 cache layout."""
+    return jnp.dtype(dtype) == jnp.int8
+
+
+def cache_bytes_per_token(num_kv_heads: int, head_dim: int, cache_dtype) -> int:
+    """KV-cache bytes per token per layer for one k+v pair.
+
+    fp16/bf16: 2 * Hkv * D * 2.  int8: 2 * Hkv * (D * 1 + 4) — one int8 per
+    element plus one f32 scale per head-row.  This is the bytes/step traffic
+    model used by ``benchmarks/bench_kv_quant.py`` and the slot-capacity
+    planner in ``serving/scheduler.py`` (DESIGN.md §10).
+    """
+    if is_quantized(cache_dtype):
+        return 2 * num_kv_heads * (head_dim + 4)
+    return 2 * num_kv_heads * head_dim * jnp.dtype(cache_dtype).itemsize

@@ -2,15 +2,22 @@
 
 Semantics: query node t attends to (a) every committed cache slot
 s < lengths[b] and (b) tree slots [lengths[b], lengths[b]+T) visible under
-``tree_mask`` — exactly ``layers.decode_mask``.
+``tree_mask`` — exactly ``layers.decode_mask``.  The int8 oracle
+(``tree_attention_ref_int8``) dequantizes the whole cache up front and
+reuses the fp oracle: the Pallas kernel's fused per-block dequant must match
+it to numerical tolerance (DESIGN.md §10).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import quant as Q
+
 
 def decode_mask_ref(tree_mask, lengths, S_max: int):
+    """tree_mask [T, T] bool, lengths [B] int32 -> visibility [B, T, S_max]
+    bool: committed past (s < length) plus the tree block under its mask."""
     T = tree_mask.shape[0]
     s_idx = jnp.arange(S_max)
 
@@ -24,8 +31,9 @@ def decode_mask_ref(tree_mask, lengths, S_max: int):
 
 
 def tree_attention_ref(q, k, v, tree_mask, lengths, scale):
-    """q [B,T,Hq,D]; k/v [B,S,Hkv,D] with tree rows already written at
-    [lengths, lengths+T).  Returns [B,T,Hq,D] in q.dtype."""
+    """q [B, T, Hq, D] f32/bf16; k/v [B, S, Hkv, D] fp with tree rows already
+    written at [lengths, lengths+T); lengths [B] int32.
+    Returns [B, T, Hq, D] in q.dtype."""
     B, T, Hq, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
@@ -37,3 +45,13 @@ def tree_attention_ref(q, k, v, tree_mask, lengths, scale):
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(q.dtype))
     return out.reshape(B, T, Hq, D)
+
+
+def tree_attention_ref_int8(q, k, v, k_scale, v_scale, tree_mask, lengths,
+                            scale):
+    """Int8-cache oracle: k/v [B, S, Hkv, D] int8 with k_scale/v_scale
+    [B, S, Hkv, 1] f32 (DESIGN.md §10); other args as ``tree_attention_ref``.
+    Dequantizes up front — the fused-dequant kernel path must agree."""
+    return tree_attention_ref(q, Q.dequantize(k, k_scale, q.dtype),
+                              Q.dequantize(v, v_scale, q.dtype),
+                              tree_mask, lengths, scale)

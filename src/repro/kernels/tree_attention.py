@@ -13,6 +13,12 @@ partial-softmax stats this kernel emits — the merge is exact.
 Layout: q is folded to [B, Hkv, R, D] with R = G*T rows (G = q heads per
 kv head, T = tree size padded to a multiple of 8) so the MXU tile contracts
 [R, D] x [D, BS] with hardware-aligned D (head_dim 64/128/256).
+
+Int8 KV path (DESIGN.md §10): when k/v arrive as int8 with per-head-per-row
+scales, each grid step DMAs the int8 block plus its [BS, 1] f32 scale
+column in the same schedule and dequantizes in VMEM right before the MXU
+dot — HBM traffic per step drops to ~(D+4)/(2*D) of the bf16 sweep while
+the online-softmax math stays in f32 exactly as in the fp path.
 """
 from __future__ import annotations
 
@@ -26,11 +32,19 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(lengths_ref,                       # scalar prefetch [B]
-            q_ref, k_ref, v_ref,               # VMEM blocks
-            out_ref, m_ref, l_ref,             # outputs
-            acc_ref, m_scr, l_scr,             # scratch
-            *, block_s: int, n_s: int):
+def _kernel(lengths_ref,                       # scalar prefetch [B] int32
+            q_ref, k_ref, v_ref, *rest,        # VMEM blocks (+ scales if int8)
+            block_s: int, n_s: int, quantized: bool):
+    """One (b, h, s) grid step of the cache sweep.
+
+    Block shapes (leading [1, 1] grid dims elided): q [R, D] f32/bf16
+    (pre-scaled by 1/sqrt(D)); k/v [BS, D] — fp, or int8 with ks/vs [BS, 1]
+    f32 scales; outputs acc [R, D] f32, m/l [R, 1] f32 partial-softmax stats.
+    """
+    if quantized:
+        ks_ref, vs_ref, out_ref, m_ref, l_ref, acc_ref, m_scr, l_scr = rest
+    else:
+        out_ref, m_ref, l_ref, acc_ref, m_scr, l_scr = rest
     b = pl.program_id(0)
     s = pl.program_id(2)
     length = lengths_ref[b]
@@ -46,8 +60,13 @@ def _kernel(lengths_ref,                       # scalar prefetch [B]
     @pl.when(s0 < length)
     def _compute():
         q = q_ref[0, 0]                        # [R, D]  (pre-scaled)
-        k = k_ref[0, 0]                        # [BS, D]
-        v = v_ref[0, 0]                        # [BS, D]
+        if quantized:
+            # fused dequant in VMEM: int8 block * [BS, 1] f32 scale column
+            k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]
+            v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+        else:
+            k = k_ref[0, 0]                    # [BS, D]
+            v = v_ref[0, 0]                    # [BS, D]
         scores = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)            # [R, BS]
@@ -73,17 +92,43 @@ def _kernel(lengths_ref,                       # scalar prefetch [B]
         l_ref[0, 0] = l_scr[...]
 
 
-def flash_decode(q, k, v, lengths, *, block_s: int = 512,
-                 interpret: bool = False):
+def _fit_blocks(S: int, block_s: int):
+    """(block_s', pad) such that block_s' divides S+pad and stays a multiple
+    of 128 lanes.  Replaces the former hard ``S % block_s == 0`` assert: a
+    non-multiple ``max_len`` (e.g. 640 with the default 512 block) now pads
+    up to the next block boundary instead of crashing; padded columns sit at
+    indices >= S >= lengths[b], so the in-kernel ``col < length`` mask
+    already zeroes them and no separate pad mask is needed."""
+    if S % block_s == 0:
+        return block_s, 0
+    if S < block_s:
+        block_s = max(-(-S // 128) * 128, 128)  # clamp: one (padded) block
+    return block_s, (-S) % block_s
+
+
+def flash_decode(q, k, v, lengths, *, k_scale=None, v_scale=None,
+                 block_s: int = 512, interpret: bool = False):
     """Partial-softmax decode attention over the committed cache region.
 
-    q [B, Hkv, R, D] (pre-scaled by 1/sqrt(D)); k/v [B, Hkv, S, D];
-    lengths [B] int32.  Returns (acc [B,Hkv,R,D] f32 — un-normalised,
-    m [B,Hkv,R,1] f32, l [B,Hkv,R,1] f32).
+    q [B, Hkv, R, D] f32/bf16 (pre-scaled by 1/sqrt(D)); lengths [B] int32.
+    k/v [B, Hkv, S, D] — either fp (f32/bf16), or int8 with
+    ``k_scale``/``v_scale`` [B, Hkv, S, 1] f32 per-head-per-row scales
+    (the int8 cache layout, DESIGN.md §10).  S need not be a multiple of
+    ``block_s``; see ``_fit_blocks``.  Returns un-normalised partial-softmax
+    stats (acc [B, Hkv, R, D] f32, m [B, Hkv, R, 1] f32, l [B, Hkv, R, 1]
+    f32) for the exact tree-block merge in ``ops.py``.
     """
     B, Hkv, R, D = q.shape
     S = k.shape[2]
-    assert S % block_s == 0, (S, block_s)
+    quantized = k.dtype == jnp.int8
+    assert quantized == (k_scale is not None), (k.dtype, k_scale is None)
+    block_s, pad_s = _fit_blocks(S, block_s)
+    if pad_s:
+        pad = ((0, 0), (0, 0), (0, pad_s), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        if quantized:
+            k_scale, v_scale = jnp.pad(k_scale, pad), jnp.pad(v_scale, pad)
+        S += pad_s
     n_s = S // block_s
 
     def q_map(b, h, s, lens):
@@ -97,14 +142,23 @@ def flash_decode(q, k, v, lengths, *, block_s: int = 512,
     def o_map(b, h, s, lens):
         return (b, h, 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, R, D), q_map),
+        pl.BlockSpec((1, 1, block_s, D), kv_map),
+        pl.BlockSpec((1, 1, block_s, D), kv_map),
+    ]
+    inputs = [q, k, v]
+    if quantized:
+        # scale columns ride the same index map as their k/v block, so the
+        # pipeline prefetches them in lock-step with the int8 block DMA
+        in_specs += [pl.BlockSpec((1, 1, block_s, 1), kv_map),
+                     pl.BlockSpec((1, 1, block_s, 1), kv_map)]
+        inputs += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hkv, n_s),
-        in_specs=[
-            pl.BlockSpec((1, 1, R, D), q_map),
-            pl.BlockSpec((1, 1, block_s, D), kv_map),
-            pl.BlockSpec((1, 1, block_s, D), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, R, D), o_map),
             pl.BlockSpec((1, 1, R, 1), o_map),
@@ -122,9 +176,10 @@ def flash_decode(q, k, v, lengths, *, block_s: int = 512,
         jax.ShapeDtypeStruct((B, Hkv, R, 1), jnp.float32),
     ]
     fn = pl.pallas_call(
-        functools.partial(_kernel, block_s=block_s, n_s=n_s),
+        functools.partial(_kernel, block_s=block_s, n_s=n_s,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
     )
-    return fn(lengths, q, k, v)
+    return fn(lengths, *inputs)

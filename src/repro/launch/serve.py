@@ -31,9 +31,15 @@ def main():
                     choices=("batched", "serial"),
                     help="scheduler v2 batched bucketed prefill (default) "
                          "or v1-style per-request admission")
+    ap.add_argument("--cache-dtype", default="", choices=("", "int8"),
+                    help="KV-cache storage layout (DESIGN.md §10); int8 "
+                         "halves cache bytes per slot")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
+    if args.cache_dtype:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, cache_dtype=args.cache_dtype)
     model = get_model(cfg)
     params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
     tb = chain_tree(4) if cfg.spec_mode == "chain" else medusa_63()

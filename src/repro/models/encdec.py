@@ -11,8 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import quant as Q
 from repro.models import layers as L
-from repro.models.transformer import (_update_rows, tree_stack)
+from repro.models.transformer import (_commit_attn_entry, _read_cache,
+                                      _update_rows, _write_prefix, tree_stack)
 from repro.distributed.sharding import Param, logical
 
 
@@ -120,14 +122,26 @@ def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None, remat=Tru
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
                abstract: bool = False):
-    dt = jnp.dtype(dtype or cfg.dtype)
+    """Self-attn cache follows ``cfg.resolved_cache_dtype`` (int8 layout adds
+    k_scale/v_scale, DESIGN.md §10); the cross cache stays in ``cfg.dtype``
+    — it is written once per request and O(frontend_len), not swept per
+    step, so quantizing it saves nothing on the memory model's traffic term.
+    """
+    dt = jnp.dtype(dtype or cfg.resolved_cache_dtype)
+    xdt = jnp.dtype(cfg.dtype)
     nu, hd = cfg.num_layers, cfg.resolved_head_dim
     mk = (jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d)))
+    self_entry = {"k": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt),
+                  "v": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt)}
+    if Q.is_quantized(dt):
+        self_entry["k_scale"] = mk((nu, batch, max_len, cfg.num_kv_heads, 1),
+                                   jnp.float32)
+        self_entry["v_scale"] = mk((nu, batch, max_len, cfg.num_kv_heads, 1),
+                                   jnp.float32)
     return {
-        "self": {"k": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt),
-                 "v": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt)},
-        "cross": {"k": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), dt),
-                  "v": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), dt)},
+        "self": self_entry,
+        "cross": {"k": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), xdt),
+                  "v": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), xdt)},
     }
 
 
@@ -140,16 +154,16 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
         unit_p, cache_u = xs
         hh = L.apply_norm(unit_p["norm1"], h, cfg)
         y, (k, v) = L.attention_full(unit_p["self_attn"], hh, cfg, return_kv=True)
-        ck = jax.lax.dynamic_update_slice(cache_u["self"]["k"], k.astype(cache_u["self"]["k"].dtype), (0, 0, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache_u["self"]["v"], v.astype(ck.dtype), (0, 0, 0, 0))
+        self_entry = _write_prefix(cache_u["self"], k, v)
         h = h + y
         hh = L.apply_norm(unit_p["norm_x"], h, cfg)
         xk, xv = L.cross_kv(unit_p["cross_attn"], enc_out, cfg)
         h = h + L.attention_cross(unit_p["cross_attn"], hh, (xk, xv), cfg)
         hh = L.apply_norm(unit_p["norm2"], h, cfg)
         h = h + L.mlp(unit_p["mlp"], hh, cfg)
-        new_cache = {"self": {"k": ck, "v": cv},
-                     "cross": {"k": xk.astype(ck.dtype), "v": xv.astype(ck.dtype)}}
+        xdt = cache_u["cross"]["k"].dtype
+        new_cache = {"self": self_entry,
+                     "cross": {"k": xk.astype(xdt), "v": xv.astype(xdt)}}
         return h, new_cache
 
     x, new_cache = jax.lax.scan(body, x, (params["dec_units"], cache))
@@ -175,13 +189,32 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
         hh = L.apply_norm(unit_p["norm1"], h, cfg)
         p = unit_p["self_attn"]
         q, k, v = L._project_qkv(p, hh, cfg)
-        ck = _update_rows(cache_u["self"]["k"], k, lengths)
-        cv = _update_rows(cache_u["self"]["v"], v, lengths)
+        entry = cache_u["self"]
+        new_entry = dict(entry)
+        if "k_scale" in entry:
+            # fake-quant in-flight rows for bit-consistency with later
+            # sweeps of the committed cache (DESIGN.md §10)
+            kq, ks = Q.quantize_rows(k)
+            vq, vs = Q.quantize_rows(v)
+            k = Q.dequantize(kq, ks, k.dtype)
+            v = Q.dequantize(vq, vs, v.dtype)
+            new_entry["k"] = _update_rows(entry["k"], kq, lengths)
+            new_entry["v"] = _update_rows(entry["v"], vq, lengths)
+            new_entry["k_scale"] = _update_rows(entry["k_scale"], ks, lengths)
+            new_entry["v_scale"] = _update_rows(entry["v_scale"], vs, lengths)
+        else:
+            new_entry["k"] = _update_rows(entry["k"], k, lengths)
+            new_entry["v"] = _update_rows(entry["v"], v, lengths)
         if use_kernel:
             from repro.kernels.ops import tree_attention
-            out = tree_attention(q, ck, cv, tree_mask, lengths, scale)
+            out = tree_attention(q, new_entry["k"], new_entry["v"], tree_mask,
+                                 lengths, scale,
+                                 k_scale=new_entry.get("k_scale"),
+                                 v_scale=new_entry.get("v_scale"),
+                                 k_tree=k, v_tree=v)
         else:
-            out = L._gqa_scores_to_out(q, ck.astype(q.dtype), cv.astype(q.dtype), masks, scale)
+            ck, cv = _read_cache(new_entry, q.dtype)
+            out = L._gqa_scores_to_out(q, ck, cv, masks, scale)
         h = h + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(h.dtype))
         hh = L.apply_norm(unit_p["norm_x"], h, cfg)
         h = h + L.attention_cross(unit_p["cross_attn"], hh,
@@ -189,8 +222,8 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
                                    cache_u["cross"]["v"].astype(h.dtype)), cfg)
         hh = L.apply_norm(unit_p["norm2"], h, cfg)
         h = h + L.mlp(unit_p["mlp"], hh, cfg)
-        return h, {"self": {"k": ck, "v": cv, "k_new": k, "v_new": v},
-                   "cross": cache_u["cross"]}
+        new_entry["k_new"], new_entry["v_new"] = k, v
+        return h, {"self": new_entry, "cross": cache_u["cross"]}
 
     x, spec_cache = jax.lax.scan(body, x, (params["dec_units"], cache))
     x = L.apply_norm(params["final_norm"], x, cfg)
@@ -198,13 +231,7 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
 
 
 def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
-    def fix(c, c_new):  # c [nu,B,S,H,D]; c_new [nu,B,T,H,D]
-        idx = path_slots[None, :, :, None, None]
-        rows = jnp.take_along_axis(c_new, idx, axis=2)
-        return jax.vmap(_update_rows, in_axes=(0, 0, None))(c, rows, lengths)
-
-    new_cache = {"self": {"k": fix(spec_cache["self"]["k"], spec_cache["self"]["k_new"]),
-                          "v": fix(spec_cache["self"]["v"], spec_cache["self"]["v_new"])},
+    new_cache = {"self": _commit_attn_entry(spec_cache["self"], lengths, path_slots),
                  "cross": spec_cache["cross"]}
     adv = acc if active is None else jnp.where(active, acc, 0)
     return new_cache, lengths + adv

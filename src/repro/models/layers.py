@@ -177,7 +177,7 @@ def attention_full(p, x, cfg: ModelConfig, positions=None, causal=True,
         k = apply_rope(k, cos, sin)
     # heads-first TP; when heads don't divide the model axis (e.g. qwen's
     # 20-head MHA on a 16-way mesh) fall back to sharding the q-seq dim so
-    # the S x S score tensor still partitions (§Perf hillclimb 3).
+    # the S x S score tensor still partitions (DESIGN.md §7).
     from repro.distributed.sharding import rule_size
     heads_ok = cfg.num_heads % max(rule_size("act_heads"), 1) == 0
     if heads_ok:
@@ -276,7 +276,8 @@ def attention_decode(p, x, cfg: ModelConfig, cache_k, cache_v, length,
 
 
 def gqa_two_part(q, cache_k, cache_v, k_new, v_new, lengths, tree_mask, scale):
-    """Deferred-write tree attention (beyond-paper §Perf optimization).
+    """Deferred-write tree attention (beyond-paper perf optimization,
+    DESIGN.md §6).
 
     Exact two-part online-softmax merge: (a) sweep the committed cache with
     a col<length mask (stale rows masked, cache NOT written this step) and
@@ -399,7 +400,7 @@ def moe(p, x, cfg: ModelConfig, group_size: int = 512):
     pos = pos.reshape(G, g_sz, K, E)
 
     # combine kept in activation dtype: its f32 form was the largest
-    # all-gathered tensor in the MoE backward (§Perf hillclimb 2, iter 3)
+    # all-gathered tensor in the MoE backward (DESIGN.md §7)
     dispatch = jnp.zeros((G, g_sz, E, C), dtype=x.dtype)
     combine = jnp.zeros((G, g_sz, E, C), dtype=x.dtype)
     for slot in range(K):                                 # K is small & static
@@ -410,7 +411,7 @@ def moe(p, x, cfg: ModelConfig, group_size: int = 512):
                   * in_cap[..., None, None].astype(x.dtype))
         # the mask is piecewise-constant: stop_gradient prunes its (zero)
         # cotangent path, which otherwise all-gathers [G,s,E,C]-sized
-        # tensors in the backward (§Perf hillclimb 2, iter 4)
+        # tensors in the backward (DESIGN.md §7)
         d_slot = jax.lax.stop_gradient(d_slot)
         dispatch = dispatch + d_slot
         combine = combine + d_slot * gate_vals[:, :, slot, None, None].astype(x.dtype)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import Param, logical
+from repro.kernels import quant as Q
 from repro.models import layers as L
 from repro.models import ssm as S
 
@@ -203,8 +204,14 @@ def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None,
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
                abstract: bool = False):
-    """Static decode state. Mirrors the unit structure; leading dim = n_units."""
-    dt = jnp.dtype(dtype or cfg.dtype)
+    """Static decode state. Mirrors the unit structure; leading dim = n_units.
+
+    The attention-cache storage dtype follows ``cfg.resolved_cache_dtype``
+    (overridable via ``dtype``).  For int8 each attn entry carries the
+    quantized layout (DESIGN.md §10): ``k``/``v`` [nu, B, S, Hkv, D] int8
+    plus ``k_scale``/``v_scale`` [nu, B, S, Hkv, 1] float32.
+    """
+    dt = jnp.dtype(dtype or cfg.resolved_cache_dtype)
     nu = n_units(cfg)
     mk = (jax.ShapeDtypeStruct if abstract
           else (lambda shape, d: jnp.zeros(shape, d)))
@@ -216,6 +223,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
                 "k": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt),
                 "v": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt),
             }
+            if Q.is_quantized(dt):
+                cache[f"pos{i}"]["k_scale"] = mk(
+                    (nu, batch, max_len, cfg.num_kv_heads, 1), jnp.float32)
+                cache[f"pos{i}"]["v_scale"] = mk(
+                    (nu, batch, max_len, cfg.num_kv_heads, 1), jnp.float32)
         else:
             cache[f"pos{i}"] = {
                 "conv_x": mk((nu, batch, cfg.d_inner, cfg.ssm_conv - 1), dt),
@@ -251,10 +263,7 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
             hh = L.apply_norm(p["norm1"], h, cfg)
             if mix == "attn":
                 y, (k, v) = L.attention_full(p["attn"], hh, cfg, return_kv=True)
-                ck, cv = cache_u[f"pos{i}"]["k"], cache_u[f"pos{i}"]["v"]
-                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
-                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
-                new_cache[f"pos{i}"] = {"k": ck, "v": cv}
+                new_cache[f"pos{i}"] = _write_prefix(cache_u[f"pos{i}"], k, v)
             else:
                 y, (cx, cbc, ssm_st) = S.mamba2_full(
                     p["ssm"], hh, cfg, return_state=True, valid=valid, lengths=lengths)
@@ -275,6 +284,34 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
 # ---------------------------------------------------------------------------
 # speculative decode step (tree / chain) + commit
 # ---------------------------------------------------------------------------
+
+def _write_prefix(entry, k, v):
+    """Prefill-time cache write of rows [0, S_p) into one layer's entry.
+
+    k/v [B, S_p, Hkv, D] fp; quantizes on the way in for the int8 layout
+    (the commit-path fusion of DESIGN.md §10 — the cache never holds fp rows).
+    """
+    def wr(c, rows):
+        return jax.lax.dynamic_update_slice(
+            c, rows.astype(c.dtype), (0,) * c.ndim)
+    if "k_scale" in entry:
+        kq, ks = Q.quantize_rows(k)
+        vq, vs = Q.quantize_rows(v)
+        return {"k": wr(entry["k"], kq), "v": wr(entry["v"], vq),
+                "k_scale": wr(entry["k_scale"], ks),
+                "v_scale": wr(entry["v_scale"], vs)}
+    return {"k": wr(entry["k"], k), "v": wr(entry["v"], v)}
+
+
+def _read_cache(entry, dtype):
+    """fp view of one layer's cached k/v -> ([B, S, Hkv, D], [B, S, Hkv, D])
+    in ``dtype``.  Dequantizes the int8 layout (XLA path; the Pallas kernel
+    dequantizes per KV block in VMEM instead — DESIGN.md §10)."""
+    if "k_scale" in entry:
+        return (Q.dequantize(entry["k"], entry["k_scale"], dtype),
+                Q.dequantize(entry["v"], entry["v_scale"], dtype))
+    return entry["k"].astype(dtype), entry["v"].astype(dtype)
+
 
 def _update_rows(cache_arr, rows, starts):
     """Per-batch dynamic row write: cache [B,S,...], rows [B,T,...], starts [B].
@@ -320,12 +357,12 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
             p = unit_p[f"pos{i}"]
             hh = L.apply_norm(p["norm1"], h, cfg)
             if mix == "attn":
-                y, ck, cv, (kn, vn) = attention_decode_batched(
-                    p["attn"], hh, cfg, cache_u[f"pos{i}"]["k"], cache_u[f"pos{i}"]["v"],
-                    lengths, masks, tree_mask, depths, use_kernel, deferred)
-                # k_new/v_new: in-flight tree rows — commit gathers path rows
-                # from these small tensors, never from the seq-sharded cache
-                new_cache[f"pos{i}"] = {"k": ck, "v": cv, "k_new": kn, "v_new": vn}
+                # the returned entry adds k_new/v_new (in-flight tree rows) —
+                # commit gathers path rows from these small tensors, never
+                # from the seq-sharded cache
+                y, new_cache[f"pos{i}"] = attention_decode_batched(
+                    p["attn"], hh, cfg, cache_u[f"pos{i}"], lengths, masks,
+                    tree_mask, depths, use_kernel, deferred)
             else:
                 y, (cxs, cbcs, ssts) = S.mamba2_decode(
                     p["ssm"], hh, cfg, cache_u[f"pos{i}"]["conv_x"],
@@ -343,10 +380,20 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
     return x, spec_cache
 
 
-def attention_decode_batched(p, x, cfg, cache_k, cache_v, lengths, masks,
-                             tree_mask, depths, use_kernel=False,
-                             deferred=False):
-    """attention_decode with per-batch lengths (vmapped writes/masks)."""
+def attention_decode_batched(p, x, cfg, entry, lengths, masks, tree_mask,
+                             depths, use_kernel=False, deferred=False):
+    """attention_decode with per-batch lengths (vmapped writes/masks).
+
+    ``entry`` is one layer's cache dict: k/v [B, S, Hkv, D] (plus k_scale/
+    v_scale [B, S, Hkv, 1] f32 under the int8 layout, DESIGN.md §10).
+    Returns (y, new_entry) where new_entry carries the (possibly updated)
+    cache leaves plus in-flight tree rows k_new/v_new [B, T, Hkv, D] fp.
+
+    Int8 consistency rule: the in-flight rows that verification attends over
+    are fake-quantized (quantize -> dequantize), so they are bit-equal to
+    what every later sweep reads back from the committed cache — greedy
+    losslessness (spec == AR) survives quantization (DESIGN.md §10).
+    """
     import math as _m
     B, T, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -357,21 +404,40 @@ def attention_decode_batched(p, x, cfg, cache_k, cache_v, lengths, masks,
         q = L.apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
         k = L.apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
     scale = 1.0 / _m.sqrt(hd)
+    quantized = "k_scale" in entry
+    if quantized:
+        kq, ks = Q.quantize_rows(k)
+        vq, vs = Q.quantize_rows(v)
+        k = Q.dequantize(kq, ks, k.dtype)
+        v = Q.dequantize(vq, vs, v.dtype)
+    new_entry = dict(entry)
     if deferred:
-        # §Perf: no tree-row write this step — one full cache pass saved
-        out = L.gqa_two_part(q, cache_k, cache_v, k, v, lengths, tree_mask, scale)
+        # deferred write (DESIGN.md §6): no tree-row write this step — one
+        # full cache pass saved; the only cache write left is commit's
+        ck, cv = _read_cache(entry, q.dtype)
+        out = L.gqa_two_part(q, ck, cv, k, v, lengths, tree_mask, scale)
     else:
-        cache_k = _update_rows(cache_k, k, lengths)
-        cache_v = _update_rows(cache_v, v, lengths)
+        if quantized:
+            new_entry["k"] = _update_rows(entry["k"], kq, lengths)
+            new_entry["v"] = _update_rows(entry["v"], vq, lengths)
+            new_entry["k_scale"] = _update_rows(entry["k_scale"], ks, lengths)
+            new_entry["v_scale"] = _update_rows(entry["v_scale"], vs, lengths)
+        else:
+            new_entry["k"] = _update_rows(entry["k"], k, lengths)
+            new_entry["v"] = _update_rows(entry["v"], v, lengths)
         if use_kernel:
             from repro.kernels.ops import tree_attention
-            out = tree_attention(q, cache_k, cache_v, tree_mask, lengths, scale,
+            out = tree_attention(q, new_entry["k"], new_entry["v"], tree_mask,
+                                 lengths, scale,
+                                 k_scale=new_entry.get("k_scale"),
+                                 v_scale=new_entry.get("v_scale"),
                                  k_tree=k, v_tree=v)
         else:
-            out = L._gqa_scores_to_out(q, cache_k.astype(q.dtype),
-                                       cache_v.astype(q.dtype), masks, scale)
+            ck, cv = _read_cache(new_entry, q.dtype)
+            out = L._gqa_scores_to_out(q, ck, cv, masks, scale)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
-    return y, cache_k, cache_v, (k, v)
+    new_entry["k_new"], new_entry["v_new"] = k, v
+    return y, new_entry
 
 
 def cache_max_len(cache):
@@ -379,6 +445,32 @@ def cache_max_len(cache):
         if "k" in pos:
             return pos["k"].shape[2]
     return 0
+
+
+def _commit_attn_entry(entry, lengths, path_slots):
+    """Commit one attention layer: gather best-path rows from the small
+    in-flight tensors and write them back at [len, len+K1).
+
+    entry: k/v [nu, B, S, Hkv, D] cache + k_new/v_new [nu, B, T, Hkv, D] fp
+    (+ scales under int8).  For the int8 layout the gathered fp rows are
+    re-quantized at the write; quantization is deterministic and idempotent
+    on fake-quantized values (the max-|x| element always lands on ±127), so
+    the committed bytes equal the values verification attended over
+    (DESIGN.md §10).
+    """
+    idx = path_slots[None, :, :, None, None]
+    upd = jax.vmap(_update_rows, in_axes=(0, 0, None))
+    quantized = "k_scale" in entry
+    out = {}
+    for name in ("k", "v"):
+        rows = jnp.take_along_axis(entry[name + "_new"], idx, axis=2)  # [nu,B,K1,H,D]
+        if quantized:
+            qrows, srows = Q.quantize_rows(rows)
+            out[name] = upd(entry[name], qrows, lengths)
+            out[name + "_scale"] = upd(entry[name + "_scale"], srows, lengths)
+        else:
+            out[name] = upd(entry[name], rows, lengths)
+    return out
 
 
 def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
@@ -396,16 +488,10 @@ def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
     row, so nothing stale is ever read.
     Returns (cache, new_lengths).
     """
-    K1 = path_slots.shape[1]
     new_cache = {}
     for pos, entry in spec_cache.items():
         if "k" in entry:
-            def fix(c, c_new):  # c [nu,B,S,H,D]; c_new [nu,B,T,H,D]
-                idx = path_slots[None, :, :, None, None]
-                rows = jnp.take_along_axis(c_new, idx, axis=2)      # [nu,B,K1,H,D]
-                return jax.vmap(_update_rows, in_axes=(0, 0, None))(c, rows, lengths)
-            new_cache[pos] = {"k": fix(entry["k"], entry["k_new"]),
-                              "v": fix(entry["v"], entry["v_new"])}
+            new_cache[pos] = _commit_attn_entry(entry, lengths, path_slots)
         else:
             def sel(st):  # [nu, B, T, ...] -> [nu, B, ...]
                 idx = (acc - 1)[None, :, None]

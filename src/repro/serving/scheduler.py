@@ -30,6 +30,14 @@ restarted server loses no work (at-least-once semantics).
 ``admission="serial"`` keeps the v1 per-request admission path (one
 [1, bucket] prefill call plus a host-side cache insert per request) for the
 equality tests and the `benchmarks/bench_serving.py` comparison.
+
+Cache capacity (DESIGN.md §10): the per-slot device state is dominated by
+the attention KV cache, whose storage dtype follows ``cfg.cache_dtype`` —
+``init_cache`` builds the int8 layout transparently, and every scheduler
+path (batched admission merge, serial insert, recovery rebuild) treats the
+cache as an opaque pytree, so quantization needs no scheduler-side code.
+Size ``batch_slots`` with ``slots_for_budget``; at a fixed HBM budget the
+int8 layout roughly doubles the slots (``benchmarks/bench_kv_quant.py``).
 """
 from __future__ import annotations
 
@@ -45,6 +53,23 @@ import numpy as np
 from repro.core.engine import SpecEngine
 
 NO_EOS = -1  # device-side "no eos configured" sentinel (token ids are >= 0)
+
+
+def cache_bytes_per_slot(cfg, max_len: int) -> int:
+    """Attention KV-cache bytes one decode slot pins for its lifetime
+    (values + int8 scales; SSM state is O(1) in max_len and excluded).
+
+    This is the capacity term of the memory model (DESIGN.md §10): at fixed
+    HBM budget the slot count scales inversely with it, so the int8 layout
+    (~(D+4)/(2*D) of bf16 bytes) buys ~2x decode slots at the same budget.
+    """
+    return cfg.kv_cache_bytes_per_token() * max_len
+
+
+def slots_for_budget(cfg, max_len: int, hbm_bytes: int) -> int:
+    """Decode slots a ``hbm_bytes`` cache budget sustains at ``max_len``
+    (DESIGN.md §10) — the sizing knob for ``MedusaServer(batch_slots=...)``."""
+    return int(hbm_bytes // cache_bytes_per_slot(cfg, max_len))
 
 
 @dataclass
@@ -208,7 +233,7 @@ class MedusaServer:
         seq-sharded cache local under SPMD.
         """
         n = toks.shape[0]
-        cache_n = self.model.init_cache(self.cfg, n, self.max_len)
+        cache_n = self.engine.init_cache(n, self.max_len)
         cache_n, len_n, base_n, mtok_n, _ = self.engine.prefill(
             params, medusa_params, toks, plens, cache_n)
         srcc = jnp.clip(src, 0, n - 1)
@@ -316,7 +341,7 @@ class MedusaServer:
         bucket = self._bucket(len(req.prompt))
         toks = np.zeros((1, bucket), np.int32)
         toks[0, : len(req.prompt)] = req.prompt[:bucket]
-        cache1 = self.model.init_cache(self.cfg, 1, self.max_len)
+        cache1 = self.engine.init_cache(1, self.max_len)
         lengths1 = jnp.asarray([len(req.prompt)], jnp.int32)
         cache1, lengths1, base1, mtok1, _ = self._prefill_jit(
             self.params, self.medusa_params, jnp.asarray(toks), lengths1, cache1)
@@ -404,7 +429,7 @@ class MedusaServer:
 
     def _reset_device_state(self):
         """(Re)create all per-slot device arrays that jitted calls donate."""
-        self.cache = self.model.init_cache(self.cfg, self.B, self.max_len)
+        self.cache = self.engine.init_cache(self.B, self.max_len)
         self.lengths = jnp.ones((self.B,), jnp.int32)
         K = max(self.engine.dtree.K, 1)
         self.base = jnp.zeros((self.B,), jnp.int32)

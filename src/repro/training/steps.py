@@ -21,7 +21,7 @@ def cross_entropy(logits, targets, valid=None):
     Gold-logit extraction uses a one-hot select over the vocab axis instead
     of take_along_axis: with vocab-sharded logits the gather would force a
     full logits all-gather (measured 18.8 GiB/step on granite-moe train —
-    §Perf hillclimb 2); the select reduces over the local shard + a scalar
+    DESIGN.md §7); the select reduces over the local shard + a scalar
     all-reduce.
     """
     logits = logits.astype(jnp.float32)

@@ -1,0 +1,16 @@
+"""Docs consistency: every ``DESIGN.md §N`` citation in code resolves to an
+existing section header (the CI step in .github/workflows/ci.yml runs the
+same checker standalone)."""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_design_section_citations_resolve():
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        from check_docs_refs import find_stale_refs
+    finally:
+        sys.path.pop(0)
+    assert find_stale_refs(ROOT) == []

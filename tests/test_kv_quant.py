@@ -1,0 +1,240 @@
+"""Int8 KV-cache quantization (DESIGN.md §10): quant helpers, kernel int8
+block path, losslessness under the quantized cache, fp-parity on a trained
+backbone, and serving slot capacity at halved cache bytes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine, ar_generate
+from repro.core.tree import chain_tree, medusa_63
+from repro.distributed.sharding import split_params
+from repro.kernels import quant as Q
+from repro.models.api import get_model
+
+
+def _setup(arch, seed=1, **cfg_overrides):
+    cfg = dataclasses.replace(get_config(arch, reduced=True), **cfg_overrides)
+    m = get_model(cfg)
+    params, _ = split_params(m.init_params(jax.random.PRNGKey(seed), cfg))
+    tb = chain_tree(4) if cfg.spec_mode == "chain" else medusa_63()
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(seed + 1), cfg, tb.K))
+    mp["w1"] = jax.random.normal(jax.random.PRNGKey(seed + 2), mp["w1"].shape,
+                                 mp["w1"].dtype) * 0.1
+    return cfg, m, params, mp, tb
+
+
+# ---------------------------------------------------------------- unit level
+
+def test_quantize_roundtrip_and_idempotence(rng):
+    x = jnp.asarray(rng.standard_normal((3, 17, 4, 64)), jnp.float32)
+    q, s = Q.quantize_rows(x)
+    assert q.dtype == jnp.int8 and s.shape == (3, 17, 4, 1)
+    dq = Q.dequantize(q, s)
+    # error bounded by half a quantization step per element
+    assert float(jnp.max(jnp.abs(dq - x))) <= float(jnp.max(s)) * 0.5 + 1e-6
+    # idempotence on fake-quantized values: commit's re-quantization must
+    # reproduce the exact cached bytes (DESIGN.md §10)
+    q2, s2 = Q.quantize_rows(dq)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+    # all-zero rows stay finite
+    q0, s0 = Q.quantize_rows(jnp.zeros((1, 2, 2, 8)))
+    assert (np.asarray(q0) == 0).all() and np.isfinite(np.asarray(s0)).all()
+
+
+def test_init_cache_int8_layout():
+    cfg, m, *_ = _setup("qwen1.5-0.5b", cache_dtype="int8")
+    cache = m.init_cache(cfg, 2, 64)
+    entry = next(iter(cache.values()))
+    assert entry["k"].dtype == jnp.int8
+    assert entry["k_scale"].dtype == jnp.float32
+    assert entry["k_scale"].shape == entry["k"].shape[:-1] + (1,)
+
+
+# ------------------------------------------------------------- kernel level
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,tree", [
+    (2, 1024, 8, 2, 64, "medusa"),
+    (2, 640, 6, 2, 64, "chain"),      # odd S -> pad path with scales
+    (1, 300, 4, 4, 128, "chain"),     # S < block -> clamp path
+])
+def test_int8_kernel_matches_dequant_oracle(rng, B, S, Hq, Hkv, D, tree):
+    """Interpret-mode int8 block path (fused in-VMEM dequant) vs the
+    dequantize-then-fp oracle."""
+    from repro.kernels.ops import tree_attention
+    from repro.kernels.ref import tree_attention_ref_int8
+    tb = medusa_63() if tree == "medusa" else chain_tree(4)
+    T = tb.T
+    q = jnp.asarray(rng.standard_normal((B, T, Hq, D)), jnp.float32)
+    kq, ks = Q.quantize_rows(jnp.asarray(rng.standard_normal((B, S, Hkv, D)),
+                                         jnp.float32))
+    vq, vs = Q.quantize_rows(jnp.asarray(rng.standard_normal((B, S, Hkv, D)),
+                                         jnp.float32))
+    lengths = jnp.asarray(rng.integers(1, S - T - 1, size=(B,)), jnp.int32)
+    scale = 1.0 / np.sqrt(D)
+    out_k = tree_attention(q, kq, vq, jnp.asarray(tb.mask), lengths, scale,
+                           k_scale=ks, v_scale=vs, interpret=True)
+    out_r = tree_attention_ref_int8(q, kq, vq, ks, vs, jnp.asarray(tb.mask),
+                                    lengths, scale)
+    assert float(jnp.max(jnp.abs(out_k - out_r))) < 3e-5
+
+
+def test_flash_decode_non_multiple_block(rng):
+    """Regression for the former hard ``S % block_s == 0`` assert: an odd
+    cache length pads/clamps instead of crashing, and the padded columns do
+    not leak into the softmax (result matches a longer exact-fit cache)."""
+    from repro.kernels.tree_attention import flash_decode
+    q = jnp.asarray(rng.standard_normal((1, 2, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 700, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 700, 64)), jnp.float32)
+    lengths = jnp.asarray([600], jnp.int32)
+    acc, m, l = flash_decode(q, k, v, lengths, interpret=True)
+    pad = ((0, 0), (0, 0), (0, 1024 - 700), (0, 0))
+    acc2, m2, l2 = flash_decode(q, jnp.pad(k, pad), jnp.pad(v, pad), lengths,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(acc2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l2), atol=1e-6)
+
+
+def test_commit_rows_quantized(rng):
+    """Fused quantize+commit kernel path == quantize then per-row write."""
+    from repro.kernels.cache_update import commit_rows_quantized
+    B, S, H, D, K1 = 2, 256, 2, 16, 5
+    cache = jnp.zeros((B, S, H, D), jnp.int8)
+    scales = jnp.zeros((B, S, H, 1), jnp.float32)
+    rows = jnp.asarray(rng.standard_normal((B, K1, H, D)), jnp.float32)
+    lens = jnp.asarray([10, 200], jnp.int32)
+    out_c, out_s = commit_rows_quantized(cache, scales, rows, lens,
+                                         interpret=True)
+    qrows, srows = Q.quantize_rows(rows)
+    for b in range(B):
+        lo = int(lens[b])
+        np.testing.assert_array_equal(np.asarray(out_c)[b, lo:lo + K1],
+                                      np.asarray(qrows)[b])
+        np.testing.assert_array_equal(np.asarray(out_s)[b, lo:lo + K1],
+                                      np.asarray(srows)[b])
+
+
+# -------------------------------------------------------- engine / E2E level
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "whisper-tiny"])
+def test_int8_spec_equals_int8_ar(arch):
+    """Losslessness survives quantization: greedy Medusa over the int8 cache
+    is token-identical to greedy AR over the int8 cache (both read the same
+    fake-quantized values — DESIGN.md §10)."""
+    from repro.models.frontends import frontend_embeds
+    cfg, m, params, mp, tb = _setup(arch, cache_dtype="int8")
+    B, SP, NEW = 2, 8, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, cfg.vocab_size)
+    fe = frontend_embeds(cfg, B)
+    lengths = jnp.full((B,), SP, jnp.int32)
+    S_MAX = SP + NEW + tb.T + 8
+    ar, _ = ar_generate(cfg, params, tokens, lengths,
+                        m.init_cache(cfg, B, S_MAX), NEW, extra_embeds=fe)
+    sp, n_out, _ = SpecEngine(cfg, tb).generate(
+        params, mp, tokens, lengths, m.init_cache(cfg, B, S_MAX), NEW,
+        extra_embeds=fe)
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(sp))
+    assert (np.asarray(n_out) == NEW).all()
+
+
+def test_int8_spec_equals_ar_kernel_path():
+    """Same invariant through the Pallas int8 kernel path (interpret mode)."""
+    cfg, m, params, mp, tb = _setup("qwen1.5-0.5b", cache_dtype="int8")
+    B, SP, NEW = 2, 8, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, cfg.vocab_size)
+    lengths = jnp.full((B,), SP, jnp.int32)
+    ar, _ = ar_generate(cfg, params, tokens, lengths,
+                        m.init_cache(cfg, B, 256), NEW)
+    sp, _, _ = SpecEngine(cfg, tb, use_kernel=True).generate(
+        params, mp, tokens, lengths, m.init_cache(cfg, B, 256), NEW)
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(sp))
+
+
+def test_int8_matches_fp_on_trained_backbone():
+    """Acceptance gate: greedy Medusa with cache_dtype=int8 is
+    token-identical to the fp cache on a trained backbone (sharp argmax
+    margins absorb the quantization perturbation), with zero accepted-length
+    drift on this config."""
+    from benchmarks.common import trained_stack
+    from repro.core.tree import cartesian_tree
+    cfg, model, params, mp, corpus, _ = trained_stack(lm_steps=60,
+                                                      head_steps=30)
+    tb = cartesian_tree((4, 2, 1))
+    B, PROMPT, NEW = 4, 16, 32
+    prompt = jnp.asarray(corpus[:B, :PROMPT].astype(np.int32))
+    lengths = jnp.full((B,), PROMPT, jnp.int32)
+    S_MAX = PROMPT + NEW + tb.T + 8
+    out, steps = {}, {}
+    for cd in ("", "int8"):
+        c = dataclasses.replace(cfg, cache_dtype=cd)
+        sp, n_out, st = SpecEngine(c, tb).generate(
+            params, mp, prompt, lengths, model.init_cache(c, B, S_MAX), NEW)
+        ar, _ = ar_generate(c, params, prompt, lengths,
+                            model.init_cache(c, B, S_MAX), NEW)
+        np.testing.assert_array_equal(np.asarray(ar), np.asarray(sp))
+        out[cd], steps[cd] = np.asarray(sp), int(st.steps)
+    np.testing.assert_array_equal(out[""], out["int8"])
+    assert steps[""] == steps["int8"]   # accepted-length drift == 0 here
+
+
+def test_int8_draft_spec_lossless():
+    """Draft-model speculative decoding over int8 target AND draft caches
+    (``DraftSpecEngine.init_caches`` honours each config's cache_dtype) is
+    token-identical to greedy AR over the int8 target cache."""
+    from repro.core.draft_model import DraftSpecEngine
+    cfg = dataclasses.replace(get_config("granite-8b", reduced=True),
+                              cache_dtype="int8")
+    dcfg = dataclasses.replace(cfg, num_layers=2, name="draft")
+    m = get_model(cfg)
+    tp, _ = split_params(m.init_params(jax.random.PRNGKey(1), cfg))
+    dp, _ = split_params(m.init_params(jax.random.PRNGKey(2), dcfg))
+    B, SP, NEW = 2, 8, 12
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, cfg.vocab_size)
+    lens = jnp.full((B,), SP, jnp.int32)
+    SMAX = SP + NEW + 16
+    eng = DraftSpecEngine(cfg, dcfg, gamma=4)
+    tcache, dcache = eng.init_caches(B, SMAX)
+    assert next(iter(tcache.values()))["k"].dtype == jnp.int8
+    sp, n, steps = eng.generate(tp, dp, toks, lens, tcache, dcache, NEW)
+    ar, _ = ar_generate(cfg, tp, toks, lens, m.init_cache(cfg, B, SMAX), NEW)
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(sp))
+
+
+# ------------------------------------------------------------ serving level
+
+def test_scheduler_capacity_doubles_at_halved_cache_bytes():
+    """The memory model's capacity claim (DESIGN.md §10): at a fixed HBM
+    cache budget, the int8 layout sustains >= 1.8x the decode slots, and a
+    server actually running that larger slot count over the int8 cache
+    still matches greedy AR token-for-token."""
+    from repro.serving.scheduler import (MedusaServer, cache_bytes_per_slot,
+                                         slots_for_budget)
+    cfg_fp, m, params, mp, tb = _setup("qwen1.5-0.5b")
+    cfg_i8 = dataclasses.replace(cfg_fp, cache_dtype="int8")
+    max_len = 256
+    budget = 4 * cache_bytes_per_slot(cfg_fp, max_len)   # fp budget: 4 slots
+    slots_fp = slots_for_budget(cfg_fp, max_len, budget)
+    slots_i8 = slots_for_budget(cfg_i8, max_len, budget)
+    assert slots_fp == 4
+    assert slots_i8 / slots_fp >= 1.8
+
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg_i8.vocab_size, size=n).astype(np.int32)
+               for n in (5, 9, 17, 3, 30, 12, 7, 21)]
+    srv = MedusaServer(SpecEngine(cfg_i8, tb), params, mp,
+                       batch_slots=slots_i8, max_len=max_len)
+    rids = [srv.submit(p, max_new=8) for p in prompts]
+    srv.run()
+    for rid, p in zip(rids, prompts):
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 8
+        ar, _ = ar_generate(cfg_i8, params, jnp.asarray(p)[None],
+                            jnp.asarray([len(p)], jnp.int32),
+                            m.init_cache(cfg_i8, 1, max_len), 8)
+        np.testing.assert_array_equal(np.asarray(ar)[0], np.asarray(req.output))

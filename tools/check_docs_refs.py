@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Docs-consistency check: every ``DESIGN.md §N`` citation in the code must
+name a section header that actually exists in DESIGN.md.
+
+DESIGN.md sections are renumber-stable by contract, but a renumbering (or a
+deleted section) would silently strand every code citation — this check
+turns that into a CI failure.  Run from anywhere:
+
+  python tools/check_docs_refs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+CITE = re.compile(r"DESIGN\.md\s*§(\d+)")
+HEADER = re.compile(r"^##\s*§(\d+)\b", re.M)
+SCAN_DIRS = ("src", "benchmarks", "tests", "examples", "tools")
+
+
+def find_stale_refs(root: pathlib.Path) -> list[str]:
+    """Return ``path:line: DESIGN.md §N (missing)`` entries for citations of
+    sections absent from ``root/DESIGN.md``."""
+    sections = set(HEADER.findall((root / "DESIGN.md").read_text()))
+    bad = []
+    for d in SCAN_DIRS:
+        if not (root / d).is_dir():
+            continue
+        for path in sorted((root / d).rglob("*.py")):
+            for ln, line in enumerate(path.read_text().splitlines(), 1):
+                for num in CITE.findall(line):
+                    if num not in sections:
+                        bad.append(f"{path.relative_to(root)}:{ln}: "
+                                   f"DESIGN.md §{num} (missing)")
+    return bad
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parents[1]
+    bad = find_stale_refs(root)
+    if bad:
+        print("stale DESIGN.md § citations:")
+        for b in bad:
+            print(" ", b)
+        return 1
+    print("docs-consistency: all DESIGN.md § citations resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
