@@ -1,0 +1,129 @@
+"""Lossless stochastic speculative sampling benchmark (DESIGN.md §11).
+
+Three measurements on the trained CPU-sized stack:
+
+* **acceptance-length vs temperature** — mean accepted tokens per spec step
+  for the sample-mode Medusa engine as temperature rises (the paper's AC
+  metric extended to stochastic verification; temp 0 anchors at greedy).
+* **temp=0 identity** — sample-mode output is token-identical to greedy
+  speculative decoding, which is token-identical to greedy AR.
+* **TVD gate** — distribution equality at temperature > 0: the max-over-
+  positions total-variation distance between sampled-spec and sampled-AR
+  token marginals over N independent rows must satisfy the documented
+  tolerance
+
+      TVD(spec, AR_1)  <=  TVD_MULT * TVD(AR_1, AR_2) + TVD_SLACK
+
+  where TVD(AR_1, AR_2) is the sampling-noise floor measured by running the
+  AR oracle twice with different keys (and an absolute cap ``TVD_CAP``).
+  Gated for both the Medusa tree walk and the draft-model chain (the draft
+  is an *untrained* sibling, so the chain gate exercises heavy rejection
+  and the residual resampling path).
+
+  PYTHONPATH=src python -m benchmarks.bench_sampling [--smoke]
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import max_marginal_tvd as _max_marginal_tvd
+from benchmarks.common import trained_stack
+from repro.configs.base import SamplingParams
+from repro.core.draft_model import DraftSpecEngine
+from repro.core.engine import SpecEngine, ar_generate, ar_generate_sampled
+from repro.core.tree import cartesian_tree
+from repro.distributed.sharding import split_params
+
+# documented TVD-gate tolerance (see module docstring)
+TVD_MULT, TVD_SLACK, TVD_CAP = 1.5, 0.04, 0.25
+TEMPS = (0.0, 0.3, 0.7, 1.0)
+B_CURVE, PROMPT, NEW_CURVE = 4, 16, 32
+
+
+def run(smoke: bool = False):
+    rows = []
+    cfg, model, params, mp, corpus, _ = trained_stack()
+    tb = cartesian_tree((4, 2, 1))
+    prompt = jnp.asarray(corpus[:B_CURVE, :PROMPT].astype(np.int32))
+    lengths = jnp.full((B_CURVE,), PROMPT, jnp.int32)
+    S_MAX = PROMPT + NEW_CURVE + tb.T + 8
+
+    # --- acceptance-length vs temperature curve ---------------------------
+    out_t0 = None
+    for T in TEMPS:
+        eng = SpecEngine(cfg, tb, accept="sample",
+                         sampling=SamplingParams(temperature=T))
+        out, n_out, stats = eng.generate(
+            params, mp, prompt, lengths,
+            model.init_cache(cfg, B_CURVE, S_MAX), NEW_CURVE,
+            key=jax.random.PRNGKey(42))
+        mean_acc = float(stats.accepted_sum) / (max(int(stats.steps), 1)
+                                                * B_CURVE)
+        rows.append((f"sampling/accepted_len/T{T}", 0.0, f"{mean_acc:.3f}"))
+        if T == 0.0:
+            out_t0 = np.asarray(out)
+
+    # --- temp=0 anchor: sample == greedy spec == greedy AR ----------------
+    greedy_out, _, _ = SpecEngine(cfg, tb).generate(
+        params, mp, prompt, lengths, model.init_cache(cfg, B_CURVE, S_MAX),
+        NEW_CURVE)
+    ar, _ = ar_generate(cfg, params, prompt, lengths,
+                        model.init_cache(cfg, B_CURVE, S_MAX), NEW_CURVE)
+    identical = bool((out_t0 == np.asarray(greedy_out)).all()
+                     and (np.asarray(ar) == out_t0).all())
+    rows.append(("sampling/temp0_token_identical", 0.0, f"{identical}"))
+    assert identical, "sample-mode temp=0 output diverged from greedy/AR"
+
+    # --- TVD gates --------------------------------------------------------
+    N = 256 if smoke else 1024
+    NEW = 6 if smoke else 8
+    temp = 0.8
+    sp = SamplingParams(temperature=temp)
+    toks = jnp.broadcast_to(prompt[:1], (N, PROMPT))
+    lens = jnp.full((N,), PROMPT, jnp.int32)
+    smax = PROMPT + NEW + tb.T + 8
+    ar1, _ = ar_generate_sampled(cfg, params, toks, lens,
+                                 model.init_cache(cfg, N, smax), NEW,
+                                 jax.random.PRNGKey(1), sp)
+    ar2, _ = ar_generate_sampled(cfg, params, toks, lens,
+                                 model.init_cache(cfg, N, smax), NEW,
+                                 jax.random.PRNGKey(2), sp)
+    floor = _max_marginal_tvd(np.asarray(ar1), np.asarray(ar2),
+                              cfg.vocab_size)
+    tol = min(TVD_MULT * floor + TVD_SLACK, TVD_CAP)
+    rows.append((f"sampling/tvd_noise_floor/N{N}", 0.0, f"{floor:.4f}"))
+
+    eng = SpecEngine(cfg, tb, accept="sample", sampling=sp)
+    spec, _, _ = eng.generate(params, mp, toks, lens,
+                              model.init_cache(cfg, N, smax), NEW,
+                              key=jax.random.PRNGKey(3))
+    tvd_tree = _max_marginal_tvd(np.asarray(spec), np.asarray(ar1),
+                                 cfg.vocab_size)
+    rows.append((f"sampling/tvd_tree_vs_ar/T{temp}", 0.0, f"{tvd_tree:.4f}"))
+    assert tvd_tree <= tol, f"tree TVD {tvd_tree:.4f} > gate {tol:.4f}"
+
+    dcfg = dataclasses.replace(cfg, num_layers=2, name="draft-untrained")
+    dparams, _ = split_params(model.init_params(jax.random.PRNGKey(5), dcfg))
+    deng = DraftSpecEngine(cfg, dcfg, gamma=3, accept="sample", sampling=sp)
+    dspec, _, _ = deng.generate(params, dparams, toks, lens,
+                                model.init_cache(cfg, N, smax),
+                                model.init_cache(dcfg, N, smax), NEW,
+                                key=jax.random.PRNGKey(4))
+    tvd_chain = _max_marginal_tvd(np.asarray(dspec), np.asarray(ar1),
+                                  cfg.vocab_size)
+    rows.append((f"sampling/tvd_chain_vs_ar/T{temp}", 0.0, f"{tvd_chain:.4f}"))
+    assert tvd_chain <= tol, f"chain TVD {tvd_chain:.4f} > gate {tol:.4f}"
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced row count for the per-PR CI gate")
+    for r in run(smoke=ap.parse_args().smoke):
+        print(",".join(map(str, r)))

@@ -58,6 +58,19 @@ def trained_stack(arch: str = "openpangu-7b", lm_steps: int = 150,
     return cfg, model, params, mp, corpus, np.asarray(met["head_acc"])
 
 
+def max_marginal_tvd(a, b, vocab: int) -> float:
+    """Max over positions of the total-variation distance between the
+    empirical token marginals of two [N, L] int sample matrices — the
+    distribution-equality metric shared by `bench_sampling` and the tier-1
+    sampling tests (DESIGN.md §11)."""
+    tvds = []
+    for j in range(a.shape[1]):
+        pa = np.bincount(a[:, j], minlength=vocab) / a.shape[0]
+        pb = np.bincount(b[:, j], minlength=vocab) / b.shape[0]
+        tvds.append(0.5 * np.abs(pa - pb).sum())
+    return max(tvds)
+
+
 def timeit(fn, *args, iters: int = 20, warmup: int = 3):
     """Median wall time per call (seconds); blocks on device results."""
     for _ in range(warmup):

@@ -14,6 +14,26 @@ from typing import Optional
 
 
 @dataclass(frozen=True)
+class SamplingParams:
+    """Token-sampling controls threaded end-to-end (DESIGN.md §11).
+
+    One struct travels from the launch flags through the engines down to the
+    verification math so the draft/target (or head/backbone) distributions
+    are warped identically — the precondition for lossless stochastic
+    speculative sampling.  ``temperature <= 0`` is exact greedy (the warped
+    distribution is one-hot at the argmax), which is how ``accept="sample"``
+    collapses to the greedy engines token-for-token at temp 0.
+
+    ``temperature`` and ``top_p`` may be overridden per request in the
+    serving scheduler (batched as per-slot device arrays); ``top_k`` is a
+    static engine-level knob (it changes the warp's sort/slice shape).
+    """
+    temperature: float = 1.0
+    top_k: int = 0          # 0 => no top-k truncation
+    top_p: float = 1.0      # 1.0 => no nucleus truncation
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     name: str
     family: str                    # dense | moe | ssm | hybrid | encdec | vlm

@@ -8,12 +8,13 @@ both caches commit with the same zero-copy compaction.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, SamplingParams
+from repro.core import sampling as S
 from repro.core import verify as V
 from repro.core.engine import _squeeze_spec
 from repro.core.tree import chain_tree
@@ -21,14 +22,25 @@ from repro.models.api import get_model
 
 
 class DraftSpecEngine:
+    """``accept="greedy"`` verifies by argmax match (lossless vs greedy AR);
+    ``accept="sample"`` makes the draft *sample* its chain under ``sampling``
+    and verifies by chain rejection sampling, which preserves the warped
+    target distribution exactly (DESIGN.md §11).  At
+    ``sampling.temperature <= 0`` the sample mode is token-identical to
+    greedy."""
+
     def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
-                 gamma: int = 4):
+                 gamma: int = 4, accept: str = "greedy",
+                 sampling: Optional[SamplingParams] = None):
         assert target_cfg.vocab_size == draft_cfg.vocab_size, "tokenizer alignment"
+        assert accept in ("greedy", "sample"), accept
         self.tc, self.dc = target_cfg, draft_cfg
         self.tm, self.dm = get_model(target_cfg), get_model(draft_cfg)
         self.gamma = gamma
         self.tb = chain_tree(gamma)
         self.dtree = V.device_tree(self.tb)
+        self.accept = accept
+        self.sampling = sampling if sampling is not None else SamplingParams()
 
     def init_caches(self, batch: int, max_len: int):
         """(target_cache, draft_cache) for ``batch`` rows, each honouring its
@@ -37,44 +49,71 @@ class DraftSpecEngine:
         return (self.tm.init_cache(self.tc, batch, max_len),
                 self.dm.init_cache(self.dc, batch, max_len))
 
-    def _draft_chain(self, dparams, dcache, dlengths, base):
-        """Draft proposes gamma tokens AR-style. Returns (tokens [B,gamma], dcache').
+    def _draft_chain(self, dparams, dcache, dlengths, base, key=None):
+        """Draft proposes gamma tokens AR-style.
+        Returns (tokens [B,gamma], draft_logits [B,gamma,V], dcache', dlengths').
 
         Runs gamma+1 steps: a full accept commits gamma+1 tokens
         [base, d1..d_gamma], so the draft must have written d_gamma's KV row
         too (otherwise its next round attends over a stale slot and
-        acceptance collapses — caught by the self-draft test)."""
+        acceptance collapses — caught by the self-draft test).
+
+        Under ``accept="sample"`` each proposal is *sampled* from the warped
+        draft logits — the per-position distributions q that the
+        rejection-sampling identity needs — and the raw logits are returned
+        so verification re-applies the identical warp (DESIGN.md §11)."""
         chain1 = jnp.ones((1, 1), bool)
         depth0 = jnp.zeros((1,), jnp.int32)
         B = base.shape[0]
+        sp = self.sampling
 
         def body(i, c):
-            dcache, dlengths, tok, toks = c
+            dcache, dlengths, tok, toks, qlog = c
             hidden, dcache = self.dm.decode(dparams, self.dc, dcache,
                                             tok[:, None], dlengths, chain1, depth0)
             dcache = _squeeze_spec(self.dm, self.dc, dcache, dlengths)
             dlengths = dlengths + 1
-            nxt = jnp.argmax(self.dm.unembed(dparams, self.dc, hidden[:, 0]),
-                             axis=-1).astype(jnp.int32)
-            toks = jnp.where(i < self.gamma, toks.at[:, jnp.minimum(i, self.gamma - 1)].set(nxt), toks)
-            return (dcache, dlengths, nxt, toks)
+            logits = self.dm.unembed(dparams, self.dc, hidden[:, 0])
+            if self.accept == "sample":
+                nxt = S.sample(jax.random.fold_in(key, i), logits,
+                               sp.temperature, sp.top_k, sp.top_p)
+            else:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            j = jnp.minimum(i, self.gamma - 1)
+            keep = i < self.gamma   # the gamma+1'th step only writes its KV row
+            toks = jnp.where(keep, toks.at[:, j].set(nxt), toks)
+            qlog = jnp.where(keep, qlog.at[:, j].set(logits.astype(jnp.float32)),
+                             qlog)
+            return (dcache, dlengths, nxt, toks, qlog)
 
         toks = jnp.zeros((B, self.gamma), jnp.int32)
-        dcache, dlengths, _, toks = jax.lax.fori_loop(
-            0, self.gamma + 1, body, (dcache, dlengths, base, toks))
-        return toks, dcache, dlengths - 1
+        qlog = jnp.zeros((B, self.gamma, self.dc.vocab_size), jnp.float32)
+        dcache, dlengths, _, toks, qlog = jax.lax.fori_loop(
+            0, self.gamma + 1, body, (dcache, dlengths, base, toks, qlog))
+        return toks, qlog, dcache, dlengths - 1
 
-    def step(self, tparams, dparams, tcache, dcache, lengths, dlengths, base):
-        """One draft-propose / target-verify round."""
+    def step(self, tparams, dparams, tcache, dcache, lengths, dlengths, base,
+             key=None):
+        """One draft-propose / target-verify round.  ``key`` drives the draft
+        sampling and the rejection draws under ``accept="sample"``."""
         dt = self.dtree
-        draft_toks, dcache, dlengths = self._draft_chain(dparams, dcache, dlengths, base)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        kd, kv = jax.random.split(key)
+        draft_toks, qlog, dcache, dlengths = self._draft_chain(
+            dparams, dcache, dlengths, base, kd)
         mtok = draft_toks[:, :, None]                       # [B, gamma, 1]
         cand = V.generate_candidates(base, mtok, dt)        # [B, gamma+1]
         hidden, spec_cache = self.tm.decode(
             tparams, self.tc, tcache, cand, lengths,
             jnp.asarray(dt.mask), jnp.asarray(dt.depths))
         logits = self.tm.unembed(tparams, self.tc, hidden)
-        verdict = V.greedy_verify(cand, logits, dt)
+        if self.accept == "sample":
+            sp = self.sampling
+            verdict = V.sample_verify_chain(cand, logits, qlog, dt, kv,
+                                            temperature=sp.temperature,
+                                            top_k=sp.top_k, top_p=sp.top_p)
+        else:
+            verdict = V.greedy_verify(cand, logits, dt)
         tcache, lengths = self.tm.commit(self.tc, spec_cache, lengths,
                                          verdict.path_slots, verdict.acc)
         # draft wrote gamma rows from `lengths`; accepted prefix stays, the
@@ -83,16 +122,23 @@ class DraftSpecEngine:
         return tcache, dcache, lengths, dlengths, verdict
 
     def generate(self, tparams, dparams, tokens, prompt_lengths, tcache, dcache,
-                 max_new: int, extra_embeds=None):
+                 max_new: int, extra_embeds=None, key=None):
         B = tokens.shape[0]
         K1 = self.gamma + 1
         buf_len = max_new + K1 + 1
+        key = key if key is not None else jax.random.PRNGKey(0)
+        sp = self.sampling
 
         th, tcache = self.tm.prefill(tparams, self.tc, tokens, prompt_lengths,
                                      tcache, extra_embeds=extra_embeds)
         _, dcache = self.dm.prefill(dparams, self.dc, tokens, prompt_lengths,
                                     dcache, extra_embeds=extra_embeds)
-        base = jnp.argmax(self.tm.unembed(tparams, self.tc, th), axis=-1).astype(jnp.int32)
+        tlogits = self.tm.unembed(tparams, self.tc, th)
+        if self.accept == "sample":
+            key, kp = jax.random.split(key)
+            base = S.sample(kp, tlogits, sp.temperature, sp.top_k, sp.top_p)
+        else:
+            base = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)
         out = jnp.zeros((B, buf_len), jnp.int32)
 
         def write_out(out, toks, n_out):
@@ -104,16 +150,17 @@ class DraftSpecEngine:
             return (c[6] < max_new) & jnp.any(c[5] < max_new)
 
         def body(c):
-            tcache, dcache, lengths, dlengths, base, n_out, steps, out = c
+            tcache, dcache, lengths, dlengths, base, n_out, steps, out, key = c
+            key, sub = jax.random.split(key)
             tcache, dcache, lengths, dlengths, verdict = self.step(
-                tparams, dparams, tcache, dcache, lengths, dlengths, base)
+                tparams, dparams, tcache, dcache, lengths, dlengths, base, sub)
             out = write_out(out, verdict.path_tokens, n_out)
             return (tcache, dcache, lengths, dlengths, verdict.next_token,
-                    n_out + verdict.acc, steps + 1, out)
+                    n_out + verdict.acc, steps + 1, out, key)
 
         state = (tcache, dcache, prompt_lengths, prompt_lengths, base,
-                 jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32), out)
-        tcache, dcache, lengths, dlengths, base, n_out, steps, out = \
+                 jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32), out, key)
+        tcache, dcache, lengths, dlengths, base, n_out, steps, out, key = \
             jax.lax.while_loop(cond, body, state)
         out = write_out(out, jnp.broadcast_to(base[:, None], (B, K1)), n_out)
         n_out = n_out + 1

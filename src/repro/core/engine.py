@@ -8,7 +8,9 @@ identical every iteration (the NPU "Static Shape" contract, natively XLA).
 
 ``ar_generate`` is the autoregressive baseline sharing the same cache
 machinery (T=1 decode), used for the paper's speedup/overhead metrics and
-for the losslessness test (greedy Medusa == greedy AR, token for token).
+for the losslessness test (greedy Medusa == greedy AR, token for token);
+``ar_generate_sampled`` is its stochastic sibling, the distribution-equality
+oracle for ``accept="sample"`` (DESIGN.md §11).
 
 Cache storage dtype (``cfg.cache_dtype``, DESIGN.md §10) threads through
 every path here implicitly: ``init_cache`` builds the int8 layout, prefill
@@ -24,25 +26,40 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, SamplingParams
 from repro.core import medusa as M
+from repro.core import sampling as S
 from repro.core import verify as V
 from repro.core.tree import TreeBuffers, default_tree
 from repro.models.api import get_model
 
 
 class StepStats(NamedTuple):
-    tokens_out: jnp.ndarray      # [B] int32 tokens generated so far
+    tokens_out: jnp.ndarray      # [B] int32 tokens generated (incl. bonus)
     steps: jnp.ndarray           # scalar int32 decode steps taken
-    accepted_sum: jnp.ndarray    # scalar int32 — sum of per-step acc (for AC)
+    accepted_sum: jnp.ndarray    # scalar int32 — sum of per-step acc, each
+                                 # clamped to the remaining max_new budget
+                                 # and excluding the final bonus token, so
+                                 # accepted_sum / (steps * B) is the
+                                 # unbiased mean accepted length
 
 
 class SpecEngine:
-    """Medusa speculative engine for one (config, tree) pair."""
+    """Medusa speculative engine for one (config, tree) pair.
+
+    ``accept`` selects verification: "greedy" (lossless argmax match),
+    "typical" (Medusa's lossy typical acceptance) or "sample" (lossless
+    stochastic rejection-sampling verification under ``sampling`` —
+    DESIGN.md §11).  At ``sampling.temperature <= 0`` the "sample" mode is
+    token-identical to "greedy".
+    """
 
     def __init__(self, cfg: ModelConfig, tb: Optional[TreeBuffers] = None,
                  use_kernel: bool = False, accept: str = "greedy",
-                 temperature: float = 0.7, deferred: bool = False):
+                 temperature: float = 0.7, deferred: bool = False,
+                 sampling: Optional[SamplingParams] = None):
+        if accept not in ("greedy", "typical", "sample"):
+            raise ValueError(f"unknown accept mode {accept!r}")
         self.cfg = cfg
         self.model = get_model(cfg)
         self.tb = tb if tb is not None else default_tree(cfg.spec_mode)
@@ -55,6 +72,16 @@ class SpecEngine:
         self.deferred = deferred and cfg.family != "encdec"
         self.accept = accept
         self.temperature = temperature
+        self.sampling = sampling if sampling is not None else \
+            SamplingParams(temperature=temperature)
+
+    def _sampling_args(self, temperature=None, top_p=None):
+        """(temperature, top_k, top_p) with engine defaults, per-call (or
+        per-slot array) overrides winning."""
+        sp = self.sampling
+        return (sp.temperature if temperature is None else temperature,
+                sp.top_k,
+                sp.top_p if top_p is None else top_p)
 
     def init_cache(self, batch: int, max_len: int):
         """Decode cache for ``batch`` slots honouring ``cfg.cache_dtype``
@@ -64,12 +91,22 @@ class SpecEngine:
     # -- one-shot pieces (jit-friendly pure functions) ----------------------
 
     def prefill(self, params, medusa_params, tokens, lengths, cache,
-                extra_embeds=None):
-        """-> (cache, lengths, base_token [B], mtok [B,K,tk], mprob)."""
+                extra_embeds=None, key=None, temperature=None, top_p=None):
+        """-> (cache, lengths, base_token [B], mtok [B,K,tk], mprob).
+
+        Under ``accept="sample"`` (and a ``key``), the base token — the
+        first emitted token — is *sampled* from the warped target logits,
+        matching the stochastic AR oracle; otherwise argmax.
+        ``temperature``/``top_p`` may be per-row [B] arrays (the serving
+        scheduler's per-request values)."""
         last_hidden, cache = self.model.prefill(
             params, self.cfg, tokens, lengths, cache, extra_embeds=extra_embeds)
         logits = self.model.unembed(params, self.cfg, last_hidden)
-        base = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if self.accept == "sample" and key is not None:
+            t, k, p = self._sampling_args(temperature, top_p)
+            base = S.sample(key, logits, t, k, p)
+        else:
+            base = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         mtok, mprob = self._heads(medusa_params, last_hidden)
         return cache, lengths, base, mtok, mprob
 
@@ -82,14 +119,20 @@ class SpecEngine:
         return mtok.transpose(1, 0, 2), mprob.transpose(1, 0, 2)
 
     def spec_step(self, params, medusa_params, cache, lengths, base, mtok, key,
-                  active=None):
-        """One static speculative step. Returns (cache, lengths, verdict, mtok').
+                  active=None, mprob=None, temperature=None, top_p=None):
+        """One static speculative step.
+        Returns (cache, lengths, verdict, mtok', mprob').
 
         ``active`` [B] bool (optional) enables the masked-commit variant used
         by the serving scheduler (DESIGN.md §9): all B slots run through the
         same static graph, but only active slots advance their cache length —
         empty or finished slots are masked out of the commit so their state
         stays frozen until admission overwrites the whole slot row.
+
+        ``mprob`` [B, K, max_topk] (the head probabilities paired with
+        ``mtok``) is the draft distribution q consumed by ``accept="sample"``
+        verification; ``temperature``/``top_p`` override the engine-level
+        ``SamplingParams`` and may be per-slot [B] device arrays.
         """
         dt = self.dtree
         cand = V.generate_candidates(base, mtok, dt)                  # [B, T]
@@ -102,6 +145,12 @@ class SpecEngine:
         if self.accept == "typical":
             verdict = V.typical_verify(cand, logits, dt, key,
                                        temperature=self.temperature)
+        elif self.accept == "sample":
+            if mprob is None:
+                mprob = jnp.ones(mtok.shape, jnp.float32)
+            t, k, p = self._sampling_args(temperature, top_p)
+            verdict = V.sample_verify_tree(cand, logits, mprob, dt, key,
+                                           temperature=t, top_k=k, top_p=p)
         else:
             verdict = V.greedy_verify(cand, logits, dt)
         cache, lengths = self.model.commit(
@@ -109,22 +158,23 @@ class SpecEngine:
             active=active)
         h_last = jnp.take_along_axis(
             hidden, verdict.last_slot[:, None, None], axis=1)[:, 0]   # [B, d]
-        mtok2, _ = self._heads(medusa_params, h_last)
-        return cache, lengths, verdict, mtok2
+        mtok2, mprob2 = self._heads(medusa_params, h_last)
+        return cache, lengths, verdict, mtok2, mprob2
 
     # -- full generation loops ----------------------------------------------
 
     def generate(self, params, medusa_params, tokens, prompt_lengths, cache,
-                 max_new: int, extra_embeds=None, key=None,
-                 collect_stats: bool = True):
+                 max_new: int, extra_embeds=None, key=None):
         """Medusa generation: returns (out_tokens [B, max_new+K], n_out [B], stats)."""
         cfg, dt = self.cfg, self.dtree
         key = key if key is not None else jax.random.PRNGKey(0)
         B = tokens.shape[0]
         K1 = dt.K + 1
         buf_len = max_new + K1 + 1
-        cache, lengths, base, mtok, _ = self.prefill(
-            params, medusa_params, tokens, prompt_lengths, cache, extra_embeds)
+        key, kp = jax.random.split(key)
+        cache, lengths, base, mtok, mprob = self.prefill(
+            params, medusa_params, tokens, prompt_lengths, cache, extra_embeds,
+            key=kp)
         out = jnp.zeros((B, buf_len), jnp.int32)
         max_steps = max_new  # worst case 1 token/step
 
@@ -134,29 +184,34 @@ class SpecEngine:
             return jax.vmap(one)(out, toks, jnp.minimum(n_out, buf_len - K1))
 
         def cond(c):
-            _, _, _, _, _, n_out, steps, _ = c
+            n_out, steps = c[6], c[7]
             return (steps < max_steps) & jnp.any(n_out < max_new)
 
         def body(c):
-            cache, lengths, base, mtok, out, n_out, steps, key = c
+            cache, lengths, base, mtok, mprob, out, n_out, steps, acc_sum, key = c
             key, sub = jax.random.split(key)
-            cache, lengths, verdict, mtok = self.spec_step(
-                params, medusa_params, cache, lengths, base, mtok, sub)
+            cache, lengths, verdict, mtok, mprob = self.spec_step(
+                params, medusa_params, cache, lengths, base, mtok, sub,
+                mprob=mprob)
             out = write_out(out, verdict.path_tokens, n_out)
+            # per-step accepted count clamped to the remaining budget: the
+            # last step may overshoot max_new, and the bonus token is
+            # accounted separately — both would bias mean-accepted-length
+            acc_sum = acc_sum + jnp.sum(
+                jnp.minimum(verdict.acc, jnp.maximum(max_new - n_out, 0)))
             n_out = n_out + verdict.acc
-            return (cache, lengths, verdict.next_token, mtok, out, n_out,
-                    steps + 1, key)
+            return (cache, lengths, verdict.next_token, mtok, mprob, out,
+                    n_out, steps + 1, acc_sum, key)
 
         n_out = jnp.zeros((B,), jnp.int32)
-        state = (cache, lengths, base, mtok, out, n_out, jnp.zeros((), jnp.int32), key)
-        # accepted-count accounting folded into n_out / steps
-        cache, lengths, base, mtok, out, n_out, steps, _ = jax.lax.while_loop(
-            cond, body, state)
+        state = (cache, lengths, base, mtok, mprob, out, n_out,
+                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), key)
+        (cache, lengths, base, mtok, mprob, out, n_out, steps, acc_sum,
+         _) = jax.lax.while_loop(cond, body, state)
         # final certain token
         out = write_out(out, jnp.broadcast_to(base[:, None], (B, K1)), n_out)
         n_out = n_out + 1
-        stats = StepStats(tokens_out=n_out, steps=steps,
-                          accepted_sum=jnp.sum(n_out))
+        stats = StepStats(tokens_out=n_out, steps=steps, accepted_sum=acc_sum)
         return out[:, :max_new], jnp.minimum(n_out, max_new), stats
 
 
@@ -180,12 +235,52 @@ def ar_generate(cfg: ModelConfig, params, tokens, prompt_lengths, cache,
                                      chain1, depth0)
         # T=1: the written row is already in place; no compaction needed
         lengths = lengths + 1
-        if cfg.family in ("ssm", "hybrid") or cfg.num_experts == 0:
-            pass
         # ssm spec states carry a T=1 axis; select it
         cache = _squeeze_spec(model, cfg, cache, lengths)
         nxt = jnp.argmax(model.unembed(params, cfg, hidden[:, 0]), axis=-1)
         return (cache, lengths, nxt.astype(jnp.int32), out)
+
+    cache, lengths, tok, out = jax.lax.fori_loop(
+        0, max_new, body, (cache, prompt_lengths, base, out))
+    return out, lengths
+
+
+def ar_generate_sampled(cfg: ModelConfig, params, tokens, prompt_lengths,
+                        cache, max_new: int, key,
+                        sampling: Optional[SamplingParams] = None,
+                        extra_embeds=None):
+    """Stochastic autoregressive baseline on the same cache machinery (T=1):
+    every token is sampled from the warped target logits.
+
+    This is the distribution-equality oracle for ``accept="sample"``
+    (DESIGN.md §11): lossless stochastic speculative decoding must produce
+    sequences distributed exactly as this loop's.  At
+    ``sampling.temperature <= 0`` it is token-identical to ``ar_generate``.
+    """
+    sp = sampling if sampling is not None else SamplingParams()
+    model = get_model(cfg)
+    B = tokens.shape[0]
+    chain1 = jnp.ones((1, 1), bool)
+    depth0 = jnp.zeros((1,), jnp.int32)
+
+    last_hidden, cache = model.prefill(params, cfg, tokens, prompt_lengths,
+                                       cache, extra_embeds=extra_embeds)
+    base = S.sample(jax.random.fold_in(key, 0),
+                    model.unembed(params, cfg, last_hidden),
+                    sp.temperature, sp.top_k, sp.top_p)
+    out = jnp.zeros((B, max_new), jnp.int32)
+
+    def body(i, c):
+        cache, lengths, tok, out = c
+        out = out.at[:, i].set(tok)
+        hidden, cache = model.decode(params, cfg, cache, tok[:, None], lengths,
+                                     chain1, depth0)
+        lengths = lengths + 1
+        cache = _squeeze_spec(model, cfg, cache, lengths)
+        nxt = S.sample(jax.random.fold_in(key, i + 1),
+                       model.unembed(params, cfg, hidden[:, 0]),
+                       sp.temperature, sp.top_k, sp.top_p)
+        return (cache, lengths, nxt, out)
 
     cache, lengths, tok, out = jax.lax.fori_loop(
         0, max_new, body, (cache, prompt_lengths, base, out))

@@ -1,4 +1,13 @@
-"""Token-level sampling utilities shared by the engines."""
+"""Token-level sampling utilities shared by the engines (DESIGN.md §11).
+
+Everything here is fixed-shape tensor algebra, jit-safe inside the engines'
+compiled step graphs.  The central contract is that the *same* warp
+(temperature / top-k / top-p) is applied to every distribution that enters a
+rejection-sampling identity — target p and draft q — so acceptance preserves
+the warped target distribution exactly.  ``temperature <= 0`` degenerates to
+a one-hot at the argmax, making greedy the temp->0 limit of every code path
+rather than a separate branch.
+"""
 from __future__ import annotations
 
 import jax
@@ -20,3 +29,76 @@ def typical_threshold(logp, eps: float = 0.3, delta: float = 0.09):
     """Medusa typical-acceptance threshold: min(eps, delta * exp(-H))."""
     H = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
     return jnp.minimum(eps, delta * jnp.exp(-H))
+
+
+def _per_row(x, logits):
+    """Broadcast a scalar-or-[B] control against ``logits [..., V]``.
+
+    The serving scheduler batches per-request temperature/top-p as [B]
+    device arrays while the engines pass python floats; both land here."""
+    x = jnp.asarray(x, jnp.float32)
+    return x.reshape(x.shape + (1,) * (logits.ndim - x.ndim))
+
+
+def warp_logits(logits, temperature=1.0, top_k: int = 0, top_p=1.0):
+    """Temperature / top-k / top-p logit warping -> f32 logits.
+
+    ``temperature`` and ``top_p`` may be scalars or per-row [B] arrays
+    (broadcast against the leading axes); ``top_k`` is static.  Masked
+    tokens become -inf; the top-1 token always survives, so the warped row
+    is never empty.  ``temperature <= 0`` returns an exact one-hot row at
+    ``argmax(logits)`` (first max wins, matching ``jnp.argmax``), which is
+    what makes sampled decoding collapse to greedy at temp 0.
+    """
+    x = logits.astype(jnp.float32)
+    t = _per_row(temperature, logits)
+    warped = x / jnp.maximum(t, 1e-6)
+    if top_k and top_k < x.shape[-1]:
+        kth = jax.lax.top_k(x, top_k)[0][..., -1:]
+        warped = jnp.where(x < kth, -jnp.inf, warped)
+    # nucleus: keep the smallest descending-probability prefix with mass
+    # >= top_p (the exclusive cumulative keeps the top-1 unconditionally)
+    p = _per_row(top_p, logits)
+    sorted_w = jnp.flip(jnp.sort(warped, axis=-1), axis=-1)
+    probs = jax.nn.softmax(sorted_w, axis=-1)
+    keep = (jnp.cumsum(probs, axis=-1) - probs) < p
+    n_keep = jnp.maximum(jnp.sum(keep, axis=-1, keepdims=True), 1)
+    cutoff = jnp.take_along_axis(sorted_w, n_keep - 1, axis=-1)
+    warped = jnp.where(warped < cutoff, -jnp.inf, warped)
+    # temperature <= 0: exact greedy, one-hot at the pre-warp argmax
+    onehot = jax.nn.one_hot(jnp.argmax(x, axis=-1), x.shape[-1], dtype=bool)
+    return jnp.where(t <= 0, jnp.where(onehot, 0.0, -jnp.inf), warped)
+
+
+def warp_probs(logits, temperature=1.0, top_k: int = 0, top_p=1.0):
+    """Warped probabilities (rows sum to 1; masked tokens are exactly 0)."""
+    return jax.nn.softmax(warp_logits(logits, temperature, top_k, top_p),
+                          axis=-1)
+
+
+def sample(key, logits, temperature=1.0, top_k: int = 0, top_p=1.0):
+    """One token per row from the warped distribution.  Deterministic argmax
+    at ``temperature <= 0`` (the only finite warped logit is the argmax)."""
+    return jax.random.categorical(
+        key, warp_logits(logits, temperature, top_k, top_p),
+        axis=-1).astype(jnp.int32)
+
+
+def residual_dist(p, q):
+    """The rejection-sampling residual ``norm(max(p - q, 0))`` (DESIGN.md
+    §11).
+
+    ``p``/``q`` [..., V] probability rows -> a probability row (sums to 1).
+    When the residual carries no mass (p == q, a rejection-probability-zero
+    event reachable only through float round-off) it falls back to ``p``
+    itself so downstream ``categorical`` stays well-defined.
+    """
+    r = jnp.maximum(p - q, 0.0)
+    s = jnp.sum(r, axis=-1, keepdims=True)
+    return jnp.where(s > 1e-9, r / jnp.maximum(s, 1e-38), p)
+
+
+def categorical_from_probs(key, probs):
+    """Sample from probability rows (zeros stay strictly unsampleable)."""
+    logp = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-38)), -jnp.inf)
+    return jax.random.categorical(key, logp, axis=-1).astype(jnp.int32)

@@ -4,6 +4,11 @@ Everything here is fixed-shape tensor algebra — no host synchronisation, no
 data-dependent shapes.  The acceptance outcome only changes *values*
 (indices fed to gathers), exactly the paper's reconciliation of dynamic
 speculative verification with static-graph execution.
+
+Four acceptance rules share the ``Verdict`` contract: ``greedy_verify``
+(lossless argmax match), ``typical_verify`` (Medusa's lossy typical
+acceptance), and the lossless stochastic pair ``sample_verify_chain`` /
+``sample_verify_tree`` (rejection-sampling verification, DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sampling as S
 from repro.core.tree import TreeBuffers
 
 
@@ -24,10 +30,25 @@ class DeviceTree(NamedTuple):
     node_choice: jnp.ndarray     # [T-1] int32
     retrieve: jnp.ndarray        # [P, K+1] int32
     retrieve_valid: jnp.ndarray  # [P, K+1] bool
+    children: jnp.ndarray        # [T, Cmax] int32, -1 padded
     T: int
     K: int
     P: int
     max_topk: int
+    Cmax: int
+
+
+def _children_table(tb: TreeBuffers):
+    """[T, Cmax] child-node table (-1 padded) from the parent array — the
+    static structure the sampled tree walk descends (DESIGN.md §11)."""
+    kids = [[] for _ in range(tb.T)]
+    for n in range(1, tb.T):
+        kids[int(tb.parent[n])].append(n)
+    cmax = max((len(k) for k in kids), default=0) or 1
+    tab = np.full((tb.T, cmax), -1, np.int32)
+    for n, k in enumerate(kids):
+        tab[n, : len(k)] = k
+    return tab, cmax
 
 
 def device_tree(tb: TreeBuffers) -> DeviceTree:
@@ -35,13 +56,15 @@ def device_tree(tb: TreeBuffers) -> DeviceTree:
 
     tb: ``core.tree.TreeBuffers`` -> DeviceTree with mask [T, T] bool,
     depths [T] int32, node_head/node_choice [T-1] int32, retrieve
-    [P, K+1] int32, retrieve_valid [P, K+1] bool (shapes fixed for the
-    lifetime of the compiled step — DESIGN.md §2)."""
+    [P, K+1] int32, retrieve_valid [P, K+1] bool, children [T, Cmax] int32
+    (shapes fixed for the lifetime of the compiled step — DESIGN.md §2)."""
+    children, cmax = _children_table(tb)
     return DeviceTree(
         mask=jnp.asarray(tb.mask), depths=jnp.asarray(tb.depths),
         node_head=jnp.asarray(tb.node_head), node_choice=jnp.asarray(tb.node_choice),
         retrieve=jnp.asarray(tb.retrieve), retrieve_valid=jnp.asarray(tb.retrieve_valid),
-        T=tb.T, K=tb.K, P=tb.P, max_topk=tb.max_topk)
+        children=jnp.asarray(children),
+        T=tb.T, K=tb.K, P=tb.P, max_topk=tb.max_topk, Cmax=cmax)
 
 
 def generate_candidates(base_token, medusa_tok, dt: DeviceTree):
@@ -136,3 +159,122 @@ def typical_verify(candidates, logits, dtree: DeviceTree, key,
                         argmax_only, trimmed)
     next_tok = jax.random.categorical(key, trimmed, axis=-1).astype(jnp.int32)
     return v._replace(next_token=next_tok)
+
+
+def sample_verify_chain(candidates, logits, draft_logits, dtree: DeviceTree,
+                        key, temperature=1.0, top_k: int = 0,
+                        top_p=1.0) -> Verdict:
+    """Lossless chain rejection-sampling verification (Leviathan/Chen;
+    DESIGN.md §11) for the draft-model engine.
+
+    candidates [B, gamma+1] int32 (slot 0 = the already-certain base token),
+    logits [B, gamma+1, V] target logits (node i predicts token i+1),
+    draft_logits [B, gamma, V] the draft distributions that *sampled*
+    candidates[:, 1:].  Draft token x_i is accepted with probability
+    min(1, p_i(x_i)/q_i(x_i)) — evaluated division-free as ``u*q < p`` with
+    u ~ U[0,1) — and the first rejection resamples from the residual
+    ``norm(max(p - q, 0))``; a full accept draws the bonus token from the
+    target distribution at the last node.  p and q pass through the same
+    warp, so the committed stream is distributed exactly as warped-target
+    autoregressive sampling.  ``temperature``/``top_p`` may be per-row [B].
+    """
+    B, T = candidates.shape
+    gamma = T - 1
+    p = S.warp_probs(logits, temperature, top_k, top_p)            # [B,T,V]
+    q = S.warp_probs(draft_logits, temperature, top_k, top_p)      # [B,g,V]
+    x = candidates[:, 1:]                                          # [B,g]
+    px = jnp.take_along_axis(p[:, :-1], x[..., None], axis=-1)[..., 0]
+    qx = jnp.take_along_axis(q, x[..., None], axis=-1)[..., 0]
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, gamma))
+    accept = u * qx < px
+    acc = 1 + jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1), axis=-1)
+    last = acc - 1                                                 # [B]
+    p_last = jnp.take_along_axis(p, last[:, None, None], axis=1)[:, 0]
+    q_last = jnp.take_along_axis(
+        q, jnp.minimum(last, gamma - 1)[:, None, None], axis=1)[:, 0]
+    full = (acc == T)[:, None]
+    next_dist = jnp.where(full, p_last, S.residual_dist(p_last, q_last))
+    next_token = S.categorical_from_probs(kr, next_dist)
+    path_slots = jnp.broadcast_to(dtree.retrieve[0], (B, dtree.K + 1))
+    return Verdict(acc.astype(jnp.int32), path_slots.astype(jnp.int32),
+                   candidates, next_token, last.astype(jnp.int32))
+
+
+def sample_verify_tree(candidates, logits, mprob, dtree: DeviceTree, key,
+                       temperature=1.0, top_k: int = 0, top_p=1.0) -> Verdict:
+    """Multi-round per-node rejection sampling over the static tree
+    (DESIGN.md §11) — the lossless stochastic mode for the Medusa engine.
+
+    candidates [B, T] int32, logits [B, T, V], mprob [B, K, max_topk] f32
+    the Medusa head probabilities that ranked the candidates (the draft
+    distribution q).  The walk starts at the root with the warped target
+    distribution r = p; at each accepted node the sibling candidates are
+    tested highest-q first, candidate x being accepted with the residual
+    mass r(x) — the ``min(1, r/q)`` rule at a deterministic top-k
+    proposal's point-mass limit (q -> delta_x), the only acceptance
+    probability that preserves the target distribution when the proposals
+    are not themselves sampled (DESIGN.md §11) — and each rejection removes
+    x's mass: r <- norm(max(r - r(x)·delta_x, 0)).  A row whose node
+    rejects every child samples its next token from the final residual; a
+    row that walks the full depth samples the bonus from the target
+    distribution at the leaf.  Everything is fixed-shape: K rounds of a
+    Cmax-long sibling scan over [B, V] residual rows, acceptance outcomes
+    changing only gather indices and ``where`` masks.
+    """
+    B, T = candidates.shape
+    P_all = S.warp_probs(logits, temperature, top_k, top_p)        # [B,T,V]
+    rows = jnp.arange(B)
+    if T > 1:
+        qnode = mprob[:, dtree.node_head, dtree.node_choice]       # [B,T-1]
+        qnode = jnp.concatenate(
+            [jnp.ones((B, 1), qnode.dtype), qnode], axis=1)        # [B,T]
+    else:
+        qnode = jnp.ones((B, 1), jnp.float32)
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, max(dtree.K, 1), dtree.Cmax))
+
+    cur = jnp.zeros((B,), jnp.int32)
+    stopped = jnp.zeros((B,), bool)
+    r = P_all[:, 0]
+    acc = jnp.ones((B,), jnp.int32)
+    K1 = dtree.K + 1
+    path_slots = jnp.zeros((B, K1), jnp.int32)
+    path_tokens = jnp.zeros((B, K1), jnp.int32).at[:, 0].set(candidates[:, 0])
+
+    for d in range(1, K1):
+        tab = dtree.children[cur]                                  # [B,Cmax]
+        qkids = jnp.where(tab >= 0,
+                          qnode[rows[:, None], jnp.maximum(tab, 0)], -1.0)
+        order = jnp.argsort(-qkids, axis=1)          # valid first, q desc
+        tab = jnp.take_along_axis(tab, order, axis=1)
+
+        def sibling(carry, xs):
+            r, accepted, chosen = carry
+            ch, uj = xs                                            # [B],[B]
+            valid = (ch >= 0) & ~stopped & ~accepted
+            x = candidates[rows, jnp.maximum(ch, 0)]
+            px = r[rows, x]
+            take = valid & (uj < px)
+            removed = r.at[rows, x].set(0.0)
+            s = jnp.sum(removed, axis=-1, keepdims=True)
+            removed = jnp.where(s > 1e-9, removed / jnp.maximum(s, 1e-38), r)
+            rejected = valid & ~take
+            r = jnp.where(rejected[:, None], removed, r)
+            chosen = jnp.where(take, ch, chosen)
+            return (r, accepted | take, chosen), None
+
+        (r, accepted, chosen), _ = jax.lax.scan(
+            sibling, (r, jnp.zeros((B,), bool), cur),
+            (tab.T, u[:, d - 1].T))
+        # accepted rows descend: their residual resets to the target
+        # distribution at the new node for the next round
+        r = jnp.where(accepted[:, None], P_all[rows, chosen], r)
+        acc = acc + accepted.astype(jnp.int32)
+        path_slots = path_slots.at[:, d].set(chosen)
+        path_tokens = path_tokens.at[:, d].set(candidates[rows, chosen])
+        stopped = stopped | ~accepted
+        cur = chosen
+
+    next_token = S.categorical_from_probs(kr, r)
+    return Verdict(acc, path_slots, path_tokens, next_token, cur)

@@ -15,7 +15,27 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.5: promoted to the top level
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.3x: pre-promotion home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect
+
+# the replication-check kwarg was renamed (check_rep -> check_vma) across
+# the promotion; resolve whichever this jax build understands
+_CHECK_KW = next((k for k in ("check_vma", "check_rep")
+                  if k in inspect.signature(_shard_map).parameters), None)
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """Version-compat ``shard_map``: one call site syntax for jax 0.4.3x
+    (``jax.experimental.shard_map``, ``check_rep``) and newer jax
+    (``jax.shard_map``, ``check_vma``)."""
+    kw = {_CHECK_KW: check} if _CHECK_KW else {}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
 
 
 def ag_matmul_local(x_loc, w, axis_name: str):
@@ -40,11 +60,11 @@ def ag_matmul_local(x_loc, w, axis_name: str):
 
 def ag_matmul(x, w, mesh: Mesh, axis_name: str = "model"):
     """pjit-level wrapper: x sharded on last dim over ``axis_name``."""
-    fn = shard_map(
+    fn = shard_map_compat(
         functools.partial(ag_matmul_local, axis_name=axis_name),
         mesh=mesh,
         in_specs=(P(*(None,) * (x.ndim - 1), axis_name), P(None, None)),
         out_specs=P(*(None,) * x.ndim),
-        check_vma=False,   # result is replicated after the full ring
+        check=False,   # result is replicated after the full ring
     )
     return fn(x, w)

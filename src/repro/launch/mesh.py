@@ -9,16 +9,27 @@ from __future__ import annotations
 import jax
 
 
+def mesh_axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types`` kwarg for ``jax.make_mesh`` — empty on jax builds that
+    predate it.
+
+    jax 0.4.3x ships neither ``jax.sharding.AxisType`` nor the
+    ``axis_types`` parameter; newer jax wants the axes declared explicitly
+    as ``Auto``.  Call sites splat the result unconditionally so one code
+    path covers both (the version-compat shim behind the 3 former tier-1
+    collectives/sharding failures)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_types_kwargs(len(axes)))
 
 
 def make_dev_mesh(model: int = 1, data: int = 1):
     """Small mesh for CPU multi-device tests (subprocess sets device count)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         **mesh_axis_types_kwargs(2))

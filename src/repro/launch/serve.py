@@ -11,6 +11,7 @@ import time
 import jax
 import numpy as np
 
+from repro.configs.base import SamplingParams
 from repro.configs.registry import ALL_ARCHS, get_config
 from repro.core import medusa as M
 from repro.core.engine import SpecEngine
@@ -34,6 +35,14 @@ def main():
     ap.add_argument("--cache-dtype", default="", choices=("", "int8"),
                     help="KV-cache storage layout (DESIGN.md §10); int8 "
                          "halves cache bytes per slot")
+    ap.add_argument("--accept", default="greedy", choices=("greedy", "sample"),
+                    help="verification mode: greedy argmax match or lossless "
+                         "stochastic rejection sampling (DESIGN.md §11)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (accept=sample; "
+                         "0 is exact greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus truncation (accept=sample)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -43,7 +52,9 @@ def main():
     model = get_model(cfg)
     params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
     tb = chain_tree(4) if cfg.spec_mode == "chain" else medusa_63()
-    eng = SpecEngine(cfg, tb)
+    eng = SpecEngine(cfg, tb, accept=args.accept,
+                     sampling=SamplingParams(temperature=args.temperature,
+                                             top_p=args.top_p))
     mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, tb.K))
 
     srv = MedusaServer(eng, params, mp, batch_slots=args.slots,
@@ -52,7 +63,8 @@ def main():
     t0 = time.time()
     rids = [srv.submit(rng.integers(0, cfg.vocab_size,
                                     size=int(rng.integers(4, 48))).astype(np.int32),
-                       max_new=args.max_new)
+                       max_new=args.max_new, temperature=args.temperature,
+                       top_p=args.top_p)
             for _ in range(args.requests)]
     iters = srv.run()
     dt = time.time() - t0

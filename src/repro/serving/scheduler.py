@@ -31,6 +31,13 @@ restarted server loses no work (at-least-once semantics).
 [1, bucket] prefill call plus a host-side cache insert per request) for the
 equality tests and the `benchmarks/bench_serving.py` comparison.
 
+Per-request sampling (DESIGN.md §11): each ``Request`` carries
+``temperature``/``top_p``, batched as per-slot [B] device arrays through the
+jitted step and admission calls and consumed by an ``accept="sample"``
+engine's rejection-sampling verification. Temperature 0 warps to exact
+greedy, so greedy and sampled requests mix in one static step and a temp-0
+request reproduces the greedy scheduler's output token for token.
+
 Cache capacity (DESIGN.md §10): the per-slot device state is dominated by
 the attention KV cache, whose storage dtype follows ``cfg.cache_dtype`` —
 ``init_cache`` builds the int8 layout transparently, and every scheduler
@@ -80,6 +87,11 @@ class Request:
     eos_id: Optional[int] = None
     deadline_s: Optional[float] = None  # wall-clock straggler bound
     max_steps: Optional[int] = None     # decode-step budget
+    # per-request sampling controls (DESIGN.md §11) — honoured when the
+    # engine runs accept="sample"; temperature 0.0 is exact greedy, so a
+    # mixed batch of greedy and sampled requests shares one static step
+    temperature: float = 0.0
+    top_p: float = 1.0
     submitted_at: float = field(default_factory=time.monotonic)
     output: List[int] = field(default_factory=list)
     steps: int = 0
@@ -144,6 +156,8 @@ class MedusaServer:
         self._active = np.zeros((self.B,), bool)
         self._eos = np.full((self.B,), NO_EOS, np.int32)
         self._maxnew = np.zeros((self.B,), np.int32)
+        self._temp = np.zeros((self.B,), np.float32)   # per-request sampling
+        self._topp = np.ones((self.B,), np.float32)    # (DESIGN.md §11)
         self._done_now = np.zeros((self.B,), bool)
         self._slotmeta_dev = None   # device copies, refreshed only on mutation
 
@@ -152,20 +166,29 @@ class MedusaServer:
         # The B-slot cache/state args are donated: the old buffers are dead
         # after each call, so XLA aliases them instead of holding 2x cache.
         self._admit_jit = jax.jit(self._admit_bucket_impl,
-                                  donate_argnums=(4, 5, 6, 7, 8))
+                                  donate_argnums=(7, 8, 9, 10, 11, 12))
         self._prefill_jit = jax.jit(
-            lambda p, mp, t, l, c: self.engine.prefill(p, mp, t, l, c))
+            lambda p, mp, t, l, c, key, temp, topp: self.engine.prefill(
+                p, mp, t, l, c, key=key, temperature=temp, top_p=topp))
         self._step_jit = jax.jit(self._serve_step_impl,
-                                 donate_argnums=(2, 3, 4, 5, 6))
+                                 donate_argnums=(2, 3, 4, 5, 6, 7))
 
     # ------------------------------------------------------------------ API
 
     def submit(self, prompt: np.ndarray, max_new: int, eos_id=None,
-               deadline_s=None, max_steps=None) -> int:
+               deadline_s=None, max_steps=None, temperature: Optional[float] = None,
+               top_p: Optional[float] = None) -> int:
+        """``temperature``/``top_p`` take effect when the engine verifies
+        with ``accept="sample"`` (DESIGN.md §11); omitted values fall back
+        to the engine's ``SamplingParams``, and temperature 0.0 reproduces
+        greedy output exactly.  Greedy/typical engines ignore them."""
+        sp = self.engine.sampling
         self._rid += 1
-        self.queue.append(Request(self._rid, np.asarray(prompt, np.int32),
-                                  max_new, eos_id, deadline_s,
-                                  max_steps or 4 * max_new))
+        self.queue.append(Request(
+            self._rid, np.asarray(prompt, np.int32), max_new, eos_id,
+            deadline_s, max_steps or 4 * max_new,
+            temperature=sp.temperature if temperature is None else temperature,
+            top_p=sp.top_p if top_p is None else top_p))
         return self._rid
 
     def result(self, rid: int) -> Optional[Request]:
@@ -221,8 +244,9 @@ class MedusaServer:
 
     # ---------------------------------------------------- jitted device code
 
-    def _admit_bucket_impl(self, params, medusa_params, toks, plens,
-                           cache, lengths, base, mtok, n_out, src, mask):
+    def _admit_bucket_impl(self, params, medusa_params, toks, plens, gtemp,
+                           gtopp, key, cache, lengths, base, mtok, mprob,
+                           n_out, src, mask):
         """Prefill one bucket group [n, bucket] and merge it into the B-slot
         state in the same compiled call.
 
@@ -230,12 +254,15 @@ class MedusaServer:
         mask is False); mask [B] bool: slot receives a new request.  The
         merge is a gather from the small group batch + elementwise select —
         the scatter-free formulation ``_update_rows`` uses, which keeps a
-        seq-sharded cache local under SPMD.
+        seq-sharded cache local under SPMD.  gtemp/gtopp [n] are the group
+        rows' sampling params (the base token of a sample-mode engine is
+        drawn per request at its own temperature — DESIGN.md §11).
         """
         n = toks.shape[0]
         cache_n = self.engine.init_cache(n, self.max_len)
-        cache_n, len_n, base_n, mtok_n, _ = self.engine.prefill(
-            params, medusa_params, toks, plens, cache_n)
+        cache_n, len_n, base_n, mtok_n, mprob_n = self.engine.prefill(
+            params, medusa_params, toks, plens, cache_n,
+            key=key, temperature=gtemp, top_p=gtopp)
         srcc = jnp.clip(src, 0, n - 1)
 
         def merge(big, small):
@@ -247,19 +274,23 @@ class MedusaServer:
         lengths = jnp.where(mask, len_n[srcc], lengths)
         base = jnp.where(mask, base_n[srcc], base)
         mtok = jnp.where(mask[:, None, None], mtok_n[srcc], mtok)
+        mprob = jnp.where(mask[:, None, None], mprob_n[srcc], mprob)
         n_out = jnp.where(mask, 0, n_out)
-        return cache, lengths, base, mtok, n_out
+        return cache, lengths, base, mtok, mprob, n_out
 
     def _serve_step_impl(self, params, medusa_params, cache, lengths, base,
-                         mtok, n_out, key, active, eos_id, max_new):
+                         mtok, mprob, n_out, key, active, eos_id, max_new,
+                         temp, topp):
         """One masked speculative step + on-device bookkeeping.
 
         EOS detection, budget clipping and the done mask are folded into the
         compiled step so the host only reads the small ``SlotSync`` struct.
+        ``temp``/``topp`` [B] are the per-request sampling params batched as
+        per-slot device arrays (consumed by accept="sample" verification).
         """
-        cache, lengths, verdict, mtok = self.engine.spec_step(
+        cache, lengths, verdict, mtok, mprob = self.engine.spec_step(
             params, medusa_params, cache, lengths, base, mtok, key,
-            active=active)
+            active=active, mprob=mprob, temperature=temp, top_p=topp)
         K1 = verdict.path_tokens.shape[1]
         pos = jnp.arange(K1)
         within = pos[None, :] < verdict.acc[:, None]
@@ -273,7 +304,7 @@ class MedusaServer:
         n_out = n_out + n_take
         done = active & ((n_out >= max_new) | has_eos)
         sync = SlotSync(n_take, verdict.path_tokens, done)
-        return cache, lengths, verdict.next_token, mtok, n_out, sync
+        return cache, lengths, verdict.next_token, mtok, mprob, n_out, sync
 
     # ------------------------------------------------------------- internals
 
@@ -306,6 +337,8 @@ class MedusaServer:
             self._active[i] = True
             self._eos[i] = NO_EOS if req.eos_id is None else req.eos_id
             self._maxnew[i] = req.max_new
+            self._temp[i] = req.temperature
+            self._topp[i] = req.top_p
         self._slotmeta_dev = None
         self.stats["admitted"] += len(pairs)
         if self.admission == "serial":
@@ -322,18 +355,24 @@ class MedusaServer:
             n = _pow2(len(grp))
             toks = np.zeros((n, bucket), np.int32)
             plens = np.ones((n,), np.int32)      # padding rows: dummy length-1
+            gtemp = np.zeros((n,), np.float32)
+            gtopp = np.ones((n,), np.float32)
             src = np.zeros((self.B,), np.int32)
             mask = np.zeros((self.B,), bool)
             for j, (i, req) in enumerate(grp):
                 toks[j, : len(req.prompt)] = req.prompt[:bucket]
                 plens[j] = len(req.prompt)
+                gtemp[j] = req.temperature
+                gtopp[j] = req.top_p
                 src[i] = j
                 mask[i] = True
-            (self.cache, self.lengths, self.base, self.mtok,
+            self._key, sub = jax.random.split(self._key)
+            (self.cache, self.lengths, self.base, self.mtok, self.mprob,
              self.n_out) = self._admit_jit(
                 self.params, self.medusa_params, jnp.asarray(toks),
-                jnp.asarray(plens), self.cache, self.lengths, self.base,
-                self.mtok, self.n_out, jnp.asarray(src), jnp.asarray(mask))
+                jnp.asarray(plens), jnp.asarray(gtemp), jnp.asarray(gtopp),
+                sub, self.cache, self.lengths, self.base, self.mtok,
+                self.mprob, self.n_out, jnp.asarray(src), jnp.asarray(mask))
             self.stats["prefill_calls"] += 1
 
     def _prefill_one(self, req: Request, slot_idx: int):
@@ -343,8 +382,11 @@ class MedusaServer:
         toks[0, : len(req.prompt)] = req.prompt[:bucket]
         cache1 = self.engine.init_cache(1, self.max_len)
         lengths1 = jnp.asarray([len(req.prompt)], jnp.int32)
-        cache1, lengths1, base1, mtok1, _ = self._prefill_jit(
-            self.params, self.medusa_params, jnp.asarray(toks), lengths1, cache1)
+        self._key, sub = jax.random.split(self._key)
+        cache1, lengths1, base1, mtok1, mprob1 = self._prefill_jit(
+            self.params, self.medusa_params, jnp.asarray(toks), lengths1,
+            cache1, sub, jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_p], jnp.float32))
         self.stats["prefill_calls"] += 1
 
         # scatter the single-row cache into this slot (batch axis = 1)
@@ -355,6 +397,7 @@ class MedusaServer:
         self.lengths = self.lengths.at[slot_idx].set(lengths1[0])
         self.base = self.base.at[slot_idx].set(base1[0])
         self.mtok = self.mtok.at[slot_idx].set(mtok1[0])
+        self.mprob = self.mprob.at[slot_idx].set(mprob1[0])
         self.n_out = self.n_out.at[slot_idx].set(0)
 
     def _decode_step(self):
@@ -364,12 +407,15 @@ class MedusaServer:
         if self._slotmeta_dev is None:
             self._slotmeta_dev = (jnp.asarray(self._active),
                                   jnp.asarray(self._eos),
-                                  jnp.asarray(self._maxnew))
-        active, eos, maxnew = self._slotmeta_dev
-        (self.cache, self.lengths, self.base, self.mtok, self.n_out,
-         sync) = self._step_jit(
+                                  jnp.asarray(self._maxnew),
+                                  jnp.asarray(self._temp),
+                                  jnp.asarray(self._topp))
+        active, eos, maxnew, temp, topp = self._slotmeta_dev
+        (self.cache, self.lengths, self.base, self.mtok, self.mprob,
+         self.n_out, sync) = self._step_jit(
             self.params, self.medusa_params, self.cache, self.lengths,
-            self.base, self.mtok, self.n_out, sub, active, eos, maxnew)
+            self.base, self.mtok, self.mprob, self.n_out, sub, active, eos,
+            maxnew, temp, topp)
         self.stats["steps"] += 1
         acc = np.asarray(sync.acc)
         toks = np.asarray(sync.tokens)
@@ -434,4 +480,6 @@ class MedusaServer:
         K = max(self.engine.dtree.K, 1)
         self.base = jnp.zeros((self.B,), jnp.int32)
         self.mtok = jnp.zeros((self.B, K, self.engine.dtree.max_topk), jnp.int32)
+        self.mprob = jnp.zeros((self.B, K, self.engine.dtree.max_topk),
+                               jnp.float32)
         self.n_out = jnp.zeros((self.B,), jnp.int32)

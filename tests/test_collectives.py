@@ -24,7 +24,8 @@ def test_ag_matmul_matches_reference():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.distributed.collectives import ag_matmul
-mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import mesh_axis_types_kwargs
+mesh = jax.make_mesh((8,), ("model",), **mesh_axis_types_kwargs(1))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 64), jnp.float32)
 w = jax.random.normal(jax.random.PRNGKey(1), (64, 32), jnp.float32)
 xs = jax.device_put(x, NamedSharding(mesh, P(None, "model")))
@@ -42,16 +43,17 @@ def test_compressed_psum_grad_allreduce():
     out = _run(r"""
 import functools
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.training.optimizer import compressed_psum
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.collectives import shard_map_compat
+from repro.launch.mesh import mesh_axis_types_kwargs
+mesh = jax.make_mesh((4,), ("data",), **mesh_axis_types_kwargs(1))
 g = jax.random.normal(jax.random.PRNGKey(0), (4, 256), jnp.float32)
 
 def local(gs):
     return compressed_psum({"g": gs}, "data")["g"]
 
-fn = shard_map(local, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None))
+fn = shard_map_compat(local, mesh=mesh, in_specs=P("data", None), out_specs=P("data", None))
 gs = jax.device_put(g, NamedSharding(mesh, P("data", None)))
 out = jax.jit(fn)(gs)
 ref = np.tile(np.asarray(g).sum(0, keepdims=True), (4, 1))

@@ -117,7 +117,7 @@ def test_oracle_candidates_fully_accepted():
     assert int(base[0]) == int(ar[0, 0])
     mtok = np.zeros((B, K, 1), np.int32)
     mtok[0, :, 0] = np.asarray(ar)[0, 1: K + 1]            # perfect heads
-    cache, lengths, verdict, _ = eng.spec_step(
+    cache, lengths, verdict, _, _ = eng.spec_step(
         params, None, cache, lengths, base, jnp.asarray(mtok),
         jax.random.PRNGKey(2))
     assert int(verdict.acc[0]) == K + 1

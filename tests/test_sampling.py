@@ -1,0 +1,352 @@
+"""Lossless stochastic speculative sampling (DESIGN.md §11).
+
+Three layers of evidence, mirroring the greedy losslessness suite:
+
+* unit: logit warping, the rejection-sampling residual, and the
+  accepted-token marginal of chain verification (== the warped target
+  distribution, the Leviathan/Chen identity);
+* temp->0 collapse: ``accept="sample"`` at temperature 0 is token-identical
+  to the greedy engines across SpecEngine, DraftSpecEngine and the serving
+  scheduler;
+* distribution equality: at temperature > 0 on a tiny vocab, the marginals
+  of sampled speculative decoding match the sampled AR oracle
+  (``ar_generate_sampled``) within sampling noise, for both engines.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import max_marginal_tvd as _max_marginal_tvd
+from repro.configs.base import SamplingParams
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core import sampling as S
+from repro.core import verify as V
+from repro.core.draft_model import DraftSpecEngine
+from repro.core.engine import SpecEngine, ar_generate, ar_generate_sampled
+from repro.core.tree import cartesian_tree, chain_tree
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+
+
+# ---------------------------------------------------------------- unit: warp
+
+def test_warp_temperature_zero_is_onehot_greedy():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    p = np.asarray(S.warp_probs(logits, temperature=0.0))
+    am = np.asarray(jnp.argmax(logits, axis=-1))
+    assert np.allclose(p.sum(-1), 1.0)
+    for b in range(4):
+        assert p[b, am[b]] == 1.0
+    # and sampling at temp 0 is deterministic argmax
+    for seed in range(3):
+        tok = np.asarray(S.sample(jax.random.PRNGKey(seed), logits, 0.0))
+        np.testing.assert_array_equal(tok, am)
+
+
+def test_warp_top_k_top_p_masking():
+    logits = jnp.log(jnp.asarray([[0.4, 0.3, 0.2, 0.06, 0.04]]))
+    # top-k keeps exactly the k largest
+    p = np.asarray(S.warp_probs(logits, top_k=2))[0]
+    assert p[2] == p[3] == p[4] == 0.0
+    np.testing.assert_allclose(p[:2], [4 / 7, 3 / 7], rtol=1e-5)
+    # top-p keeps the smallest prefix whose mass reaches p (0.4+0.3 >= 0.65)
+    p = np.asarray(S.warp_probs(logits, top_p=0.65))[0]
+    assert p[2] == p[3] == p[4] == 0.0 and p[0] > 0 and p[1] > 0
+    # top-p never empties a row
+    p = np.asarray(S.warp_probs(logits, top_p=0.0))[0]
+    np.testing.assert_allclose(p, [1, 0, 0, 0, 0], atol=1e-6)
+
+
+def test_warp_per_row_temperature_broadcast():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 16))
+    temps = jnp.asarray([0.0, 0.5, 1.3])
+    p = np.asarray(S.warp_probs(logits, temperature=temps))
+    for b, t in enumerate([0.0, 0.5, 1.3]):
+        ref = np.asarray(S.warp_probs(logits[b], temperature=t))
+        np.testing.assert_allclose(p[b], ref, rtol=1e-5, atol=1e-7)
+
+
+# ------------------------------------------------------------ unit: residual
+
+def test_residual_dist_sums_to_one_and_matches_formula():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    p = jax.nn.softmax(jax.random.normal(k1, (8, 32)), axis=-1)
+    q = jax.nn.softmax(jax.random.normal(k2, (8, 32)), axis=-1)
+    r = np.asarray(S.residual_dist(p, q))
+    np.testing.assert_allclose(r.sum(-1), 1.0, rtol=1e-5)
+    ref = np.maximum(np.asarray(p) - np.asarray(q), 0)
+    ref = ref / ref.sum(-1, keepdims=True)
+    np.testing.assert_allclose(r, ref, rtol=1e-4, atol=1e-7)
+
+
+def test_residual_dist_degenerate_falls_back_to_p():
+    p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3), (4, 16)), axis=-1)
+    r = np.asarray(S.residual_dist(p, p))   # zero residual mass
+    np.testing.assert_allclose(r, np.asarray(p), rtol=1e-6)
+
+
+# ------------------------------- unit: chain rejection sampling is lossless
+
+def test_chain_accepted_marginal_matches_target():
+    """The Leviathan/Chen identity: with proposals sampled from q, the
+    emitted-token marginal equals the warped target p — at the first draft
+    position and, conditionally, at the second."""
+    Vc, gamma, B, temp = 8, 2, 30000, 0.8
+    k = jax.random.split(jax.random.PRNGKey(0), 5)
+    tlog = jax.random.normal(k[0], (gamma + 1, Vc)) * 1.5
+    dlog = jax.random.normal(k[1], (gamma, Vc)) * 1.5
+    q = S.warp_probs(dlog, temp)
+    x1 = jax.random.categorical(k[2], jnp.log(q[0]), shape=(B,)).astype(jnp.int32)
+    x2 = jax.random.categorical(k[3], jnp.log(q[1]), shape=(B,)).astype(jnp.int32)
+    cand = jnp.stack([jnp.zeros((B,), jnp.int32), x1, x2], axis=1)
+    dt = V.device_tree(chain_tree(gamma))
+    v = V.sample_verify_chain(
+        cand, jnp.broadcast_to(tlog[None], (B, gamma + 1, Vc)),
+        jnp.broadcast_to(dlog[None], (B, gamma, Vc)), dt, k[4],
+        temperature=temp)
+    acc = np.asarray(v.acc)
+    assert (acc >= 1).all() and (acc <= gamma + 1).all()
+    # stream position 1: the accepted draft token, or the residual resample
+    tok1 = np.where(acc >= 2, np.asarray(cand[:, 1]), np.asarray(v.next_token))
+    p0 = np.asarray(S.warp_probs(tlog[0], temp))
+    tvd1 = 0.5 * np.abs(np.bincount(tok1, minlength=Vc) / B - p0).sum()
+    assert tvd1 < 0.03, tvd1
+    # stream position 2, conditioned on position 1 accepted (the test's
+    # draft distributions are prefix-independent, so p1 is the target there)
+    sel = acc >= 2
+    tok2 = np.where(acc >= 3, np.asarray(cand[:, 2]),
+                    np.asarray(v.next_token))[sel]
+    p1 = np.asarray(S.warp_probs(tlog[1], temp))
+    tvd2 = 0.5 * np.abs(np.bincount(tok2, minlength=Vc) / sel.sum() - p1).sum()
+    assert tvd2 < 0.03, tvd2
+
+
+def test_chain_full_accept_bonus_from_target():
+    """When every draft token is accepted, next_token is drawn from the
+    target distribution at the last node (never from a residual)."""
+    Vc, gamma, B = 6, 2, 20000
+    tlog = jax.random.normal(jax.random.PRNGKey(5), (gamma + 1, Vc))
+    # draft == target and identical candidates => always full accept
+    dt = V.device_tree(chain_tree(gamma))
+    x = jnp.argmax(tlog, axis=-1).astype(jnp.int32)
+    cand = jnp.broadcast_to(jnp.concatenate([jnp.zeros((1,), jnp.int32), x[:-1]])[None],
+                            (B, gamma + 1))
+    v = V.sample_verify_chain(
+        cand, jnp.broadcast_to(tlog[None], (B, gamma + 1, Vc)),
+        jnp.broadcast_to(tlog[None][:, :-1], (B, gamma, Vc)), dt,
+        jax.random.PRNGKey(6), temperature=1.0)
+    acc = np.asarray(v.acc)
+    # draft proposes the target argmax; under temp 1 acceptance is
+    # min(1, p/q) = 1 because p == q at the proposed token
+    assert (acc == gamma + 1).all()
+    p_last = np.asarray(S.warp_probs(tlog[gamma], 1.0))
+    emp = np.bincount(np.asarray(v.next_token), minlength=Vc) / B
+    assert 0.5 * np.abs(emp - p_last).sum() < 0.03
+
+
+# --------------------------------- unit: tree walk collapses to greedy at 0
+
+def test_tree_walk_temp0_equals_greedy_verify():
+    tb = cartesian_tree((3, 2))
+    dt = V.device_tree(tb)
+    B, Vc = 128, 16
+    k = jax.random.split(jax.random.PRNGKey(7), 5)
+    # distinct per-head top-k tokens (what lax.top_k guarantees in vivo)
+    perm = jax.vmap(lambda kk: jax.random.permutation(kk, Vc))
+    m1 = perm(jax.random.split(k[0], B))[:, :3]
+    m2 = perm(jax.random.split(k[1], B))[:, :2]
+    mtok = jnp.zeros((B, 2, 3), jnp.int32)
+    mtok = mtok.at[:, 0, :3].set(m1).at[:, 1, :2].set(m2)
+    mprob = jax.random.uniform(k[2], (B, 2, 3))
+    base = jax.random.randint(k[3], (B,), 0, Vc)
+    cand = V.generate_candidates(base, mtok, dt)
+    logits = jax.random.normal(k[4], (B, dt.T, Vc)) * 2
+    gv = V.greedy_verify(cand, logits, dt)
+    sv = V.sample_verify_tree(cand, logits, mprob, dt, jax.random.PRNGKey(8),
+                              temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(gv.acc), np.asarray(sv.acc))
+    np.testing.assert_array_equal(np.asarray(gv.next_token),
+                                  np.asarray(sv.next_token))
+    np.testing.assert_array_equal(np.asarray(gv.last_slot),
+                                  np.asarray(sv.last_slot))
+    ga, pt_g, pt_s = (np.asarray(gv.acc), np.asarray(gv.path_tokens),
+                      np.asarray(sv.path_tokens))
+    for b in range(B):
+        np.testing.assert_array_equal(pt_g[b, : ga[b]], pt_s[b, : ga[b]])
+
+
+# -------------------------------------------------- end-to-end temp0 identity
+
+def _setup(arch="qwen1.5-0.5b", seed=1, **over):
+    cfg = dataclasses.replace(get_config(arch, reduced=True), **over)
+    m = get_model(cfg)
+    params, _ = split_params(m.init_params(jax.random.PRNGKey(seed), cfg))
+    tb = cartesian_tree((2, 2))
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(seed + 1), cfg, tb.K))
+    mp["w1"] = jax.random.normal(jax.random.PRNGKey(seed + 2), mp["w1"].shape,
+                                 mp["w1"].dtype) * 0.1
+    return cfg, m, params, mp, tb
+
+
+def test_sample_temp0_identity_spec_engine():
+    cfg, m, params, mp, tb = _setup()
+    B, SP, NEW = 2, 8, 12
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, cfg.vocab_size)
+    lens = jnp.full((B,), SP, jnp.int32)
+    SMAX = SP + NEW + tb.T + 8
+    ar, _ = ar_generate(cfg, params, toks, lens, m.init_cache(cfg, B, SMAX), NEW)
+    sp0 = SamplingParams(temperature=0.0)
+    out, n_out, _ = SpecEngine(cfg, tb, accept="sample", sampling=sp0).generate(
+        params, mp, toks, lens, m.init_cache(cfg, B, SMAX), NEW,
+        key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(out))
+    assert (np.asarray(n_out) == NEW).all()
+
+
+def test_sample_temp0_identity_draft_engine():
+    cfg, m, params, _, _ = _setup()
+    dcfg = dataclasses.replace(cfg, num_layers=2, name="draft")
+    dparams, _ = split_params(m.init_params(jax.random.PRNGKey(9), dcfg))
+    B, SP, NEW = 2, 8, 12
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, cfg.vocab_size)
+    lens = jnp.full((B,), SP, jnp.int32)
+    SMAX = SP + NEW + 16
+    ar, _ = ar_generate(cfg, params, toks, lens, m.init_cache(cfg, B, SMAX), NEW)
+    eng = DraftSpecEngine(cfg, dcfg, gamma=3, accept="sample",
+                          sampling=SamplingParams(temperature=0.0))
+    out, n_out, _ = eng.generate(params, dparams, toks, lens,
+                                 m.init_cache(cfg, B, SMAX),
+                                 m.init_cache(dcfg, B, SMAX), NEW,
+                                 key=jax.random.PRNGKey(4))
+    np.testing.assert_array_equal(np.asarray(ar), np.asarray(out))
+    assert (np.asarray(n_out) == NEW).all()
+
+
+def test_scheduler_per_request_temperature_zero_matches_greedy(rng):
+    """accept="sample" engine + per-request temperature 0 reproduces the
+    greedy scheduler token for token; a temp>0 request rides along in the
+    same static step and still completes to budget (mixed batch)."""
+    from repro.serving.scheduler import MedusaServer
+    cfg, m, params, mp, tb = _setup()
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 11, 17)]
+    greedy_srv = MedusaServer(SpecEngine(cfg, tb), params, mp,
+                              batch_slots=2, max_len=256)
+    gids = [greedy_srv.submit(p, max_new=8) for p in prompts]
+    greedy_srv.run()
+
+    eng = SpecEngine(cfg, tb, accept="sample",
+                     sampling=SamplingParams(temperature=0.7))
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256)
+    rids = [srv.submit(p, max_new=8, temperature=0.0) for p in prompts]
+    hot = srv.submit(prompts[0], max_new=8, temperature=0.9, top_p=0.95)
+    srv.run()
+    for rid, gid in zip(rids, gids):
+        assert srv.result(rid).status == "done"
+        assert srv.result(rid).output == greedy_srv.result(gid).output
+    assert srv.result(hot).status == "done"
+    assert len(srv.result(hot).output) == 8
+
+
+# --------------------------------------------- distribution equality (TVD)
+
+def _tiny_vocab_setup(seed=1):
+    cfg, m, params, mp, tb = _setup(seed=seed, vocab_size=16, num_layers=2)
+    B, SP = 1024, 4
+    prompt = jax.random.randint(jax.random.PRNGKey(0), (1, SP), 0,
+                                cfg.vocab_size)
+    toks = jnp.broadcast_to(prompt, (B, SP))
+    lens = jnp.full((B,), SP, jnp.int32)
+    return cfg, m, params, mp, tb, toks, lens, B, SP
+
+
+def test_draft_sampled_distribution_matches_ar_sampled():
+    """Tiny-vocab distribution equality: B independent rows of sampled
+    draft-model speculative decoding vs the sampled AR oracle, gated
+    against the AR-vs-AR sampling-noise floor."""
+    cfg, m, params, _, _, toks, lens, B, SP = _tiny_vocab_setup()
+    dcfg = dataclasses.replace(cfg, num_layers=1, name="draft")
+    dparams, _ = split_params(m.init_params(jax.random.PRNGKey(7), dcfg))
+    NEW = 5
+    SMAX = SP + NEW + 16
+    sp = SamplingParams(temperature=0.9)
+    eng = DraftSpecEngine(cfg, dcfg, gamma=3, accept="sample", sampling=sp)
+    spec, n_out, _ = eng.generate(params, dparams, toks, lens,
+                                  m.init_cache(cfg, B, SMAX),
+                                  m.init_cache(dcfg, B, SMAX), NEW,
+                                  key=jax.random.PRNGKey(11))
+    assert (np.asarray(n_out) == NEW).all()
+    ar1, _ = ar_generate_sampled(cfg, params, toks, lens,
+                                 m.init_cache(cfg, B, SMAX), NEW,
+                                 jax.random.PRNGKey(12), sp)
+    ar2, _ = ar_generate_sampled(cfg, params, toks, lens,
+                                 m.init_cache(cfg, B, SMAX), NEW,
+                                 jax.random.PRNGKey(13), sp)
+    floor = _max_marginal_tvd(np.asarray(ar1), np.asarray(ar2), cfg.vocab_size)
+    tvd = _max_marginal_tvd(np.asarray(spec), np.asarray(ar1), cfg.vocab_size)
+    assert tvd <= 1.5 * floor + 0.05, (tvd, floor)
+
+
+def test_tree_sampled_distribution_matches_ar_sampled():
+    """Same gate for the Medusa tree walk (untrained heads: heavy rejection,
+    so the per-node residual path carries most of the mass)."""
+    cfg, m, params, mp, tb, toks, lens, B, SP = _tiny_vocab_setup(seed=2)
+    NEW = 5
+    SMAX = SP + NEW + tb.T + 8
+    sp = SamplingParams(temperature=0.9)
+    eng = SpecEngine(cfg, tb, accept="sample", sampling=sp)
+    spec, n_out, _ = eng.generate(params, mp, toks, lens,
+                                  m.init_cache(cfg, B, SMAX), NEW,
+                                  key=jax.random.PRNGKey(21))
+    assert (np.asarray(n_out) == NEW).all()
+    ar1, _ = ar_generate_sampled(cfg, params, toks, lens,
+                                 m.init_cache(cfg, B, SMAX), NEW,
+                                 jax.random.PRNGKey(22), sp)
+    ar2, _ = ar_generate_sampled(cfg, params, toks, lens,
+                                 m.init_cache(cfg, B, SMAX), NEW,
+                                 jax.random.PRNGKey(23), sp)
+    floor = _max_marginal_tvd(np.asarray(ar1), np.asarray(ar2), cfg.vocab_size)
+    tvd = _max_marginal_tvd(np.asarray(spec), np.asarray(ar1), cfg.vocab_size)
+    assert tvd <= 1.5 * floor + 0.05, (tvd, floor)
+
+
+# ------------------------------------------------- StepStats.accepted_sum fix
+
+def test_accepted_sum_counts_clamped_acc_without_bonus():
+    """Regression for the accepted_sum accounting: it must equal the sum of
+    per-step acc clamped to the remaining max_new budget, excluding the
+    final bonus token (the old ``sum(n_out)`` included both biases)."""
+    cfg, m, params, mp, tb = _setup()
+    B, SP, NEW = 2, 8, 7
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, cfg.vocab_size)
+    lens = jnp.full((B,), SP, jnp.int32)
+    SMAX = SP + NEW + tb.T + 8
+    eng = SpecEngine(cfg, tb)
+    out, n_out, stats = eng.generate(params, mp, toks, lens,
+                                     m.init_cache(cfg, B, SMAX), NEW)
+
+    # replay generate()'s loop (same PRNG splits) accumulating the spec
+    key = jax.random.PRNGKey(0)
+    key, kp = jax.random.split(key)
+    cache, lengths, base, mtok, mprob = eng.prefill(
+        params, mp, toks, lens, m.init_cache(cfg, B, SMAX), key=kp)
+    n = np.zeros((B,), np.int64)
+    expected, steps = 0, 0
+    while steps < NEW and (n < NEW).any():
+        key, sub = jax.random.split(key)
+        cache, lengths, verdict, mtok, mprob = eng.spec_step(
+            params, mp, cache, lengths, base, mtok, sub, mprob=mprob)
+        base = verdict.next_token
+        acc = np.asarray(verdict.acc)
+        expected += int(np.minimum(acc, np.maximum(NEW - n, 0)).sum())
+        n += acc
+        steps += 1
+    assert int(stats.steps) == steps
+    assert int(stats.accepted_sum) == expected
+    assert int(stats.accepted_sum) <= B * NEW
+    # the old accounting (sum of final n_out incl. bonus) was strictly larger
+    assert int(jnp.sum(stats.tokens_out)) > int(stats.accepted_sum)

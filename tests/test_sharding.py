@@ -57,10 +57,10 @@ from repro.configs.base import SHAPES
 from repro.configs.registry import get_config
 from repro.distributed.sharding import axis_rules
 from repro.distributed import profiles
+from repro.launch.mesh import mesh_axis_types_kwargs
 from repro.launch.specs import build_cell
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = jax.make_mesh((2, 4), ("data", "model"), **mesh_axis_types_kwargs(2))
 cfg = get_config("qwen1.5-0.5b", reduced=True)
 import dataclasses
 shape = dataclasses.replace(SHAPES["decode_32k"], seq_len=512, global_batch=8)
