@@ -16,14 +16,15 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_fig34_speedup, bench_kv_quant,
-                            bench_sampling, bench_serving,
-                            bench_table2_heads, roofline)
+                            bench_prefix_cache, bench_sampling,
+                            bench_serving, bench_table2_heads, roofline)
     suites = [
         ("table2", bench_table2_heads.run),
         ("fig3+fig4+eq2", bench_fig34_speedup.run),
         ("serving", bench_serving.run),
         ("kv_quant", bench_kv_quant.run),
         ("sampling", bench_sampling.run),
+        ("prefix_cache", bench_prefix_cache.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

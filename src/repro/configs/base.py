@@ -80,6 +80,11 @@ class ModelConfig:
     param_dtype: str = "float32"   # training master weight dtype
     cache_dtype: str = ""          # KV-cache storage dtype; "" => dtype;
                                    # "int8" => quantized layout (DESIGN.md §10)
+    cache_layout: str = "dense"    # "dense" per-slot [B, max_len] rows, or
+                                   # "paged": global block pool + per-slot
+                                   # block tables (DESIGN.md §12)
+    page_size: int = 64            # paged layout: logical rows per block
+                                   # (TPU kernel wants a multiple of 8)
     max_position: int = 1 << 20    # rope table upper bound (lazy — computed per call)
     # --- attention flavour ---
     full_attention: bool = True    # False for ssm; hybrid is "not full" (sub-quadratic)
@@ -132,6 +137,13 @@ class ModelConfig:
     def resolved_cache_dtype(self) -> str:
         """Storage dtype of the attention KV cache (DESIGN.md §10)."""
         return self.cache_dtype or self.dtype
+
+    @property
+    def paged(self) -> bool:
+        """True if the attention cache uses the paged layout (DESIGN.md §12)."""
+        if self.cache_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_layout {self.cache_layout!r}")
+        return self.cache_layout == "paged"
 
     def kv_cache_bytes_per_token(self) -> int:
         """Bytes of attention KV cache per committed token across all layers

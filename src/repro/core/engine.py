@@ -83,10 +83,13 @@ class SpecEngine:
                 sp.top_k,
                 sp.top_p if top_p is None else top_p)
 
-    def init_cache(self, batch: int, max_len: int):
+    def init_cache(self, batch: int, max_len: int, n_blocks=None):
         """Decode cache for ``batch`` slots honouring ``cfg.cache_dtype``
-        (int8 layout halves cache bytes per slot — DESIGN.md §10)."""
-        return self.model.init_cache(self.cfg, batch, max_len)
+        (int8 layout halves cache bytes per slot — DESIGN.md §10) and
+        ``cfg.cache_layout`` (``n_blocks`` sizes the paged pool; None means
+        the allocator-free identity table — DESIGN.md §12)."""
+        return self.model.init_cache(self.cfg, batch, max_len,
+                                     n_blocks=n_blocks)
 
     # -- one-shot pieces (jit-friendly pure functions) ----------------------
 
@@ -108,6 +111,49 @@ class SpecEngine:
         else:
             base = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         mtok, mprob = self._heads(medusa_params, last_hidden)
+        return cache, lengths, base, mtok, mprob
+
+    def suffix_prefill(self, params, medusa_params, cache, lengths, tokens,
+                       n_valid, active, key=None, temperature=None,
+                       top_p=None):
+        """Continue a prefill from cached prefix rows (prefix-cache
+        admission, DESIGN.md §12).
+
+        The scheduler maps a request's shared prompt blocks into its slot's
+        block table and only the un-cached suffix runs through the model:
+        a causal T-token decode over ``tokens`` [B, T] (right-padded
+        suffixes) starting at ``lengths`` [B] (the per-slot cached-prefix
+        length), committed for ``n_valid`` [B] true suffix rows on slots
+        where ``active`` [B] is True — inactive slots keep their lengths
+        frozen exactly as in the masked serving step (DESIGN.md §9) and
+        their dead writes sink per the paged write rules.
+
+        Returns (cache, lengths, base [B], mtok [B, K, topk], mprob) with
+        meaningful values on active rows only.  Sampling mirrors
+        ``prefill``: under ``accept="sample"`` with a ``key`` the base
+        token is drawn from the warped target logits at the last valid
+        suffix position (``temperature``/``top_p`` may be per-row [B]
+        arrays); otherwise argmax.
+        """
+        B, T = tokens.shape
+        causal = jnp.tril(jnp.ones((T, T), bool))
+        depths = jnp.arange(T, dtype=jnp.int32)
+        hidden, spec_cache = self.model.decode(
+            params, self.cfg, cache, tokens, lengths, causal, depths,
+            use_kernel=self.use_kernel)
+        path = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        nv = jnp.clip(n_valid, 1, T)
+        cache, lengths = self.model.commit(self.cfg, spec_cache, lengths,
+                                           path, nv, active=active)
+        h_last = jnp.take_along_axis(
+            hidden, (nv - 1)[:, None, None], axis=1)[:, 0]        # [B, d]
+        logits = self.model.unembed(params, self.cfg, h_last)
+        if self.accept == "sample" and key is not None:
+            t, k, p = self._sampling_args(temperature, top_p)
+            base = S.sample(key, logits, t, k, p)
+        else:
+            base = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        mtok, mprob = self._heads(medusa_params, h_last)
         return cache, lengths, base, mtok, mprob
 
     def _heads(self, medusa_params, hidden):
@@ -165,7 +211,14 @@ class SpecEngine:
 
     def generate(self, params, medusa_params, tokens, prompt_lengths, cache,
                  max_new: int, extra_embeds=None, key=None):
-        """Medusa generation: returns (out_tokens [B, max_new+K], n_out [B], stats)."""
+        """Full Medusa generation loop — one compiled step graph inside a
+        single ``lax.while_loop`` (§2 static-shape contract).
+
+        tokens [B, S_p] int32 right-padded prompts, prompt_lengths [B]
+        int32, cache from ``init_cache`` (any layout/dtype — dense/paged,
+        fp/int8).  Returns (out_tokens [B, max_new] int32, n_out [B] int32
+        true lengths, StepStats).  ``key`` drives prefill base sampling and
+        per-step acceptance draws under ``accept="sample"``."""
         cfg, dt = self.cfg, self.dtree
         key = key if key is not None else jax.random.PRNGKey(0)
         B = tokens.shape[0]
@@ -217,7 +270,11 @@ class SpecEngine:
 
 def ar_generate(cfg: ModelConfig, params, tokens, prompt_lengths, cache,
                 max_new: int, extra_embeds=None):
-    """Greedy autoregressive baseline on the same cache machinery (T=1)."""
+    """Greedy autoregressive baseline on the same cache machinery (T=1).
+
+    tokens [B, S_p] int32, prompt_lengths [B] int32, cache from
+    ``init_cache`` (any layout/dtype).  Returns (out [B, max_new] int32,
+    lengths [B] int32 final cache lengths)."""
     model = get_model(cfg)
     B = tokens.shape[0]
     chain1 = jnp.ones((1, 1), bool)
@@ -292,8 +349,11 @@ def _squeeze_spec(model, cfg, spec_cache, lengths):
 
     Attn entries drop only the in-flight ``*_new`` rows; persistent leaves
     (k/v and, under the int8 cache layout, k_scale/v_scale — DESIGN.md §10)
-    pass through untouched.
+    pass through untouched, as does the paged layout's ``_pages`` block-
+    table state (DESIGN.md §12).
     """
+    from repro.models.transformer import PAGES_KEY
+
     def keep(entry):
         return {n: x for n, x in entry.items() if not n.endswith("_new")}
 
@@ -303,4 +363,5 @@ def _squeeze_spec(model, cfg, spec_cache, lengths):
         return {k: v[:, :, 0] for k, v in entry.items()}
     if cfg.family == "encdec":
         return {"self": keep(spec_cache["self"]), "cross": spec_cache["cross"]}
-    return {k: fix_entry(v) for k, v in spec_cache.items()}
+    return {k: (v if k == PAGES_KEY else fix_entry(v))
+            for k, v in spec_cache.items()}

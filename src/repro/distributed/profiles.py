@@ -12,6 +12,7 @@ while the 32 q heads still shard).
 """
 from __future__ import annotations
 
+import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -57,7 +58,16 @@ def cache_pspecs(cache_abstract, cfg: ModelConfig, shape: ShapeConfig,
     batch>=mesh-data: shard batch over DP axes and KV-seq over model
     (flash-decoding style sequence parallelism for the cache sweep).
     batch==1 (long_500k): shard KV-seq over every available axis instead.
+
+    Paged layout (DESIGN.md §12): these per-slot axis rules do not apply to
+    pool-form leaves — the k/v "batch" axis is the global block pool and
+    the seq axis is one page.  The pool is replicated for now (the §12
+    sharding caveat: the paged scatter defeats the §7 scatter-free trick),
+    so every leaf, table included, gets a fully replicated spec.
     """
+    if cfg.paged:
+        return jax.tree.map(lambda arr: P(*(None,) * arr.ndim),
+                            cache_abstract)
     ba = batch_axes(multi_pod)
     b1 = shape.global_batch == 1
     kvseq = (("pod", "data", "model") if multi_pod else ("data", "model")) if b1 \

@@ -68,6 +68,59 @@ def commit_rows_stacked(cache, rows, lengths, **kw):
     return out.reshape(cache.shape)
 
 
+def _kernel_paged(lens_ref, tbl_ref, rows_ref, pool_ref, out_ref, sem,
+                  *, K1: int, ps: int, mb: int):
+    b = pl.program_id(0)
+    start = lens_ref[b]
+    for j in range(K1):                     # K1 static: unrolled row DMAs
+        pos = start + j
+        lb = pos // ps
+        # rows past the table's reach sink into the trash block (paging.py)
+        blk = jnp.where(lb < mb, tbl_ref[b, jnp.minimum(lb, mb - 1)], 0)
+        cp = pltpu.make_async_copy(
+            rows_ref.at[0, j], out_ref.at[blk, pos % ps], sem)
+        cp.start()
+        cp.wait()
+
+
+def commit_rows_paged(pool, block_tables, rows, lengths, *,
+                      interpret: bool | None = None):
+    """In-place commit through a block table (the paged layout, DESIGN.md
+    §12).
+
+    pool [n_blocks, page_size, H, D] any dtype (donated), block_tables
+    [B, max_blocks] int32, rows [B, K1, H, D] (cast to pool dtype),
+    lengths [B] int32.  Each committed row lands at physical row
+    ``(block_tables[b, pos//ps], pos%ps)`` for pos in
+    [lengths[b], lengths[b]+K1) — K1 per-row async DMAs per slot (rows may
+    straddle a block boundary), still O(K1 rows) of traffic.  Rows beyond
+    the table's reach sink into reserved block 0.  Returns pool."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_blocks, ps, H, D = pool.shape
+    B, K1 = rows.shape[:2]
+    mb = block_tables.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, K1, H, D), lambda b, lens, tbl: (b, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[pltpu.SemaphoreType.DMA],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel_paged, K1=K1, ps=ps, mb=mb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={3: 0},   # pool arg -> output (in-place)
+        interpret=interpret,
+    )
+    return fn(lengths, block_tables.astype(jnp.int32),
+              rows.astype(pool.dtype), pool)
+
+
 def commit_rows_quantized(cache, scale_cache, rows, lengths, **kw):
     """In-place commit into the int8 cache layout (DESIGN.md §10).
 
@@ -82,3 +135,16 @@ def commit_rows_quantized(cache, scale_cache, rows, lengths, **kw):
     qrows, srows = quantize_rows(rows)
     return (commit_rows(cache, qrows, lengths, **kw),
             commit_rows(scale_cache, srows, lengths, **kw))
+
+
+def commit_rows_paged_quantized(pool, scale_pool, block_tables, rows,
+                                lengths, **kw):
+    """Fused quantize + paged commit: int8 value pool
+    [n_blocks, page_size, H, D] + f32 scale pool [n_blocks, page_size, H, 1]
+    (both donated), rows [B, K1, H, D] fp — the int8 write fusion of
+    DESIGN.md §10 through the block table of §12.  Returns
+    (pool, scale_pool)."""
+    from repro.kernels.quant import quantize_rows
+    qrows, srows = quantize_rows(rows)
+    return (commit_rows_paged(pool, block_tables, qrows, lengths, **kw),
+            commit_rows_paged(scale_pool, block_tables, srows, lengths, **kw))

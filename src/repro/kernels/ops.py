@@ -2,10 +2,11 @@
 semantics = (cache sweep via kernel) ⊕ (tiny tree block) merged exactly via
 partial-softmax stats.
 
-Accepts both cache layouts (DESIGN.md §10): fp k/v, or int8 k/v with
-per-head-per-row f32 scales.  On non-TPU backends the kernel runs in
-interpret mode (tests); the jnp tree block and the merge are
-backend-agnostic.
+Accepts both cache dtypes (DESIGN.md §10): fp k/v, or int8 k/v with
+per-head-per-row f32 scales — and both cache layouts (DESIGN.md §12):
+dense per-slot rows, or the paged block pool addressed through per-slot
+``block_tables``.  On non-TPU backends the kernel runs in interpret mode
+(tests); the jnp tree block and the merge are backend-agnostic.
 """
 from __future__ import annotations
 
@@ -25,7 +26,8 @@ def _pick_block(S: int):
 
 def tree_attention(q, k, v, tree_mask, lengths, scale, *,
                    k_scale=None, v_scale=None, k_tree=None, v_tree=None,
-                   block_s: int | None = None, interpret: bool | None = None):
+                   block_tables=None, block_s: int | None = None,
+                   interpret: bool | None = None):
     """Tree-decode attention over a committed cache plus T in-flight rows.
 
     q [B, T, Hq, D] f32/bf16; k/v [B, S, Hkv, D] — fp, or int8 with
@@ -35,16 +37,27 @@ def tree_attention(q, k, v, tree_mask, lengths, scale, *,
     ``k_tree``/``v_tree`` [B, T, Hkv, D] fp (the in-flight tree rows —
     fake-quantized by the caller under int8) to skip the gather from a
     potentially seq-sharded cache.  Returns [B, T, Hq, D] in q.dtype.
+
+    Paged cache (DESIGN.md §12): pass ``block_tables`` [B, max_blocks]
+    int32 with pool-form k/v [n_blocks, page_size, Hkv, D] (scales
+    [n_blocks, page_size, Hkv, 1]); ``k_tree``/``v_tree`` are then
+    required — the in-flight rows live outside the pool, so there is no
+    per-slot array to gather them from.
     """
     B, T, Hq, D = q.shape
-    S, Hkv = k.shape[1], k.shape[2]
+    paged = block_tables is not None
+    if paged:
+        assert k_tree is not None, "paged tree_attention requires k_tree/v_tree"
+        S, Hkv = block_tables.shape[1] * k.shape[1], k.shape[2]
+    else:
+        S, Hkv = k.shape[1], k.shape[2]
     G = Hq // Hkv
     quantized = k.dtype == jnp.int8
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
     # tiny/odd caches fall through to flash_decode's pad/clamp path
-    bs = block_s or _pick_block(S) or 128
+    bs = None if paged else (block_s or _pick_block(S) or 128)
 
     # fold q: [B,T,Hq,D] -> [B,Hkv,R,D], row r = g*T_pad + t
     T_pad = T
@@ -53,13 +66,15 @@ def tree_attention(q, k, v, tree_mask, lengths, scale, *,
     qp = jnp.pad(q, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
     qf = qp.reshape(B, T_pad, Hkv, G, D).transpose(0, 2, 3, 1, 4)
     qf = qf.reshape(B, Hkv, G * T_pad, D) * jnp.asarray(scale, q.dtype)
-    kt = k.transpose(0, 2, 1, 3)                            # [B,Hkv,S,D]
+    # dense [B,S,Hkv,D] -> [B,Hkv,S,D]; pool [nb,ps,Hkv,D] -> [nb,Hkv,ps,D]
+    kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     kst = k_scale.transpose(0, 2, 1, 3) if quantized else None
     vst = v_scale.transpose(0, 2, 1, 3) if quantized else None
 
+    fd_kw = ({"block_tables": block_tables} if paged else {"block_s": bs})
     acc1, m1, l1 = flash_decode(qf, kt, vt, lengths, k_scale=kst, v_scale=vst,
-                                block_s=bs, interpret=interpret)  # [B,Hkv,R,D] f32
+                                interpret=interpret, **fd_kw)  # [B,Hkv,R,D] f32
 
     # --- tree block (tiny) --------------------------------------------------
     if k_tree is None:

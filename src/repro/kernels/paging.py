@@ -1,0 +1,108 @@
+"""Paged KV-cache primitives (DESIGN.md §12).
+
+The dense layout pins one `[max_len]` cache row per decode slot, so slot
+count — not bandwidth — caps batch size once the int8 layout (§10) has
+halved the sweep bytes.  The paged layout breaks that coupling: all slots
+draw fixed-size blocks from one global pool
+
+  * pool  `k`/`v`  ``[n_blocks, page_size, Hkv, D]``   (per layer, any dtype)
+  * table          ``[B, max_blocks] int32``           (shared by all layers)
+
+where ``table[b, j]`` is the physical block holding slot ``b``'s logical
+rows ``[j*page_size, (j+1)*page_size)``.  One physical block id addresses
+the same index in every layer's pool (and in the int8 scale pools), so a
+single table drives the whole stack.
+
+**Block 0 is the reserved trash block**: never allocated, mapped by every
+empty table entry, and the target of any write that falls outside a slot's
+mapped range.  Dead writes (idle slots inside the static serving step,
+rows past a slot's capacity) land there instead of corrupting a
+neighbour's block; nothing ever reads block 0 for a committed position
+because the ``col < length`` masks already exclude it.
+
+These helpers are the XLA formulation shared by the reference oracle, the
+pure-jnp model paths and the tests; the Pallas kernel consumes the same
+table via scalar prefetch (``tree_attention.flash_decode(block_tables=)``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+TRASH_BLOCK = 0  # physical block 0: reserved write sink, never allocated
+
+
+def blocks_for(n_tokens: int, page_size: int) -> int:
+    """Physical blocks needed to hold ``n_tokens`` logical rows."""
+    return -(-int(n_tokens) // page_size)
+
+
+def identity_table(batch: int, max_blocks: int):
+    """The allocator-free block table: slot ``b`` owns the contiguous
+    physical blocks ``[1 + b*max_blocks, 1 + (b+1)*max_blocks)`` (skipping
+    the trash block).  Engine-level paths (``SpecEngine.generate``, the AR
+    baselines) use this so paging degenerates to dense-with-chunking and
+    needs no allocator; the serving scheduler replaces it with pool-managed
+    tables."""
+    base = 1 + np.arange(batch, dtype=np.int32)[:, None] * max_blocks
+    return jnp.asarray(base + np.arange(max_blocks, dtype=np.int32)[None, :])
+
+
+def phys_rows(table, starts, T: int, page_size: int):
+    """Flattened physical row ids for logical rows [starts, starts+T).
+
+    table [B, max_blocks] int32, starts [B] int32 -> [B, T] int32 indices
+    into the ``[n_blocks*page_size]``-flattened pool.  Logical rows beyond
+    the table's reach (``starts+T > max_blocks*page_size``) resolve to the
+    trash block — the paged analogue of ``_update_rows`` dropping
+    out-of-range writes on the dense layout."""
+    pos = starts[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]   # [B, T]
+    lb = pos // page_size
+    ok = lb < table.shape[1]
+    blk = jnp.take_along_axis(table, jnp.minimum(lb, table.shape[1] - 1),
+                              axis=1)
+    blk = jnp.where(ok, blk, TRASH_BLOCK)
+    return blk * page_size + pos % page_size
+
+
+def gather_cache(pool, table):
+    """Dense view of a paged cache: pool [n_blocks, page_size, ...] +
+    table [B, max_blocks] -> [B, max_blocks*page_size, ...].
+
+    This is the XLA read path (and the oracle's): one gather materialises
+    exactly the array the dense layout stores, so every dense consumer —
+    masks, two-part merges, the fp/int8 dequant helpers — runs unchanged on
+    it.  The Pallas kernel path never materialises this view; it follows
+    the table per block inside the sweep (DESIGN.md §12)."""
+    out = jnp.take(pool, table, axis=0)           # [B, max_blocks, ps, ...]
+    return out.reshape((table.shape[0], table.shape[1] * pool.shape[1])
+                       + pool.shape[2:])
+
+
+def scatter_rows(pool, table, rows, starts, page_size: int):
+    """Paged row write: rows [B, T, ...] land at logical [starts, starts+T)
+    through the table.  pool [n_blocks, page_size, ...] any dtype (rows are
+    cast); returns the updated pool.
+
+    Distinct slots map distinct blocks (allocator invariant), so the
+    scatter indices are unique except for trash-block sinks — whose values
+    are never read — making the write order-independent."""
+    B, T = rows.shape[:2]
+    phys = phys_rows(table, starts, T, page_size).reshape(-1)
+    flat = pool.reshape((pool.shape[0] * page_size,) + pool.shape[2:])
+    flat = flat.at[phys].set(rows.astype(pool.dtype).reshape((B * T,)
+                                                             + rows.shape[2:]))
+    return flat.reshape(pool.shape)
+
+
+def scatter_rows_stacked(pool, table, rows, starts, page_size: int):
+    """``scatter_rows`` with the scanned-units axis kept: pool
+    [nu, n_blocks, page_size, ...], rows [nu, B, T, ...], one shared table —
+    a physical block id addresses the same index in every unit's pool."""
+    nu = pool.shape[0]
+    B, T = rows.shape[1:3]
+    phys = phys_rows(table, starts, T, page_size).reshape(-1)
+    flat = pool.reshape((nu, pool.shape[1] * page_size) + pool.shape[3:])
+    flat = flat.at[:, phys].set(
+        rows.astype(pool.dtype).reshape((nu, B * T) + rows.shape[3:]))
+    return flat.reshape(pool.shape)

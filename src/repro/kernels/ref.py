@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import paging as P
 from repro.kernels import quant as Q
 
 
@@ -55,3 +56,19 @@ def tree_attention_ref_int8(q, k, v, k_scale, v_scale, tree_mask, lengths,
     return tree_attention_ref(q, Q.dequantize(k, k_scale, q.dtype),
                               Q.dequantize(v, v_scale, q.dtype),
                               tree_mask, lengths, scale)
+
+
+def tree_attention_ref_paged(q, k, v, block_tables, tree_mask, lengths,
+                             scale, k_scale=None, v_scale=None):
+    """Paged-cache oracle (DESIGN.md §12): k/v are pool-form
+    [n_blocks, page_size, Hkv, D] (int8 variants carry k_scale/v_scale
+    pools [n_blocks, page_size, Hkv, 1] f32) and ``block_tables``
+    [B, max_blocks] int32 maps each slot's logical blocks to pool blocks.
+    Gathers the dense view up front and reuses the dense oracles — the
+    kernel's in-sweep table indirection must agree."""
+    kd, vd = P.gather_cache(k, block_tables), P.gather_cache(v, block_tables)
+    if k_scale is not None:
+        return tree_attention_ref_int8(
+            q, kd, vd, P.gather_cache(k_scale, block_tables),
+            P.gather_cache(v_scale, block_tables), tree_mask, lengths, scale)
+    return tree_attention_ref(q, kd, vd, tree_mask, lengths, scale)

@@ -19,6 +19,16 @@ scales, each grid step DMAs the int8 block plus its [BS, 1] f32 scale
 column in the same schedule and dequantizes in VMEM right before the MXU
 dot — HBM traffic per step drops to ~(D+4)/(2*D) of the bf16 sweep while
 the online-softmax math stays in f32 exactly as in the fp path.
+
+Paged KV path (DESIGN.md §12): with ``block_tables`` the cache arrives as a
+global block pool [n_blocks, Hkv, block_s, D] instead of per-batch rows, and
+the kernel follows the per-slot table inside the sweep: the KV index map
+reads ``block_tables[b, s]`` (a second scalar-prefetch operand, resolved
+on-chip like ``lengths``) to pick the physical block for grid step ``s`` —
+the same indirection the dense index map already performs for the
+skip-refetch trick, now through one extra SMEM lookup.  The kernel body is
+unchanged: masking still runs on logical columns ``s*block_s + i < length``,
+and the int8 scale pools ride the identical table.
 """
 from __future__ import annotations
 
@@ -92,6 +102,13 @@ def _kernel(lengths_ref,                       # scalar prefetch [B] int32
         l_ref[0, 0] = l_scr[...]
 
 
+def _kernel_paged(lengths_ref, tables_ref, *rest, block_s: int, n_s: int,
+                  quantized: bool):
+    """Paged wrapper: the block table is consumed by the index maps only —
+    the body's logical-column masking is layout-independent."""
+    _kernel(lengths_ref, *rest, block_s=block_s, n_s=n_s, quantized=quantized)
+
+
 def _fit_blocks(S: int, block_s: int):
     """(block_s', pad) such that block_s' divides S+pad and stays a multiple
     of 128 lanes.  Replaces the former hard ``S % block_s == 0`` assert: a
@@ -107,43 +124,64 @@ def _fit_blocks(S: int, block_s: int):
 
 
 def flash_decode(q, k, v, lengths, *, k_scale=None, v_scale=None,
-                 block_s: int = 512, interpret: bool = False):
+                 block_tables=None, block_s: int = 512,
+                 interpret: bool = False):
     """Partial-softmax decode attention over the committed cache region.
 
     q [B, Hkv, R, D] f32/bf16 (pre-scaled by 1/sqrt(D)); lengths [B] int32.
-    k/v [B, Hkv, S, D] — either fp (f32/bf16), or int8 with
+
+    Dense layout: k/v [B, Hkv, S, D] — fp (f32/bf16), or int8 with
     ``k_scale``/``v_scale`` [B, Hkv, S, 1] f32 per-head-per-row scales
-    (the int8 cache layout, DESIGN.md §10).  S need not be a multiple of
-    ``block_s``; see ``_fit_blocks``.  Returns un-normalised partial-softmax
-    stats (acc [B, Hkv, R, D] f32, m [B, Hkv, R, 1] f32, l [B, Hkv, R, 1]
-    f32) for the exact tree-block merge in ``ops.py``.
+    (DESIGN.md §10).  S need not be a multiple of ``block_s``; see
+    ``_fit_blocks``.
+
+    Paged layout (DESIGN.md §12): pass ``block_tables`` [B, max_blocks]
+    int32 and the pool forms k/v [n_blocks, Hkv, page_size, D] (int8 scales
+    [n_blocks, Hkv, page_size, 1]); ``block_s`` is the pool's page size and
+    grid step ``s`` sweeps physical block ``block_tables[b, s]``.
+
+    Returns un-normalised partial-softmax stats (acc [B, Hkv, R, D] f32,
+    m/l [B, Hkv, R, 1] f32) for the exact tree-block merge in ``ops.py``.
     """
     B, Hkv, R, D = q.shape
-    S = k.shape[2]
     quantized = k.dtype == jnp.int8
     assert quantized == (k_scale is not None), (k.dtype, k_scale is None)
-    block_s, pad_s = _fit_blocks(S, block_s)
-    if pad_s:
-        pad = ((0, 0), (0, 0), (0, pad_s), (0, 0))
-        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
-        if quantized:
-            k_scale, v_scale = jnp.pad(k_scale, pad), jnp.pad(v_scale, pad)
-        S += pad_s
-    n_s = S // block_s
+    paged = block_tables is not None
+    if paged:
+        block_s = k.shape[2]
+        n_s = block_tables.shape[1]
 
-    def q_map(b, h, s, lens):
-        return (b, h, 0, 0)
+        def kv_map(b, h, s, lens, tbl):
+            # follow the slot's table; beyond-length steps are skipped in the
+            # body — refetch the slot's first block so the DMA is a cheap
+            # repeat (possibly the trash block for idle slots; never read).
+            return (tbl[b, jnp.where(s * block_s < lens[b], s, 0)], h, 0, 0)
 
-    def kv_map(b, h, s, lens):
-        # beyond-length blocks are skipped in the body; refetch block 0 so the
-        # DMA is a cheap repeat instead of a dead fetch.
-        return (b, h, jnp.where(s * block_s < lens[b], s, 0), 0)
+        def io_map(b, h, s, lens, tbl):
+            return (b, h, 0, 0)
+    else:
+        S = k.shape[2]
+        block_s, pad_s = _fit_blocks(S, block_s)
+        if pad_s:
+            pad = ((0, 0), (0, 0), (0, pad_s), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            if quantized:
+                k_scale, v_scale = jnp.pad(k_scale, pad), jnp.pad(v_scale, pad)
+            S += pad_s
+        n_s = S // block_s
 
-    def o_map(b, h, s, lens):
-        return (b, h, 0, 0)
+        def kv_map(b, h, s, lens):
+            # beyond-length blocks are skipped in the body; refetch block 0
+            # so the DMA is a cheap repeat instead of a dead fetch.
+            return (b, h, jnp.where(s * block_s < lens[b], s, 0), 0)
 
+        def io_map(b, h, s, lens):
+            return (b, h, 0, 0)
+
+    # dense and paged share the block geometry: (1, 1, block_s, D) slices of
+    # [B, Hkv, S, D] or of the [n_blocks, Hkv, page_size, D] pool.
     in_specs = [
-        pl.BlockSpec((1, 1, R, D), q_map),
+        pl.BlockSpec((1, 1, R, D), io_map),
         pl.BlockSpec((1, 1, block_s, D), kv_map),
         pl.BlockSpec((1, 1, block_s, D), kv_map),
     ]
@@ -156,13 +194,13 @@ def flash_decode(q, k, v, lengths, *, k_scale=None, v_scale=None,
         inputs += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if paged else 1,
         grid=(B, Hkv, n_s),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, R, D), o_map),
-            pl.BlockSpec((1, 1, R, 1), o_map),
-            pl.BlockSpec((1, 1, R, 1), o_map),
+            pl.BlockSpec((1, 1, R, D), io_map),
+            pl.BlockSpec((1, 1, R, 1), io_map),
+            pl.BlockSpec((1, 1, R, 1), io_map),
         ],
         scratch_shapes=[
             pltpu.VMEM((R, D), jnp.float32),
@@ -175,11 +213,16 @@ def flash_decode(q, k, v, lengths, *, k_scale=None, v_scale=None,
         jax.ShapeDtypeStruct((B, Hkv, R, 1), jnp.float32),
         jax.ShapeDtypeStruct((B, Hkv, R, 1), jnp.float32),
     ]
+    body = (functools.partial(_kernel_paged, block_s=block_s, n_s=n_s,
+                              quantized=quantized) if paged else
+            functools.partial(_kernel, block_s=block_s, n_s=n_s,
+                              quantized=quantized))
     fn = pl.pallas_call(
-        functools.partial(_kernel, block_s=block_s, n_s=n_s,
-                          quantized=quantized),
+        body,
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
     )
+    if paged:
+        return fn(lengths, block_tables.astype(jnp.int32), *inputs)
     return fn(lengths, *inputs)

@@ -33,8 +33,18 @@ def main():
                     help="scheduler v2 batched bucketed prefill (default) "
                          "or v1-style per-request admission")
     ap.add_argument("--cache-dtype", default="", choices=("", "int8"),
-                    help="KV-cache storage layout (DESIGN.md §10); int8 "
+                    help="KV-cache storage dtype (DESIGN.md §10); int8 "
                          "halves cache bytes per slot")
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="KV-cache layout (DESIGN.md §12): dense per-slot "
+                         "rows, or a paged global block pool with per-slot "
+                         "block tables")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="paged layout: logical rows per pool block")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse shared prompt-prefix blocks across requests "
+                         "(requires --cache-layout paged; DESIGN.md §12)")
     ap.add_argument("--accept", default="greedy", choices=("greedy", "sample"),
                     help="verification mode: greedy argmax match or lossless "
                          "stochastic rejection sampling (DESIGN.md §11)")
@@ -46,9 +56,11 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
-    if args.cache_dtype:
+    if args.cache_dtype or args.cache_layout != "dense":
         import dataclasses
-        cfg = dataclasses.replace(cfg, cache_dtype=args.cache_dtype)
+        cfg = dataclasses.replace(cfg, cache_dtype=args.cache_dtype,
+                                  cache_layout=args.cache_layout,
+                                  page_size=args.page_size)
     model = get_model(cfg)
     params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
     tb = chain_tree(4) if cfg.spec_mode == "chain" else medusa_63()
@@ -58,7 +70,8 @@ def main():
     mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, tb.K))
 
     srv = MedusaServer(eng, params, mp, batch_slots=args.slots,
-                       max_len=args.max_len, admission=args.admission)
+                       max_len=args.max_len, admission=args.admission,
+                       prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = [srv.submit(rng.integers(0, cfg.vocab_size,
@@ -75,6 +88,11 @@ def main():
     print(f"admission={args.admission}: {srv.stats['admitted']} slot "
           f"admissions (incl. retries) in {srv.stats['prefill_calls']} "
           f"prefill calls")
+    if args.cache_layout == "paged":
+        print(f"paged: peak {srv.stats['peak_blocks']}/{srv.n_blocks - 1} "
+              f"blocks, {srv.stats['deferred']} deferred admissions, "
+              f"{srv.stats['cached_tokens']} prompt tokens served from the "
+              f"prefix cache ({srv.stats['cow_copies']} CoW copies)")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.status} steps={r.steps} "
               f"tokens/step={len(r.output)/max(r.steps,1):.2f}")

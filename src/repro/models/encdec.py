@@ -121,12 +121,19 @@ def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None, remat=Tru
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
-               abstract: bool = False):
+               abstract: bool = False, n_blocks=None):
     """Self-attn cache follows ``cfg.resolved_cache_dtype`` (int8 layout adds
     k_scale/v_scale, DESIGN.md §10); the cross cache stays in ``cfg.dtype``
     — it is written once per request and O(frontend_len), not swept per
     step, so quantizing it saves nothing on the memory model's traffic term.
+
+    The paged layout (DESIGN.md §12) is decoder-only-transformer scoped:
+    the enc-dec family keeps dense caches.
     """
+    if cfg.paged:
+        raise NotImplementedError(
+            "cache_layout='paged' is not supported for the encdec family "
+            "(DESIGN.md §12); use the dense layout")
     dt = jnp.dtype(dtype or cfg.resolved_cache_dtype)
     xdt = jnp.dtype(cfg.dtype)
     nu, hd = cfg.num_layers, cfg.resolved_head_dim

@@ -21,9 +21,24 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import Param, logical
+from repro.kernels import paging as P
 from repro.kernels import quant as Q
 from repro.models import layers as L
 from repro.models import ssm as S
+
+# cache-pytree key holding the paged layout's block-table state; it is not a
+# layer entry (no leading n_units axis), so every scan over the cache splits
+# it off first (DESIGN.md §12)
+PAGES_KEY = "_pages"
+
+
+def split_pages(cache):
+    """(layer_entries, pages_or_None).  ``pages`` is ``{"table":
+    [B, max_blocks] int32}`` under the paged layout, None under dense."""
+    if PAGES_KEY in cache:
+        return {k: v for k, v in cache.items() if k != PAGES_KEY}, \
+            cache[PAGES_KEY]
+    return cache, None
 
 
 # ---------------------------------------------------------------------------
@@ -203,13 +218,24 @@ def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
-               abstract: bool = False):
+               abstract: bool = False, n_blocks=None):
     """Static decode state. Mirrors the unit structure; leading dim = n_units.
 
     The attention-cache storage dtype follows ``cfg.resolved_cache_dtype``
     (overridable via ``dtype``).  For int8 each attn entry carries the
     quantized layout (DESIGN.md §10): ``k``/``v`` [nu, B, S, Hkv, D] int8
     plus ``k_scale``/``v_scale`` [nu, B, S, Hkv, 1] float32.
+
+    Under ``cfg.cache_layout == "paged"`` (DESIGN.md §12) the attention
+    entries become pool-form — ``k``/``v`` [nu, n_blocks, page_size, Hkv, D]
+    (scales [nu, n_blocks, page_size, Hkv, 1]) — plus a top-level
+    ``"_pages"`` entry holding the shared block table [B, max_blocks] int32
+    with max_blocks = ceil(max_len / page_size).  With ``n_blocks=None``
+    the pool is sized for the allocator-free identity table (one contiguous
+    block run per slot plus the reserved trash block 0); an explicit
+    ``n_blocks`` (the serving scheduler's HBM-budgeted pool) starts with
+    all-zero tables for the allocator to populate.  SSM entries stay
+    per-slot — only attention state pages.
     """
     dt = jnp.dtype(dtype or cfg.resolved_cache_dtype)
     nu = n_units(cfg)
@@ -217,17 +243,29 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
           else (lambda shape, d: jnp.zeros(shape, d)))
     cache = {}
     hd = cfg.resolved_head_dim
+    paged = cfg.paged
+    if paged:
+        ps = cfg.page_size
+        mb = P.blocks_for(max_len, ps)
+        nb = (1 + batch * mb) if n_blocks is None else int(n_blocks)
+        kv_shape = (nu, nb, ps, cfg.num_kv_heads, hd)
+        sc_shape = (nu, nb, ps, cfg.num_kv_heads, 1)
+        if abstract:
+            table = jax.ShapeDtypeStruct((batch, mb), jnp.int32)
+        elif n_blocks is None:
+            table = P.identity_table(batch, mb)
+        else:
+            table = jnp.zeros((batch, mb), jnp.int32)
+        cache[PAGES_KEY] = {"table": table}
+    else:
+        kv_shape = (nu, batch, max_len, cfg.num_kv_heads, hd)
+        sc_shape = (nu, batch, max_len, cfg.num_kv_heads, 1)
     for i, (mix, _) in enumerate(unit_structure(cfg)):
         if mix == "attn":
-            cache[f"pos{i}"] = {
-                "k": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt),
-                "v": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt),
-            }
+            cache[f"pos{i}"] = {"k": mk(kv_shape, dt), "v": mk(kv_shape, dt)}
             if Q.is_quantized(dt):
-                cache[f"pos{i}"]["k_scale"] = mk(
-                    (nu, batch, max_len, cfg.num_kv_heads, 1), jnp.float32)
-                cache[f"pos{i}"]["v_scale"] = mk(
-                    (nu, batch, max_len, cfg.num_kv_heads, 1), jnp.float32)
+                cache[f"pos{i}"]["k_scale"] = mk(sc_shape, jnp.float32)
+                cache[f"pos{i}"]["v_scale"] = mk(sc_shape, jnp.float32)
         else:
             cache[f"pos{i}"] = {
                 "conv_x": mk((nu, batch, cfg.d_inner, cfg.ssm_conv - 1), dt),
@@ -247,7 +285,15 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
 
     tokens [B, S_p] (right-padded), lengths [B] true lengths (incl. frontend
     prefix if any).  Returns (hidden_last [B, d], cache).
+
+    Paged cache (DESIGN.md §12): the prompt window writes through the block
+    table — rows [0, S_p) of slot b land in pool blocks
+    ``table[b, 0:ceil(S_p/page_size)]``; attention itself is layout-blind
+    here (prefill computes full causal attention from activations, never
+    reading the cache).
     """
+    cache, pages = split_pages(cache)
+    table = None if pages is None else pages["table"]
     B, S_p = tokens.shape
     x = embed_tokens(params, cfg, tokens)
     if cfg.frontend and extra_embeds is not None:
@@ -263,7 +309,9 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
             hh = L.apply_norm(p["norm1"], h, cfg)
             if mix == "attn":
                 y, (k, v) = L.attention_full(p["attn"], hh, cfg, return_kv=True)
-                new_cache[f"pos{i}"] = _write_prefix(cache_u[f"pos{i}"], k, v)
+                new_cache[f"pos{i}"] = _write_prefix(
+                    cache_u[f"pos{i}"], k, v, table=table,
+                    page_size=cfg.page_size)
             else:
                 y, (cx, cbc, ssm_st) = S.mamba2_full(
                     p["ssm"], hh, cfg, return_state=True, valid=valid, lengths=lengths)
@@ -276,6 +324,8 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
         return h, new_cache
 
     x, new_cache = jax.lax.scan(body, x, (params["units"], cache))
+    if pages is not None:
+        new_cache[PAGES_KEY] = pages
     x = L.apply_norm(params["final_norm"], x, cfg)
     last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)[:, 0]
     return last, new_cache
@@ -285,15 +335,23 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
 # speculative decode step (tree / chain) + commit
 # ---------------------------------------------------------------------------
 
-def _write_prefix(entry, k, v):
+def _write_prefix(entry, k, v, table=None, page_size: int = 0):
     """Prefill-time cache write of rows [0, S_p) into one layer's entry.
 
     k/v [B, S_p, Hkv, D] fp; quantizes on the way in for the int8 layout
-    (the commit-path fusion of DESIGN.md §10 — the cache never holds fp rows).
+    (the commit-path fusion of DESIGN.md §10 — the cache never holds fp
+    rows).  With ``table`` (paged, DESIGN.md §12) the rows scatter through
+    the block table instead of landing at slice [0, S_p) of a dense row.
     """
-    def wr(c, rows):
-        return jax.lax.dynamic_update_slice(
-            c, rows.astype(c.dtype), (0,) * c.ndim)
+    if table is not None:
+        z = jnp.zeros((k.shape[0],), jnp.int32)
+
+        def wr(c, rows):
+            return P.scatter_rows(c, table, rows, z, page_size)
+    else:
+        def wr(c, rows):
+            return jax.lax.dynamic_update_slice(
+                c, rows.astype(c.dtype), (0,) * c.ndim)
     if "k_scale" in entry:
         kq, ks = Q.quantize_rows(k)
         vq, vs = Q.quantize_rows(v)
@@ -303,10 +361,16 @@ def _write_prefix(entry, k, v):
     return {"k": wr(entry["k"], k), "v": wr(entry["v"], v)}
 
 
-def _read_cache(entry, dtype):
+def _read_cache(entry, dtype, table=None):
     """fp view of one layer's cached k/v -> ([B, S, Hkv, D], [B, S, Hkv, D])
     in ``dtype``.  Dequantizes the int8 layout (XLA path; the Pallas kernel
-    dequantizes per KV block in VMEM instead — DESIGN.md §10)."""
+    dequantizes per KV block in VMEM instead — DESIGN.md §10).  With
+    ``table`` the view is gathered from the paged pool first (S =
+    max_blocks * page_size; the kernel path never materialises it —
+    DESIGN.md §12)."""
+    if table is not None:
+        entry = {n: P.gather_cache(entry[n], table)
+                 for n in ("k", "v", "k_scale", "v_scale") if n in entry}
     if "k_scale" in entry:
         return (Q.dequantize(entry["k"], entry["k_scale"], dtype),
                 Q.dequantize(entry["v"], entry["v_scale"], dtype))
@@ -344,8 +408,10 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
     as cache-sweep ⊕ in-flight block); commit performs the only write.
     """
     B, T = tokens.shape
+    cache, pages = split_pages(cache)
+    table = None if pages is None else pages["table"]
     x = embed_tokens(params, cfg, tokens)
-    S_max = cache_max_len(cache)
+    S_max = cache_max_len(cache, table=table)
     masks = None
     if S_max and not (use_kernel or deferred):  # pure-SSM stacks have no attention cache
         masks = jax.vmap(lambda l: L.decode_mask(tree_mask, l, T, S_max))(lengths)
@@ -362,7 +428,7 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
                 # from the seq-sharded cache
                 y, new_cache[f"pos{i}"] = attention_decode_batched(
                     p["attn"], hh, cfg, cache_u[f"pos{i}"], lengths, masks,
-                    tree_mask, depths, use_kernel, deferred)
+                    tree_mask, depths, use_kernel, deferred, table=table)
             else:
                 y, (cxs, cbcs, ssts) = S.mamba2_decode(
                     p["ssm"], hh, cfg, cache_u[f"pos{i}"]["conv_x"],
@@ -376,23 +442,31 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
         return h, new_cache
 
     x, spec_cache = jax.lax.scan(body, x, (params["units"], cache))
+    if pages is not None:
+        spec_cache[PAGES_KEY] = pages
     x = L.apply_norm(params["final_norm"], x, cfg)
     return x, spec_cache
 
 
 def attention_decode_batched(p, x, cfg, entry, lengths, masks, tree_mask,
-                             depths, use_kernel=False, deferred=False):
+                             depths, use_kernel=False, deferred=False,
+                             table=None):
     """attention_decode with per-batch lengths (vmapped writes/masks).
 
     ``entry`` is one layer's cache dict: k/v [B, S, Hkv, D] (plus k_scale/
-    v_scale [B, S, Hkv, 1] f32 under the int8 layout, DESIGN.md §10).
+    v_scale [B, S, Hkv, 1] f32 under the int8 layout, DESIGN.md §10), or
+    pool-form k/v [n_blocks, page_size, Hkv, D] with ``table``
+    [B, max_blocks] under the paged layout (DESIGN.md §12).
     Returns (y, new_entry) where new_entry carries the (possibly updated)
-    cache leaves plus in-flight tree rows k_new/v_new [B, T, Hkv, D] fp.
+    cache leaves plus in-flight tree rows k_new/v_new [B, T, Hkv, D] fp —
+    the in-flight rows are per-slot under every layout.
 
     Int8 consistency rule: the in-flight rows that verification attends over
     are fake-quantized (quantize -> dequantize), so they are bit-equal to
     what every later sweep reads back from the committed cache — greedy
     losslessness (spec == AR) survives quantization (DESIGN.md §10).
+    The paged layout moves bytes, not values, so the same argument carries
+    over verbatim: paged decode is token-identical to dense (DESIGN.md §12).
     """
     import math as _m
     B, T, _ = x.shape
@@ -410,56 +484,78 @@ def attention_decode_batched(p, x, cfg, entry, lengths, masks, tree_mask,
         vq, vs = Q.quantize_rows(v)
         k = Q.dequantize(kq, ks, k.dtype)
         v = Q.dequantize(vq, vs, v.dtype)
+    if table is not None:
+        def upd(c, rows):
+            return P.scatter_rows(c, table, rows, lengths, cfg.page_size)
+    else:
+        upd = functools.partial(_update_rows, starts=lengths)
     new_entry = dict(entry)
     if deferred:
         # deferred write (DESIGN.md §6): no tree-row write this step — one
         # full cache pass saved; the only cache write left is commit's
-        ck, cv = _read_cache(entry, q.dtype)
+        ck, cv = _read_cache(entry, q.dtype, table=table)
         out = L.gqa_two_part(q, ck, cv, k, v, lengths, tree_mask, scale)
     else:
         if quantized:
-            new_entry["k"] = _update_rows(entry["k"], kq, lengths)
-            new_entry["v"] = _update_rows(entry["v"], vq, lengths)
-            new_entry["k_scale"] = _update_rows(entry["k_scale"], ks, lengths)
-            new_entry["v_scale"] = _update_rows(entry["v_scale"], vs, lengths)
+            new_entry["k"] = upd(entry["k"], kq)
+            new_entry["v"] = upd(entry["v"], vq)
+            new_entry["k_scale"] = upd(entry["k_scale"], ks)
+            new_entry["v_scale"] = upd(entry["v_scale"], vs)
         else:
-            new_entry["k"] = _update_rows(entry["k"], k, lengths)
-            new_entry["v"] = _update_rows(entry["v"], v, lengths)
+            new_entry["k"] = upd(entry["k"], k)
+            new_entry["v"] = upd(entry["v"], v)
         if use_kernel:
             from repro.kernels.ops import tree_attention
             out = tree_attention(q, new_entry["k"], new_entry["v"], tree_mask,
                                  lengths, scale,
                                  k_scale=new_entry.get("k_scale"),
                                  v_scale=new_entry.get("v_scale"),
-                                 k_tree=k, v_tree=v)
+                                 k_tree=k, v_tree=v, block_tables=table)
         else:
-            ck, cv = _read_cache(new_entry, q.dtype)
+            ck, cv = _read_cache(new_entry, q.dtype, table=table)
             out = L._gqa_scores_to_out(q, ck, cv, masks, scale)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     new_entry["k_new"], new_entry["v_new"] = k, v
     return y, new_entry
 
 
-def cache_max_len(cache):
-    for pos in cache.values():
-        if "k" in pos:
-            return pos["k"].shape[2]
+def cache_max_len(cache, table=None):
+    """Logical per-slot capacity in rows.  Dense: the S axis.  Paged: the
+    table's reach, max_blocks * page_size (callers that hold a full paged
+    cache can pass it directly — the table is found under ``_pages``)."""
+    if table is None and PAGES_KEY in cache:
+        table = cache[PAGES_KEY]["table"]
+    for pos, entry in cache.items():
+        if pos != PAGES_KEY and "k" in entry:
+            # dense [.., B, S, H, D] -> S; paged [.., nb, ps, H, D] -> ps
+            per_block_or_s = entry["k"].shape[-3]
+            if table is not None:
+                return table.shape[1] * per_block_or_s
+            return per_block_or_s
     return 0
 
 
-def _commit_attn_entry(entry, lengths, path_slots):
+def _commit_attn_entry(entry, lengths, path_slots, table=None,
+                       page_size: int = 0):
     """Commit one attention layer: gather best-path rows from the small
     in-flight tensors and write them back at [len, len+K1).
 
     entry: k/v [nu, B, S, Hkv, D] cache + k_new/v_new [nu, B, T, Hkv, D] fp
-    (+ scales under int8).  For the int8 layout the gathered fp rows are
+    (+ scales under int8); under the paged layout k/v are pools
+    [nu, n_blocks, page_size, Hkv, D] and the write scatters through
+    ``table`` [B, max_blocks] — same physical block index in every unit's
+    pool (DESIGN.md §12).  For the int8 layout the gathered fp rows are
     re-quantized at the write; quantization is deterministic and idempotent
     on fake-quantized values (the max-|x| element always lands on ±127), so
     the committed bytes equal the values verification attended over
     (DESIGN.md §10).
     """
     idx = path_slots[None, :, :, None, None]
-    upd = jax.vmap(_update_rows, in_axes=(0, 0, None))
+    if table is not None:
+        def upd(c, rows, lens):
+            return P.scatter_rows_stacked(c, table, rows, lens, page_size)
+    else:
+        upd = jax.vmap(_update_rows, in_axes=(0, 0, None))
     quantized = "k_scale" in entry
     out = {}
     for name in ("k", "v"):
@@ -484,19 +580,27 @@ def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
     ``active`` [B] bool (optional) is the serving scheduler's masked-commit
     path (DESIGN.md §9): rows whose slot is empty/finished do not advance
     ``lengths``, so idle slots stay frozen inside the shared static step.
-    Their (dead) row writes still happen — admission replaces the whole slot
-    row, so nothing stale is ever read.
+    Their (dead) row writes still happen — under the dense layout admission
+    replaces the whole slot row, and under the paged layout an idle slot's
+    zeroed table sinks them into the reserved trash block (DESIGN.md §12) —
+    so nothing stale is ever read.
     Returns (cache, new_lengths).
     """
+    spec_cache, pages = split_pages(spec_cache)
+    table = None if pages is None else pages["table"]
     new_cache = {}
     for pos, entry in spec_cache.items():
         if "k" in entry:
-            new_cache[pos] = _commit_attn_entry(entry, lengths, path_slots)
+            new_cache[pos] = _commit_attn_entry(entry, lengths, path_slots,
+                                                table=table,
+                                                page_size=cfg.page_size)
         else:
             def sel(st):  # [nu, B, T, ...] -> [nu, B, ...]
                 idx = (acc - 1)[None, :, None]
                 idx = idx.reshape((1, -1, 1) + (1,) * (st.ndim - 3))
                 return jnp.take_along_axis(st, idx, axis=2)[:, :, 0]
             new_cache[pos] = {k: sel(v) for k, v in entry.items()}
+    if pages is not None:
+        new_cache[PAGES_KEY] = pages
     adv = acc if active is None else jnp.where(active, acc, 0)
     return new_cache, lengths + adv

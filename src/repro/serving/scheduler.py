@@ -45,6 +45,33 @@ path (batched admission merge, serial insert, recovery rebuild) treats the
 cache as an opaque pytree, so quantization needs no scheduler-side code.
 Size ``batch_slots`` with ``slots_for_budget``; at a fixed HBM budget the
 int8 layout roughly doubles the slots (``benchmarks/bench_kv_quant.py``).
+
+Paged cache + prefix sharing (DESIGN.md §12): under
+``cfg.cache_layout == "paged"`` the attention cache is a global block pool
+and the *pool* — not the slot count — becomes the admission resource.
+Host/device ownership follows §9 exactly:
+
+* **host** — ``BlockPool`` free list + refcounts, per-slot block tables
+  (numpy mirror ``_table`` [B, max_blocks], pushed to the device leaf
+  ``cache["_pages"]["table"]`` only when dirty), the ``PrefixCache``
+  registry, CoW scheduling, admission deferral when an allocation would
+  not fit;
+* **device** — every read/write through the table inside the same jitted
+  step/admission calls as the dense layout (prefill writes land directly
+  in the global pool, so the batched-admission cache merge degenerates to
+  a passthrough for pool leaves; SSM per-slot leaves still merge by
+  src/mask).
+
+Admission reserves a request's worst case (``ceil((prompt + max_new + T +
+2)/page_size)`` blocks) up front: exhaustion defers admission (the request
+stays queued, FIFO) rather than preempting anything mid-flight — lossless
+first.  With ``prefix_cache=True`` a request's prompt blocks are matched
+against the registry: shared blocks map into the slot's table refcounted,
+a partially matching divergence block is copied on write, and only the
+un-cached suffix is prefilled (``SpecEngine.suffix_prefill``).  Reaping a
+slot frees its blocks (refcount 0 returns them to the pool) and zeroes its
+table row so the slot's dead writes inside the static step sink into the
+reserved trash block.
 """
 from __future__ import annotations
 
@@ -58,6 +85,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SpecEngine
+from repro.kernels.paging import blocks_for
+from repro.models.transformer import PAGES_KEY
+from repro.serving.block_pool import BlockPool, PrefixCache
 
 NO_EOS = -1  # device-side "no eos configured" sentinel (token ids are >= 0)
 
@@ -75,12 +105,26 @@ def cache_bytes_per_slot(cfg, max_len: int) -> int:
 
 def slots_for_budget(cfg, max_len: int, hbm_bytes: int) -> int:
     """Decode slots a ``hbm_bytes`` cache budget sustains at ``max_len``
-    (DESIGN.md §10) — the sizing knob for ``MedusaServer(batch_slots=...)``."""
+    (DESIGN.md §10) — the sizing knob for ``MedusaServer(batch_slots=...)``
+    under the dense layout, where every slot pins its worst case."""
     return int(hbm_bytes // cache_bytes_per_slot(cfg, max_len))
+
+
+def blocks_for_budget(cfg, hbm_bytes: int) -> int:
+    """Physical pool blocks a ``hbm_bytes`` cache budget sustains — the
+    pool-based capacity formula of the paged layout (DESIGN.md §12, §10):
+    ``hbm / (kv_cache_bytes_per_token() * page_size)``.  The sizing knob
+    for ``MedusaServer(n_blocks=...)``; a request then consumes blocks for
+    its *own* length (minus any shared prefix) rather than ``max_len``."""
+    return int(hbm_bytes // (cfg.kv_cache_bytes_per_token() * cfg.page_size))
 
 
 @dataclass
 class Request:
+    """One serving request.  Entirely host-owned: the device never sees a
+    Request — admission lowers it into per-slot device arrays (prompt ->
+    prefill tokens, max_new/eos_id/temperature/top_p -> slot metadata) and
+    ``output`` accumulates from the per-step ``SlotSync``."""
     rid: int
     prompt: np.ndarray                  # [len] int32
     max_new: int
@@ -109,7 +153,11 @@ class _Slot:
 
 
 class SlotSync(NamedTuple):
-    """The only per-step device->host sync: three [B]-sized fields."""
+    """The only per-step device->host sync (O(B), computed inside the
+    jitted step — DESIGN.md §9).  The host applies it mechanically: append
+    ``tokens[i, :acc[i]]`` to slot i's request, reap where ``done``; every
+    decision that produced these values (EOS scan, budget clip, masked
+    commit) already happened on device."""
     acc: jnp.ndarray        # [B] int32 — tokens to append (EOS/budget-clipped)
     tokens: jnp.ndarray     # [B, K+1] int32 — this step's committed path
     done: jnp.ndarray       # [B] bool — slot finished (EOS hit or budget met)
@@ -123,10 +171,29 @@ def _pow2(n: int) -> int:
 
 
 class MedusaServer:
+    """Continuous-batching server over one ``SpecEngine``.
+
+    Host-owned state: the request ``queue``, per-slot ``Request`` bindings
+    (``slots``), retry/deadline policy, numpy mirrors of the per-slot step
+    inputs (``_active``/``_eos``/``_maxnew``/``_temp``/``_topp``) and —
+    under the paged layout — the block allocator and table mirror.
+    Device-owned state (all [B]-leading, donated through every jitted
+    call): ``cache`` (the engine cache pytree), ``lengths`` [B] int32,
+    ``base`` [B] int32, ``mtok``/``mprob`` [B, K, max_topk], ``n_out`` [B]
+    int32.  The per-step host<->device contract is exactly one ``SlotSync``
+    down and the (dirty) slot metadata up.
+
+    ``n_blocks`` sizes the paged pool (default: enough for every slot's
+    worst case, i.e. dense-equivalent capacity; size from an HBM budget
+    with ``blocks_for_budget``).  ``prefix_cache=True`` enables the §12
+    shared-prefix registry (paged layout only, attention-only families).
+    """
+
     def __init__(self, engine: SpecEngine, params, medusa_params,
                  batch_slots: int, max_len: int,
                  prompt_buckets=(32, 128, 512), max_retries: int = 1,
-                 admission: str = "batched"):
+                 admission: str = "batched", n_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         assert admission in ("batched", "serial"), admission
         self.engine = engine
         self.cfg = engine.cfg
@@ -143,11 +210,29 @@ class MedusaServer:
         self.max_retries = max_retries
         self.admission = admission
 
+        # paged layout (DESIGN.md §12): the pool is the admission resource
+        self.paged = self.cfg.paged
+        self.page_size = self.cfg.page_size
+        self.blocks_per_slot = blocks_for(max_len, self.page_size)
+        if n_blocks is not None and not self.paged:
+            raise ValueError("n_blocks requires cache_layout='paged'")
+        self.n_blocks = (1 + self.B * self.blocks_per_slot
+                         if n_blocks is None else int(n_blocks))
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires cache_layout='paged'")
+        if prefix_cache and (self.cfg.num_ssm_layers > 0
+                             or self.cfg.family == "encdec"):
+            raise ValueError("prefix_cache shares KV blocks only; SSM/encdec "
+                             "state cannot be reconstructed from them")
+        self.prefix_enabled = prefix_cache
+
         self.queue: deque[Request] = deque()
         self.slots = [_Slot() for _ in range(self.B)]
         self.done: Dict[int, Request] = {}
         self._rid = 0
-        self.stats = {"prefill_calls": 0, "admitted": 0, "steps": 0}
+        self.stats = {"prefill_calls": 0, "admitted": 0, "steps": 0,
+                      "deferred": 0, "prefill_tokens": 0, "cached_tokens": 0,
+                      "cow_copies": 0, "peak_blocks": 0}
 
         self._reset_device_state()
         self._key = jax.random.PRNGKey(0)
@@ -165,13 +250,19 @@ class MedusaServer:
         # [n_group, bucket] admission variants share a single cache here.
         # The B-slot cache/state args are donated: the old buffers are dead
         # after each call, so XLA aliases them instead of holding 2x cache.
-        self._admit_jit = jax.jit(self._admit_bucket_impl,
-                                  donate_argnums=(7, 8, 9, 10, 11, 12))
+        self._admit_jit = jax.jit(
+            self._admit_paged_impl if self.paged else self._admit_bucket_impl,
+            donate_argnums=(7, 8, 9, 10, 11, 12))
         self._prefill_jit = jax.jit(
             lambda p, mp, t, l, c, key, temp, topp: self.engine.prefill(
                 p, mp, t, l, c, key=key, temperature=temp, top_p=topp))
         self._step_jit = jax.jit(self._serve_step_impl,
                                  donate_argnums=(2, 3, 4, 5, 6, 7))
+        if self.paged:
+            self._suffix_jit = jax.jit(self._suffix_impl,
+                                       donate_argnums=(6, 7, 8, 9, 10, 11))
+            self._copy_jit = jax.jit(self._copy_blocks_impl,
+                                     donate_argnums=(0,))
 
     # ------------------------------------------------------------------ API
 
@@ -233,11 +324,17 @@ class MedusaServer:
             req.status = "cancelled"
             self.done[req.rid] = req
         self.queue.clear()
-        for slot in self.slots:
+        for i, slot in enumerate(self.slots):
             if slot.request is not None:
                 slot.request.status = "cancelled"
                 self.done[slot.request.rid] = slot.request
                 slot.request = None
+            if self.paged:
+                self.pool.free(self._slot_alloc.pop(i, []))
+                self._table[i, :] = 0
+                self._matched[i] = 0
+        if self.paged:
+            self._table_dirty = True
         self._active[:] = False
         self._done_now[:] = False
         self._slotmeta_dev = None
@@ -278,6 +375,102 @@ class MedusaServer:
         n_out = jnp.where(mask, 0, n_out)
         return cache, lengths, base, mtok, mprob, n_out
 
+    def _admit_paged_impl(self, params, medusa_params, toks, plens, gtemp,
+                          gtopp, key, cache, lengths, base, mtok, mprob,
+                          n_out, src, mask, gtable):
+        """Paged variant of ``_admit_bucket_impl`` (DESIGN.md §12).
+
+        Prefill writes land in the *global* pool through ``gtable``
+        [n, max_blocks] (the admitted slots' table rows; padding rows are
+        all-zero so their writes sink into the trash block), so the cache
+        merge disappears for pool leaves — only per-slot SSM leaves (and
+        the [B]-sized step state) still merge by ``src``/``mask``.
+        """
+        n = toks.shape[0]
+        view = {}
+        for pos, entry in cache.items():
+            if pos == PAGES_KEY:
+                continue
+            if "k" in entry:
+                view[pos] = entry               # global pool leaves, shared
+            else:                               # per-slot SSM state: fresh
+                view[pos] = {nm: jnp.zeros((x.shape[0], n) + x.shape[2:],
+                                           x.dtype) for nm, x in entry.items()}
+        view[PAGES_KEY] = {"table": gtable}
+        view, len_n, base_n, mtok_n, mprob_n = self.engine.prefill(
+            params, medusa_params, toks, plens, view,
+            key=key, temperature=gtemp, top_p=gtopp)
+        srcc = jnp.clip(src, 0, n - 1)
+
+        def merge(big, small):
+            rows = jnp.take(small, srcc, axis=1).astype(big.dtype)
+            m = mask.reshape((1, -1) + (1,) * (big.ndim - 2))
+            return jnp.where(m, rows, big)
+
+        new_cache = {}
+        for pos, entry in cache.items():
+            if pos == PAGES_KEY:
+                new_cache[pos] = entry          # B-slot table: host-managed
+            elif "k" in entry:
+                new_cache[pos] = view[pos]      # pool updated in place
+            else:
+                new_cache[pos] = jax.tree.map(merge, entry, view[pos])
+        lengths = jnp.where(mask, len_n[srcc], lengths)
+        base = jnp.where(mask, base_n[srcc], base)
+        mtok = jnp.where(mask[:, None, None], mtok_n[srcc], mtok)
+        mprob = jnp.where(mask[:, None, None], mprob_n[srcc], mprob)
+        n_out = jnp.where(mask, 0, n_out)
+        return new_cache, lengths, base, mtok, mprob, n_out
+
+    def _suffix_impl(self, params, medusa_params, stoks, nv, mlen, key,
+                     cache, lengths, base, mtok, mprob, n_out, smask,
+                     temp, topp):
+        """Prefix-cache admission forward (DESIGN.md §12): continue prefill
+        from cached prefix rows for the slots in ``smask`` [B] bool.
+
+        stoks [B, T_bucket] right-padded suffix tokens (garbage on inactive
+        rows), nv [B] true suffix lengths (1 on inactive rows), mlen [B]
+        cached-prefix length.  All B slots run the same causal decode, but
+        only ``smask`` rows merge their new base/head state.
+
+        Dead-write hazard (unique to this call): another slot admitted in
+        the *same* round already has its new block table installed but not
+        yet its device length, so letting it write at its stale length
+        would corrupt the shared prefix blocks its table now maps.  Every
+        non-``smask`` slot therefore runs this call at length = capacity —
+        its dead writes fall past the table's reach and sink into the
+        trash block (kernels/paging.py) — and has its real length restored
+        on return.
+        """
+        cap = jnp.int32(self.blocks_per_slot * self.page_size)
+        lens_in = jnp.where(smask, mlen, cap)
+        cache, lens_new, base_n, mtok_n, mprob_n = self.engine.suffix_prefill(
+            params, medusa_params, cache, lens_in, stoks, nv, smask,
+            key=key, temperature=temp, top_p=topp)
+        lengths = jnp.where(smask, lens_new, lengths)
+        base = jnp.where(smask, base_n, base)
+        mtok = jnp.where(smask[:, None, None], mtok_n, mtok)
+        mprob = jnp.where(smask[:, None, None], mprob_n, mprob)
+        n_out = jnp.where(smask, 0, n_out)
+        return cache, lengths, base, mtok, mprob, n_out
+
+    def _copy_blocks_impl(self, cache, src, dst):
+        """Copy-on-write device op: pool rows of physical blocks ``src``
+        [m] copy into blocks ``dst`` [m] across every attention pool leaf
+        (values and int8 scales; one shared block id space — DESIGN.md
+        §12).  Padding pairs are (0, 0): a trash-to-trash no-op."""
+        def cp(x):
+            return x.at[:, dst].set(x[:, src])
+        new = {}
+        for pos, entry in cache.items():
+            if pos != PAGES_KEY and "k" in entry:
+                new[pos] = {nm: (cp(x) if nm in ("k", "v", "k_scale",
+                                                 "v_scale") else x)
+                            for nm, x in entry.items()}
+            else:
+                new[pos] = entry
+        return new
+
     def _serve_step_impl(self, params, medusa_params, cache, lengths, base,
                          mtok, mprob, n_out, key, active, eos_id, max_new,
                          temp, topp):
@@ -315,8 +508,18 @@ class MedusaServer:
         return self.buckets[-1]
 
     def _admit(self):
+        """Admission round (host): drain the queue into free slots.
+
+        Dense: the free-slot count is the only resource.  Paged (DESIGN.md
+        §12): each request must also reserve its worst-case block count
+        from the pool — ``_plan_blocks`` returns None on exhaustion and the
+        request is deferred (put back at the queue head, FIFO preserved)
+        until a reap frees blocks.  Prefix-cached requests (a non-empty
+        match) admit via the per-request suffix path; the rest go through
+        the bucketed group prefill, whose writes land directly in the
+        global pool through the group's table rows."""
         free = [i for i, s in enumerate(self.slots) if s.free]
-        take: List[Request] = []
+        take: List[tuple] = []
         while self.queue and len(take) < len(free):
             req = self.queue.popleft()
             # reject what cannot run losslessly: prompts that don't fit the
@@ -327,11 +530,20 @@ class MedusaServer:
                 req.status = "failed"
                 self.done[req.rid] = req
                 continue
-            take.append(req)
+            plan = self._plan_blocks(req) if self.paged else None
+            if self.paged and plan is None:
+                # pool exhausted: defer — re-queue at the head and stop
+                # admitting so order is preserved; nothing mid-flight is
+                # touched (lossless, no preemption)
+                self.queue.appendleft(req)
+                self.stats["deferred"] += 1
+                break
+            take.append((req, plan))
         if not take:
             return
-        pairs = list(zip(free, take))
-        for i, req in pairs:
+        pairs = [(i, req) for i, (req, _) in zip(free, take)]
+        cows = []
+        for (i, req), (_, plan) in zip(pairs, take):
             req.status = "running"
             self.slots[i].request = req
             self._active[i] = True
@@ -339,15 +551,139 @@ class MedusaServer:
             self._maxnew[i] = req.max_new
             self._temp[i] = req.temperature
             self._topp[i] = req.top_p
+            if plan is not None:
+                row = plan["shared"] + plan["fresh"]
+                self._table[i, :] = 0
+                self._table[i, : len(row)] = row
+                self._table_dirty = True
+                self._slot_alloc[i] = row
+                self._matched[i] = plan["matched"]
+                if plan["cow"] is not None:
+                    cows.append((plan["cow"], plan["fresh"][0]))
         self._slotmeta_dev = None
         self.stats["admitted"] += len(pairs)
-        if self.admission == "serial":
+        if self.paged:
+            self._admit_paged(pairs, cows)
+        elif self.admission == "serial":
             for i, req in pairs:
                 self._prefill_one(req, i)
         else:
             self._admit_batched(pairs)
 
+    # ---- paged admission (host side, DESIGN.md §12) -----------------------
+
+    def _plan_blocks(self, req: Request):
+        """Reserve blocks for ``req`` (all-or-nothing; None = defer).
+
+        Returns {"shared": [ids], "fresh": [ids], "matched": int,
+        "cow": src_block|None}.  ``shared`` blocks hold an already-cached
+        prompt prefix (refcount bumped); ``fresh`` blocks are newly owned;
+        ``matched`` counts cached prompt tokens (suffix starts there).  A
+        partial divergence-block match sets ``cow``: the donor block to
+        copy into ``fresh[0]`` before the suffix prefill overwrites rows
+        [matched % page_size, ...) of the copy — the cow source is pinned
+        (one extra refcount) until ``_admit_paged`` has issued the copy.
+
+        Ordering matters: the matched blocks (shared + cow source) are
+        pinned *before* eviction/allocation runs, so a registry-only
+        matched block can neither be evicted nor handed back by ``alloc``
+        as one of this request's own fresh blocks."""
+        shared, div_block, div_tokens = [], None, 0
+        if self.prefix is not None:
+            shared, div_block, div_tokens = self.prefix.match(req.prompt)
+        pinned = shared + ([div_block] if div_tokens else [])
+        self.pool.share(pinned)
+        total = blocks_for(
+            len(req.prompt) + req.max_new + self.engine.dtree.T + 2,
+            self.page_size)
+        n_fresh = total - len(shared)
+        shortfall = n_fresh - self.pool.available
+        if shortfall > 0 and self.prefix is not None:
+            self.prefix.evict(self.pool, shortfall)   # all-or-nothing
+        fresh = self.pool.alloc(n_fresh)
+        if fresh is None:
+            self.pool.free(pinned)                    # undo the pins
+            if pinned:
+                # fall back to a no-sharing plan: with the match unpinned,
+                # eviction may reclaim those very blocks — a full prefill
+                # beats deferring forever when the only reclaimable space
+                # IS the matched prefix
+                shortfall = total - self.pool.available
+                if shortfall > 0:
+                    self.prefix.evict(self.pool, shortfall)
+                fresh = self.pool.alloc(total)
+                if fresh is not None:
+                    return {"shared": [], "fresh": fresh, "matched": 0,
+                            "cow": None}
+            return None
+        matched = len(shared) * self.page_size + div_tokens
+        return {"shared": shared, "fresh": fresh, "matched": matched,
+                "cow": div_block if div_tokens else None}
+
+    def _admit_paged(self, pairs, cows):
+        """Execute a planned paged admission round: push tables, run CoW
+        copies, group-prefill unmatched requests, suffix-prefill matched
+        ones, then register the new prompts in the prefix cache."""
+        self._push_table()
+        if cows:
+            n = _pow2(len(cows))
+            src = np.zeros((n,), np.int32)
+            dst = np.zeros((n,), np.int32)     # pad pairs: trash -> trash
+            for j, (s, d) in enumerate(cows):
+                src[j], dst[j] = s, d
+            self.cache = self._copy_jit(self.cache, jnp.asarray(src),
+                                        jnp.asarray(dst))
+            self.pool.free([s for s, _ in cows])   # release the cow pins
+            self.stats["cow_copies"] += len(cows)
+        full = [(i, req) for i, req in pairs if self._matched[i] == 0]
+        pref = [(i, req) for i, req in pairs if self._matched[i] > 0]
+        if self.admission == "serial":
+            for pair in full:
+                self._admit_batched([pair])
+        elif full:
+            self._admit_batched(full)
+        for i, req in pref:
+            self._admit_suffix_one(i, req, self._matched[i])
+        for i, req in pairs:
+            self.stats["prefill_tokens"] += len(req.prompt) - self._matched[i]
+            self.stats["cached_tokens"] += self._matched[i]
+            if self.prefix is not None:
+                self.prefix.register(req.prompt, self._table[i], self.pool)
+        self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                        self.pool.in_use)
+
+    def _admit_suffix_one(self, slot_idx: int, req: Request, matched: int):
+        """Admit one prefix-matched request: causal suffix prefill over the
+        slot's (already mapped) cached prefix (``SpecEngine.suffix_prefill``
+        via ``_suffix_impl``).  One [B, suffix_bucket] call per request —
+        prefix admission trades the dense path's group batching for block
+        reuse; the prefill-token savings dominate when prefixes are long."""
+        suffix = req.prompt[matched:]
+        bucket = self._bucket(len(suffix))
+        stoks = np.zeros((self.B, bucket), np.int32)
+        stoks[slot_idx, : len(suffix)] = suffix[:bucket]
+        nv = np.ones((self.B,), np.int32)
+        nv[slot_idx] = len(suffix)
+        mlen = np.zeros((self.B,), np.int32)
+        mlen[slot_idx] = matched
+        smask = np.zeros((self.B,), bool)
+        smask[slot_idx] = True
+        self._key, sub = jax.random.split(self._key)
+        (self.cache, self.lengths, self.base, self.mtok, self.mprob,
+         self.n_out) = self._suffix_jit(
+            self.params, self.medusa_params, jnp.asarray(stoks),
+            jnp.asarray(nv), jnp.asarray(mlen), sub, self.cache,
+            self.lengths, self.base, self.mtok, self.mprob, self.n_out,
+            jnp.asarray(smask), jnp.asarray(self._temp),
+            jnp.asarray(self._topp))
+        self.stats["prefill_calls"] += 1
+
     def _admit_batched(self, pairs):
+        """Group the admitted requests by prompt bucket and prefill each
+        group in one jitted call (host builds the [n, bucket] numpy inputs;
+        device does everything else).  Under the paged layout the group's
+        table rows ride along (``gtable`` [n, max_blocks]; padding rows
+        all-zero = trash-sinked writes) and the call is the paged variant."""
         groups: Dict[int, list] = {}
         for i, req in pairs:
             groups.setdefault(self._bucket(len(req.prompt)), []).append((i, req))
@@ -359,6 +695,8 @@ class MedusaServer:
             gtopp = np.ones((n,), np.float32)
             src = np.zeros((self.B,), np.int32)
             mask = np.zeros((self.B,), bool)
+            gtable = (np.zeros((n, self.blocks_per_slot), np.int32)
+                      if self.paged else None)
             for j, (i, req) in enumerate(grp):
                 toks[j, : len(req.prompt)] = req.prompt[:bucket]
                 plens[j] = len(req.prompt)
@@ -366,13 +704,17 @@ class MedusaServer:
                 gtopp[j] = req.top_p
                 src[i] = j
                 mask[i] = True
+                if self.paged:
+                    gtable[j] = self._table[i]
             self._key, sub = jax.random.split(self._key)
+            extra = (jnp.asarray(gtable),) if self.paged else ()
             (self.cache, self.lengths, self.base, self.mtok, self.mprob,
              self.n_out) = self._admit_jit(
                 self.params, self.medusa_params, jnp.asarray(toks),
                 jnp.asarray(plens), jnp.asarray(gtemp), jnp.asarray(gtopp),
                 sub, self.cache, self.lengths, self.base, self.mtok,
-                self.mprob, self.n_out, jnp.asarray(src), jnp.asarray(mask))
+                self.mprob, self.n_out, jnp.asarray(src), jnp.asarray(mask),
+                *extra)
             self.stats["prefill_calls"] += 1
 
     def _prefill_one(self, req: Request, slot_idx: int):
@@ -400,9 +742,23 @@ class MedusaServer:
         self.mprob = self.mprob.at[slot_idx].set(mprob1[0])
         self.n_out = self.n_out.at[slot_idx].set(0)
 
+    def _push_table(self):
+        """Push the host block-table mirror to its device cache leaf when
+        dirty (the §12 analogue of the ``_slotmeta_dev`` refresh — tables
+        change only at admission/reap, never inside a step)."""
+        if self.paged and self._table_dirty:
+            self.cache[PAGES_KEY]["table"] = jnp.asarray(self._table)
+            self._table_dirty = False
+
     def _decode_step(self):
+        """One jitted serving step (device) + the SlotSync host apply.
+
+        Syncs exactly three [B]-sized arrays back (``SlotSync``); the
+        per-slot metadata device copies refresh only when host bookkeeping
+        changed them (``_slotmeta_dev`` / the paged block table)."""
         if not self._active.any():
             return
+        self._push_table()
         self._key, sub = jax.random.split(self._key)
         if self._slotmeta_dev is None:
             self._slotmeta_dev = (jnp.asarray(self._active),
@@ -449,6 +805,16 @@ class MedusaServer:
             self._active[freed] = False
             self._done_now[freed] = False
             self._slotmeta_dev = None
+            if self.paged:
+                # return the slot's blocks (refcount 0 -> free list; blocks
+                # a prefix registration or another slot still references
+                # survive) and zero the table row so the freed slot's dead
+                # writes inside the static step sink into the trash block
+                for i in freed:
+                    self.pool.free(self._slot_alloc.pop(i, []))
+                    self._table[i, :] = 0
+                    self._matched[i] = 0
+                self._table_dirty = True
 
     def _recover(self):
         """Node-failure recovery: re-queue all in-flight work (their caches
@@ -474,8 +840,24 @@ class MedusaServer:
         self._slotmeta_dev = None
 
     def _reset_device_state(self):
-        """(Re)create all per-slot device arrays that jitted calls donate."""
-        self.cache = self.engine.init_cache(self.B, self.max_len)
+        """(Re)create all per-slot device arrays that jitted calls donate,
+        plus — under the paged layout — the host allocator state they
+        mirror (block pool, table mirror, prefix registry): after a
+        recovery the device pool contents are gone, so every host claim
+        about block ownership must be dropped with them."""
+        if self.paged:
+            self.pool = BlockPool(self.n_blocks)
+            self.prefix = (PrefixCache(self.page_size)
+                           if self.prefix_enabled else None)
+            self._table = np.zeros((self.B, self.blocks_per_slot), np.int32)
+            self._table_dirty = False
+            self._slot_alloc: Dict[int, list] = {}
+            self._matched = np.zeros((self.B,), np.int32)
+            self.cache = self.engine.init_cache(self.B, self.max_len,
+                                                n_blocks=self.n_blocks)
+        else:
+            self.prefix = None
+            self.cache = self.engine.init_cache(self.B, self.max_len)
         self.lengths = jnp.ones((self.B,), jnp.int32)
         K = max(self.engine.dtree.K, 1)
         self.base = jnp.zeros((self.B,), jnp.int32)

@@ -1,16 +1,25 @@
 """Docs consistency: every ``DESIGN.md §N`` citation in code resolves to an
-existing section header (the CI step in .github/workflows/ci.yml runs the
-same checker standalone)."""
+existing section header, and the README serving-flags table matches the
+``repro.launch.serve`` argparse definitions in both directions (the CI
+step in .github/workflows/ci.yml runs the same checker standalone)."""
 import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
-def test_design_section_citations_resolve():
+def _checker():
     sys.path.insert(0, str(ROOT / "tools"))
     try:
-        from check_docs_refs import find_stale_refs
+        import check_docs_refs
     finally:
         sys.path.pop(0)
-    assert find_stale_refs(ROOT) == []
+    return check_docs_refs
+
+
+def test_design_section_citations_resolve():
+    assert _checker().find_stale_refs(ROOT) == []
+
+
+def test_readme_serve_flags_match_launcher():
+    assert _checker().find_flag_drift(ROOT) == []

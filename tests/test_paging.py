@@ -1,0 +1,407 @@
+"""Paged KV cache + prefix sharing (DESIGN.md §12): paging primitives,
+kernel/oracle agreement, paged==dense token identity across engines and
+acceptance modes, allocator edge cases (exhaustion defers admission,
+refcount-zero frees, CoW at the divergence block), scheduler identity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.draft_model import DraftSpecEngine
+from repro.core.engine import SpecEngine, ar_generate
+from repro.configs.base import SamplingParams
+from repro.distributed.sharding import split_params
+from repro.kernels import paging as P
+from repro.kernels import quant as Q
+from repro.kernels.cache_update import commit_rows_paged
+from repro.kernels.ops import tree_attention
+from repro.kernels.ref import tree_attention_ref, tree_attention_ref_paged
+from repro.models.api import get_model
+from repro.serving.block_pool import BlockPool, PrefixCache
+from repro.serving.scheduler import MedusaServer
+
+PS = 16          # page size at reduced-config scale
+S_MAX = 256      # multiple of PS: paged and dense sweep identical shapes
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    m = get_model(cfg)
+    params, _ = split_params(m.init_params(jax.random.PRNGKey(0), cfg))
+    eng = SpecEngine(cfg)
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, eng.dtree.K))
+    return cfg, m, params, mp
+
+
+def _layout(cfg, layout, **kw):
+    return dataclasses.replace(cfg, cache_layout=layout, page_size=PS, **kw)
+
+
+# ---------------------------------------------------------------- primitives
+
+def test_scatter_gather_roundtrip(rng):
+    B, mb, H, D = 3, 4, 2, 8
+    table = P.identity_table(B, mb)
+    pool = jnp.zeros((1 + B * mb, PS, H, D), jnp.float32)
+    rows = jnp.asarray(rng.standard_normal((B, mb * PS, H, D)), jnp.float32)
+    pool = P.scatter_rows(pool, table, rows, jnp.zeros((B,), jnp.int32), PS)
+    np.testing.assert_array_equal(np.asarray(P.gather_cache(pool, table)),
+                                  np.asarray(rows))
+
+
+def test_overflow_writes_sink_into_trash(rng):
+    """Rows past the table's reach land in reserved block 0, never in
+    another slot's block (the §12 dead-write contract)."""
+    B, mb, H, D = 2, 2, 1, 4
+    table = P.identity_table(B, mb)
+    pool = jnp.zeros((1 + B * mb, PS, H, D), jnp.float32)
+    rows = jnp.ones((B, 3, H, D), jnp.float32)
+    starts = jnp.asarray([mb * PS - 1, mb * PS + 5], jnp.int32)  # straddle/off
+    out = P.scatter_rows(pool, table, rows, starts, PS)
+    out = np.asarray(out)
+    assert (out[table[0, -1], -1] == 1).all()       # in-range row written
+    # slot 1 was entirely out of range: all its mapped blocks stay zero
+    for blk in np.asarray(table[1]):
+        assert (out[blk] == 0).all()
+    assert (out[P.TRASH_BLOCK] != 0).any()          # sunk into the trash
+
+
+def test_paged_kernel_matches_oracles(rng):
+    B, T, Hq, Hkv, D, mb = 2, 4, 4, 2, 16, 6
+    S = mb * PS
+    table = P.identity_table(B, mb)
+    tree_mask = jnp.asarray(np.tril(np.ones((T, T), bool)))
+    lengths = jnp.asarray([7, 29], jnp.int32)
+    kd = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, T, Hq, D)), jnp.float32)
+    z = jnp.zeros((B,), jnp.int32)
+    scale = D ** -0.5
+    nb = 1 + B * mb
+    idx = (lengths[:, None] + jnp.arange(T))[:, :, None, None]
+    kt = jnp.take_along_axis(kd, idx, axis=1)
+    vt = jnp.take_along_axis(vd, idx, axis=1)
+
+    # fp: dense ref == paged ref == paged kernel
+    pk = P.scatter_rows(jnp.zeros((nb, PS, Hkv, D), jnp.float32), table, kd, z, PS)
+    pv = P.scatter_rows(jnp.zeros((nb, PS, Hkv, D), jnp.float32), table, vd, z, PS)
+    ref = tree_attention_ref(q, kd, vd, tree_mask, lengths, scale)
+    ref_p = tree_attention_ref_paged(q, pk, pv, table, tree_mask, lengths, scale)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ref_p))
+    out = tree_attention(q, pk, pv, tree_mask, lengths, scale,
+                         k_tree=kt, v_tree=vt, block_tables=table,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+    # int8: scale pools ride the same table
+    kq, ks = Q.quantize_rows(kd)
+    vq, vs = Q.quantize_rows(vd)
+    pk8 = P.scatter_rows(jnp.zeros((nb, PS, Hkv, D), jnp.int8), table, kq, z, PS)
+    pv8 = P.scatter_rows(jnp.zeros((nb, PS, Hkv, D), jnp.int8), table, vq, z, PS)
+    pks = P.scatter_rows(jnp.zeros((nb, PS, Hkv, 1), jnp.float32), table, ks, z, PS)
+    pvs = P.scatter_rows(jnp.zeros((nb, PS, Hkv, 1), jnp.float32), table, vs, z, PS)
+    kt8 = Q.dequantize(jnp.take_along_axis(kq, idx, axis=1),
+                       jnp.take_along_axis(ks, idx, axis=1))
+    vt8 = Q.dequantize(jnp.take_along_axis(vq, idx, axis=1),
+                       jnp.take_along_axis(vs, idx, axis=1))
+    ref8 = tree_attention_ref_paged(q, pk8, pv8, table, tree_mask, lengths,
+                                    scale, k_scale=pks, v_scale=pvs)
+    out8 = tree_attention(q, pk8, pv8, tree_mask, lengths, scale,
+                          k_scale=pks, v_scale=pvs, k_tree=kt8, v_tree=vt8,
+                          block_tables=table, interpret=True)
+    np.testing.assert_allclose(np.asarray(out8), np.asarray(ref8),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_commit_rows_paged_matches_scatter(rng):
+    B, mb, H, D = 3, 4, 2, 8
+    table = P.identity_table(B, mb)
+    pool = jnp.asarray(rng.standard_normal((1 + B * mb, PS, H, D)), jnp.float32)
+    rows = jnp.asarray(rng.standard_normal((B, 5, H, D)), jnp.float32)
+    lengths = jnp.asarray([0, 14, 3 * PS], jnp.int32)  # start/straddle/block
+    via_kernel = commit_rows_paged(pool, table, rows, lengths)
+    via_xla = P.scatter_rows(pool, table, rows, lengths, PS)
+    np.testing.assert_array_equal(np.asarray(via_kernel), np.asarray(via_xla))
+
+
+# --------------------------------------------------- engine token identity
+
+def _gen(cfg, params, mp, prompt, lens, new, **ekw):
+    eng = SpecEngine(cfg, **ekw)
+    out, n_out, _ = eng.generate(params, mp, prompt, lens,
+                                 eng.init_cache(prompt.shape[0], S_MAX), new,
+                                 key=jax.random.PRNGKey(7))
+    return np.asarray(out)
+
+
+@pytest.mark.parametrize("cache_dtype", ["", "int8"])
+def test_medusa_paged_matches_dense_greedy(stack, rng, cache_dtype):
+    cfg, m, params, mp = stack
+    B, PROMPT, NEW = 3, 12, 16
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)),
+                         jnp.int32)
+    lens = jnp.full((B,), PROMPT, jnp.int32)
+    outs = {lay: _gen(_layout(cfg, lay, cache_dtype=cache_dtype), params, mp,
+                      prompt, lens, NEW) for lay in ("dense", "paged")}
+    np.testing.assert_array_equal(outs["dense"], outs["paged"])
+    c = _layout(cfg, "paged", cache_dtype=cache_dtype)
+    ar, _ = ar_generate(c, params, prompt, lens, m.init_cache(c, B, S_MAX), NEW)
+    np.testing.assert_array_equal(np.asarray(ar), outs["paged"])
+
+
+def test_medusa_paged_matches_dense_sampled(stack, rng):
+    """temp > 0 sample mode: same key, same acceptance draws — paging must
+    not perturb a single verification value."""
+    cfg, m, params, mp = stack
+    B, PROMPT, NEW = 3, 12, 16
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)),
+                         jnp.int32)
+    lens = jnp.full((B,), PROMPT, jnp.int32)
+    sp = SamplingParams(temperature=0.8, top_p=0.95)
+    outs = {lay: _gen(_layout(cfg, lay), params, mp, prompt, lens, NEW,
+                      accept="sample", sampling=sp)
+            for lay in ("dense", "paged")}
+    np.testing.assert_array_equal(outs["dense"], outs["paged"])
+
+
+def test_medusa_paged_kernel_path(stack, rng):
+    cfg, m, params, mp = stack
+    B, PROMPT, NEW = 2, 10, 12
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)),
+                         jnp.int32)
+    lens = jnp.full((B,), PROMPT, jnp.int32)
+    outs = {lay: _gen(_layout(cfg, lay), params, mp, prompt, lens, NEW,
+                      use_kernel=True) for lay in ("dense", "paged")}
+    np.testing.assert_array_equal(outs["dense"], outs["paged"])
+
+
+@pytest.mark.parametrize("accept,temp", [("greedy", 0.0), ("sample", 0.9)])
+def test_draft_engine_paged_matches_dense(stack, rng, accept, temp):
+    cfg, m, params, mp = stack
+    dcfg = dataclasses.replace(cfg, num_layers=2, name="draft")
+    dparams, _ = split_params(m.init_params(jax.random.PRNGKey(5), dcfg))
+    B, PROMPT, NEW = 2, 9, 12
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)),
+                         jnp.int32)
+    lens = jnp.full((B,), PROMPT, jnp.int32)
+    outs = {}
+    for lay in ("dense", "paged"):
+        tc, dc = _layout(cfg, lay), _layout(dcfg, lay)
+        eng = DraftSpecEngine(tc, dc, gamma=3, accept=accept,
+                              sampling=SamplingParams(temperature=temp))
+        tcache, dcache = eng.init_caches(B, S_MAX)
+        out, _, _ = eng.generate(params, dparams, prompt, lens, tcache,
+                                 dcache, NEW, key=jax.random.PRNGKey(3))
+        outs[lay] = np.asarray(out)
+    np.testing.assert_array_equal(outs["dense"], outs["paged"])
+
+
+# ------------------------------------------------------- allocator behaviour
+
+def test_block_pool_refcounts():
+    pool = BlockPool(8)
+    assert pool.available == 7                      # block 0 reserved
+    a = pool.alloc(3)
+    assert a is not None and P.TRASH_BLOCK not in a
+    pool.share(a[:1])                               # a second mapper
+    assert pool.alloc(5) is None, "over-allocation must fail all-or-nothing"
+    assert pool.free(a) == a[1:], "shared block must survive its first free"
+    assert pool.free(a[:1]) == a[:1], "refcount zero returns it to the pool"
+    assert pool.available == 7
+
+
+def test_prefix_cache_register_match_evict(rng):
+    pool = BlockPool(16)
+    pc = PrefixCache(page_size=4)
+    prompt = rng.integers(0, 100, size=11).astype(np.int32)   # 2 full blocks
+    blocks = pool.alloc(3)
+    table_row = np.asarray(blocks, np.int32)
+    pc.register(prompt, table_row, pool)
+    assert len(pc) == 2 and pool.ref[blocks[0]] == 2          # registry ref
+    full, div, div_t = pc.match(prompt)
+    assert full == blocks[:2] and div == blocks[2] or div is None
+    # a diverging prompt matches only the shared full blocks
+    other = prompt.copy()
+    other[5] = (other[5] + 1) % 100
+    full2, _, _ = pc.match(other)
+    assert full2 == blocks[:1]
+    # donor gone: registry keeps the prefix alive until evicted
+    pool.free(blocks)
+    assert pool.ref[blocks[0]] == 1 and pool.ref[blocks[1]] == 1
+    freed = pc.evict(pool, 2)
+    assert freed == 2 and len(pc) == 0 and pool.available == 15
+
+
+# ------------------------------------------------------- scheduler behaviour
+
+def _server(cfg, params, mp, layout="paged", **kw):
+    c = _layout(cfg, layout)
+    eng = SpecEngine(c)
+    return MedusaServer(eng, params, mp, batch_slots=kw.pop("batch_slots", 3),
+                        max_len=kw.pop("max_len", 256), **kw), eng
+
+
+def test_scheduler_paged_matches_dense(stack, rng):
+    cfg, m, params, mp = stack
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 40, 9, 100, 17, 3)]
+    outs = {}
+    for layout in ("dense", "paged"):
+        srv, _ = _server(cfg, params, mp, layout, batch_slots=4)
+        rids = [srv.submit(p, max_new=10) for p in prompts]
+        srv.run()
+        assert all(srv.result(r).status == "done" for r in rids)
+        outs[layout] = [srv.result(r).output for r in rids]
+    assert outs["paged"] == outs["dense"]
+
+
+def test_scheduler_paged_serial_admission(stack, rng):
+    cfg, m, params, mp = stack
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 40, 9)]
+    outs = {}
+    for mode in ("batched", "serial"):
+        srv, _ = _server(cfg, params, mp, batch_slots=2, admission=mode)
+        rids = [srv.submit(p, max_new=8) for p in prompts]
+        srv.run()
+        assert all(srv.result(r).status == "done" for r in rids)
+        outs[mode] = [srv.result(r).output for r in rids]
+    assert outs["serial"] == outs["batched"]
+
+
+def test_pool_exhaustion_defers_admission(stack, rng):
+    """A pool sized for ~1.5 requests serves 3: the excess requests defer
+    (stay queued) instead of crashing, and complete after a reap frees
+    blocks — the §12 'pool is the resource' admission contract."""
+    cfg, m, params, mp = stack
+    c = _layout(cfg, "paged")
+    eng = SpecEngine(c)
+    per_req = P.blocks_for(20 + 10 + eng.dtree.T + 2, PS)
+    srv = MedusaServer(eng, params, mp, batch_slots=3, max_len=256,
+                       n_blocks=1 + per_req + per_req // 2)
+    rids = [srv.submit(rng.integers(0, c.vocab_size, size=20).astype(np.int32),
+                       max_new=10) for _ in range(3)]
+    srv.run()
+    assert [srv.result(r).status for r in rids] == ["done"] * 3
+    assert srv.stats["deferred"] > 0
+    assert srv.stats["peak_blocks"] <= per_req + per_req // 2
+
+
+def test_prefix_sharing_identity_and_block_reuse(stack, rng):
+    """8 requests sharing a 64-token prefix: prefix-cached outputs equal the
+    uncached run token-for-token, the shared prefix prefills once, and the
+    sharers' physical blocks ≈ one prefix copy + per-request suffixes."""
+    cfg, m, params, mp = stack
+    prefix = rng.integers(0, cfg.vocab_size, size=64).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(
+        0, cfg.vocab_size, size=7).astype(np.int32)]) for _ in range(8)]
+    outs, stats = {}, {}
+    for pc in (False, True):
+        srv, eng = _server(cfg, params, mp, batch_slots=8, prefix_cache=pc)
+        donor = srv.submit(prompts[0], max_new=8)
+        srv.run()                    # donor registers the prefix
+        rids = [srv.submit(p, max_new=8) for p in prompts[1:]]
+        srv.run()
+        assert all(srv.result(r).status == "done" for r in [donor] + rids)
+        outs[pc] = [srv.result(r).output for r in [donor] + rids]
+        stats[pc] = dict(srv.stats)
+    assert outs[True] == outs[False]
+    # 7 followers x 4 shared blocks of prefix each stayed un-prefilled
+    assert stats[True]["cached_tokens"] >= 7 * 64
+    assert stats[True]["prefill_tokens"] < stats[False]["prefill_tokens"]
+    per_req = P.blocks_for(71 + 8 + SpecEngine(_layout(cfg, "paged")).dtree.T
+                           + 2, PS)
+    assert stats[True]["peak_blocks"] < stats[False]["peak_blocks"]
+    assert 8 * per_req / stats[True]["peak_blocks"] >= 1.5
+
+
+def test_cow_on_divergence_after_shared_prefix(stack, rng):
+    """Follower shares 3 full blocks + 3 tokens into the donor's 4th block:
+    the divergence block is copied on write (cow_copies == 1), outputs
+    match the uncached run, and the donor's block content survives (a later
+    exact repeat of the donor prompt still matches it)."""
+    cfg, m, params, mp = stack
+    pA = rng.integers(0, cfg.vocab_size, size=64).astype(np.int32)
+    pB = np.concatenate([pA[:51],
+                         rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)])
+    if pB[51] == pA[51]:
+        pB[51] = (pB[51] + 1) % cfg.vocab_size
+    outs = {}
+    for pc in (False, True):
+        srv, _ = _server(cfg, params, mp, batch_slots=1, prefix_cache=pc)
+        rids = [srv.submit(p, max_new=8) for p in (pA, pB, pA)]
+        srv.run()
+        assert all(srv.result(r).status == "done" for r in rids)
+        outs[pc] = [srv.result(r).output for r in rids]
+        if pc:
+            assert srv.stats["cow_copies"] >= 1
+            assert srv.stats["cached_tokens"] >= 48 + 3 + 48
+    assert outs[True] == outs[False]
+
+
+def test_eviction_cannot_steal_matched_blocks(stack, rng):
+    """Regression: the blocks a request just matched are pinned before its
+    eviction/allocation runs, so a registry-only matched block can neither
+    be evicted nor handed back as one of the request's own fresh blocks
+    (which silently corrupted the shared prefix).  With a pool so tight
+    that the only reclaimable space IS the matched prefix, the planner
+    falls back to a full no-sharing prefill instead of deferring forever —
+    and the output still matches the uncached run."""
+    cfg, m, params, mp = stack
+    c = _layout(cfg, "paged")
+    eng = SpecEngine(c)
+    prompt = rng.integers(0, cfg.vocab_size, size=64).astype(np.int32)
+    per_req = P.blocks_for(64 + 8 + eng.dtree.T + 2, PS)
+    srv = MedusaServer(eng, params, mp, batch_slots=1, max_len=256,
+                       n_blocks=1 + per_req, prefix_cache=True)
+    r1 = srv.submit(prompt, max_new=8)
+    srv.run()                          # donor registers 4 prefix blocks
+    r2 = srv.submit(prompt, max_new=8)  # match fits only by reclaiming them
+    srv.run()
+    assert srv.result(r2).status == "done"
+    ref, _ = _server(cfg, params, mp, batch_slots=1)
+    ref_rid = ref.submit(prompt, max_new=8)
+    ref.run()
+    assert srv.result(r2).output == ref.result(ref_rid).output
+    assert srv.result(r1).output == ref.result(ref_rid).output
+
+
+def test_evict_is_all_or_nothing():
+    """Regression: a deferral round under overload must not strip registry
+    entries for an allocation that will fail anyway."""
+    pool = BlockPool(8)
+    pc = PrefixCache(page_size=2)
+    prompt = np.arange(5, dtype=np.int32)          # 2 full blocks
+    blocks = pool.alloc(3)
+    pc.register(prompt, np.asarray(blocks, np.int32), pool)
+    pool.free(blocks)                              # registry-only now
+    assert len(pc) == 2
+    assert pc.evict(pool, 3) == 0 and len(pc) == 2  # shortfall: untouched
+    assert pc.evict(pool, 2) == 2 and len(pc) == 0
+
+
+def test_paged_failure_recovery(stack, rng):
+    """An injected step failure under the paged layout re-queues in-flight
+    work and rebuilds pool + tables + registry; everything completes."""
+    cfg, m, params, mp = stack
+    srv, _ = _server(cfg, params, mp, batch_slots=2, prefix_cache=True)
+    rids = [srv.submit(rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
+                       max_new=8) for _ in range(3)]
+    srv.run(fail_hook=lambda it: it == 1)
+    for rid in rids:
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 8
+
+
+def test_prefix_cache_requires_paged(stack):
+    cfg, m, params, mp = stack
+    eng = SpecEngine(cfg)
+    with pytest.raises(ValueError):
+        MedusaServer(eng, params, mp, batch_slots=1, max_len=64,
+                     prefix_cache=True)

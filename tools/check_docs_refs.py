@@ -1,10 +1,17 @@
 #!/usr/bin/env python
-"""Docs-consistency check: every ``DESIGN.md §N`` citation in the code must
-name a section header that actually exists in DESIGN.md.
+"""Docs-consistency checks, run standalone in CI and from
+``tests/test_docs_refs.py``:
 
-DESIGN.md sections are renumber-stable by contract, but a renumbering (or a
-deleted section) would silently strand every code citation — this check
-turns that into a CI failure.  Run from anywhere:
+1. every ``DESIGN.md §N`` citation in the code names a section header that
+   actually exists in DESIGN.md (sections are renumber-stable by contract;
+   a renumbering or deletion would silently strand every code citation);
+2. the serving-flags table in README (the region between the
+   ``<!-- serve-flags -->`` markers) lists exactly the CLI flags
+   ``repro.launch.serve`` defines — both directions, so a new flag cannot
+   ship undocumented and the guide cannot advertise a flag that was
+   renamed or removed.
+
+Run from anywhere:
 
   python tools/check_docs_refs.py
 """
@@ -17,6 +24,11 @@ import sys
 CITE = re.compile(r"DESIGN\.md\s*§(\d+)")
 HEADER = re.compile(r"^##\s*§(\d+)\b", re.M)
 SCAN_DIRS = ("src", "benchmarks", "tests", "examples", "tools")
+
+ARGPARSE_FLAG = re.compile(r"add_argument\(\s*\"(--[a-z][a-z0-9-]*)\"")
+README_FLAG = re.compile(r"`(--[a-z][a-z0-9-]*)`")
+FLAGS_BEGIN = "<!-- serve-flags -->"
+FLAGS_END = "<!-- /serve-flags -->"
 
 
 def find_stale_refs(root: pathlib.Path) -> list[str]:
@@ -36,6 +48,31 @@ def find_stale_refs(root: pathlib.Path) -> list[str]:
     return bad
 
 
+def find_flag_drift(root: pathlib.Path) -> list[str]:
+    """Cross-check the README serving-flags table against
+    ``src/repro/launch/serve.py``'s argparse definitions.
+
+    Returns human-readable drift entries: flags the launcher defines but
+    the table omits, flags the table documents but the launcher lacks, or
+    a missing/malformed marker region."""
+    serve = (root / "src" / "repro" / "launch" / "serve.py").read_text()
+    defined = set(ARGPARSE_FLAG.findall(serve))
+    readme = (root / "README.md").read_text()
+    begin, end = readme.find(FLAGS_BEGIN), readme.find(FLAGS_END)
+    if begin < 0 or end < begin:
+        return [f"README.md: serving-flags table markers "
+                f"{FLAGS_BEGIN} ... {FLAGS_END} not found"]
+    documented = set(README_FLAG.findall(readme[begin:end]))
+    bad = []
+    for f in sorted(defined - documented):
+        bad.append(f"README.md: launcher flag {f} missing from the "
+                   f"serving-flags table")
+    for f in sorted(documented - defined):
+        bad.append(f"README.md: documented flag {f} does not exist in "
+                   f"repro/launch/serve.py")
+    return bad
+
+
 def main() -> int:
     root = pathlib.Path(__file__).resolve().parents[1]
     bad = find_stale_refs(root)
@@ -44,7 +81,14 @@ def main() -> int:
         for b in bad:
             print(" ", b)
         return 1
-    print("docs-consistency: all DESIGN.md § citations resolve")
+    drift = find_flag_drift(root)
+    if drift:
+        print("README serving-flags drift:")
+        for b in drift:
+            print(" ", b)
+        return 1
+    print("docs-consistency: all DESIGN.md § citations resolve; README "
+          "serving flags match repro/launch/serve.py")
     return 0
 
 
