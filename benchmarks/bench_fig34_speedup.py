@@ -13,8 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timeit, trained_stack
-from repro.core.engine import SpecEngine, ar_generate
+from repro.core.engine import ar_generate, build_engine
 from repro.core.tree import cartesian_tree
+from repro.models.api import init_cache
 
 SEQ_LENGTHS = (128, 256, 512, 1024)
 B, PROMPT, NEW = 4, 16, 32
@@ -58,7 +59,7 @@ def tpu_projection(ac: float = 1.78, ac_long: float = 1.65):
 def run():
     cfg, model, params, mp, corpus, head_acc = trained_stack()
     tb = cartesian_tree((4, 2, 1))      # compact tree: T=1+4+8+8=21? -> see tree.py
-    eng = SpecEngine(cfg, tb)
+    eng = build_engine(cfg, tb=tb)
     rows = [(f"setup/head{h+1}_top1", 0.0, f"{head_acc[h]:.3f}")
             for h in range(len(head_acc))]
 
@@ -75,15 +76,15 @@ def run():
 
         # --- AR baseline ---
         ar_fn = jax.jit(lambda p, t, l, c: ar_generate(cfg, p, t, l, c, NEW))
-        cache = model.init_cache(cfg, B, S_MAX)
+        cache = init_cache(cfg, B, S_MAX)
         t_ar = timeit(ar_fn, params, ctx, ctx_len, cache, iters=5, warmup=2)
 
         # --- Medusa ---
         sp_fn = jax.jit(lambda p, m, t, l, c: eng.generate(p, m, t, l, c, NEW))
-        cache = model.init_cache(cfg, B, S_MAX)
+        cache = init_cache(cfg, B, S_MAX)
         t_sp = timeit(sp_fn, params, mp, ctx, ctx_len, cache, iters=5, warmup=2)
         _, n_out, stats = sp_fn(params, mp, ctx, ctx_len,
-                                model.init_cache(cfg, B, S_MAX))
+                                init_cache(cfg, B, S_MAX))
         steps = max(int(stats.steps), 1)
         ac = float(jnp.mean(n_out)) / steps
 

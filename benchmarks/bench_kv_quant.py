@@ -24,8 +24,9 @@ import numpy as np
 
 from benchmarks.common import timeit, trained_stack
 from repro.configs.registry import get_config
-from repro.core.engine import SpecEngine, ar_generate
+from repro.core.engine import ar_generate, build_engine
 from repro.core.tree import cartesian_tree
+from repro.models.api import init_cache
 from repro.serving.scheduler import cache_bytes_per_slot, slots_for_budget
 
 B, PROMPT, NEW = 4, 16, 32
@@ -67,20 +68,20 @@ def run():
     ac, toks = {}, {}
     for cd in ("", "int8"):
         c = dataclasses.replace(cfg, cache_dtype=cd)
-        eng = SpecEngine(c, tb)
+        eng = build_engine(c, tb=tb)
         out, n_out, stats = eng.generate(params, mp, prompt, lengths,
-                                         model.init_cache(c, B, S_MAX), NEW)
+                                         init_cache(c, B, S_MAX), NEW)
         steps = max(int(stats.steps), 1)
         ac[cd] = float(np.mean(np.asarray(n_out))) / steps
         toks[cd] = np.asarray(out)
         t = timeit(lambda: eng.generate(params, mp, prompt, lengths,
-                                        model.init_cache(c, B, S_MAX), NEW),
+                                        init_cache(c, B, S_MAX), NEW),
                    iters=3, warmup=1)
         name = cd or "fp"
         rows.append((f"kv_quant/accepted_len/{name}", t * 1e6, f"{ac[cd]:.3f}"))
         # losslessness under each layout: spec == AR on the same cache dtype
         ar, _ = ar_generate(c, params, prompt, lengths,
-                            model.init_cache(c, B, S_MAX), NEW)
+                            init_cache(c, B, S_MAX), NEW)
         assert (np.asarray(ar) == toks[cd]).all(), f"{name}: spec != AR"
     drift = abs(1.0 - ac["int8"] / ac[""])
     rows.append(("kv_quant/accepted_len_drift", 0.0, f"{drift * 100:.2f}%"))

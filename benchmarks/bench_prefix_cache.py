@@ -27,9 +27,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import trained_stack
-from repro.core.engine import SpecEngine, ar_generate
+from repro.core.engine import ar_generate, build_engine
 from repro.core.tree import cartesian_tree
 from repro.distributed.sharding import split_params
+from repro.models.api import init_cache
 from repro.kernels.paging import blocks_for
 from repro.serving.scheduler import MedusaServer
 
@@ -51,12 +52,12 @@ def run(smoke: bool = False):
     outs = {}
     for layout in ("dense", "paged"):
         c = dataclasses.replace(cfg, cache_layout=layout, page_size=PS)
-        eng = SpecEngine(c, tb)
+        eng = build_engine(c, tb=tb)
         out, _, _ = eng.generate(params, mp, prompt, lengths,
                                  eng.init_cache(B, S_MAX), NEW)
         outs[layout] = np.asarray(out)
         ar, _ = ar_generate(c, params, prompt, lengths,
-                            model.init_cache(c, B, S_MAX), NEW)
+                            init_cache(c, B, S_MAX), NEW)
         assert (np.asarray(ar) == outs[layout]).all(), f"{layout}: spec != AR"
     identical = bool((outs["dense"] == outs["paged"]).all())
     rows.append(("prefix_cache/paged_token_identical", 0.0, f"{identical}"))
@@ -64,7 +65,7 @@ def run(smoke: bool = False):
 
     # --- shared-prefix serving: prefill savings + effective slots ----------
     c = dataclasses.replace(cfg, cache_layout="paged", page_size=PS)
-    eng = SpecEngine(c, tb)
+    eng = build_engine(c, tb=tb)
     rng = np.random.default_rng(0)
     prefix = corpus[0, :PREFIX].astype(np.int32)
     prompts = [np.concatenate([prefix, rng.integers(

@@ -34,9 +34,10 @@ from benchmarks.common import max_marginal_tvd as _max_marginal_tvd
 from benchmarks.common import trained_stack
 from repro.configs.base import SamplingParams
 from repro.core.draft_model import DraftSpecEngine
-from repro.core.engine import SpecEngine, ar_generate, ar_generate_sampled
+from repro.core.engine import ar_generate, ar_generate_sampled, build_engine
 from repro.core.tree import cartesian_tree
 from repro.distributed.sharding import split_params
+from repro.models.api import init_cache
 
 # documented TVD-gate tolerance (see module docstring)
 TVD_MULT, TVD_SLACK, TVD_CAP = 1.5, 0.04, 0.25
@@ -55,11 +56,11 @@ def run(smoke: bool = False):
     # --- acceptance-length vs temperature curve ---------------------------
     out_t0 = None
     for T in TEMPS:
-        eng = SpecEngine(cfg, tb, accept="sample",
-                         sampling=SamplingParams(temperature=T))
+        eng = build_engine(cfg, tb=tb, accept="sample",
+                           sampling=SamplingParams(temperature=T))
         out, n_out, stats = eng.generate(
             params, mp, prompt, lengths,
-            model.init_cache(cfg, B_CURVE, S_MAX), NEW_CURVE,
+            init_cache(cfg, B_CURVE, S_MAX), NEW_CURVE,
             key=jax.random.PRNGKey(42))
         mean_acc = float(stats.accepted_sum) / (max(int(stats.steps), 1)
                                                 * B_CURVE)
@@ -68,11 +69,11 @@ def run(smoke: bool = False):
             out_t0 = np.asarray(out)
 
     # --- temp=0 anchor: sample == greedy spec == greedy AR ----------------
-    greedy_out, _, _ = SpecEngine(cfg, tb).generate(
-        params, mp, prompt, lengths, model.init_cache(cfg, B_CURVE, S_MAX),
+    greedy_out, _, _ = build_engine(cfg, tb=tb).generate(
+        params, mp, prompt, lengths, init_cache(cfg, B_CURVE, S_MAX),
         NEW_CURVE)
     ar, _ = ar_generate(cfg, params, prompt, lengths,
-                        model.init_cache(cfg, B_CURVE, S_MAX), NEW_CURVE)
+                        init_cache(cfg, B_CURVE, S_MAX), NEW_CURVE)
     identical = bool((out_t0 == np.asarray(greedy_out)).all()
                      and (np.asarray(ar) == out_t0).all())
     rows.append(("sampling/temp0_token_identical", 0.0, f"{identical}"))
@@ -87,19 +88,19 @@ def run(smoke: bool = False):
     lens = jnp.full((N,), PROMPT, jnp.int32)
     smax = PROMPT + NEW + tb.T + 8
     ar1, _ = ar_generate_sampled(cfg, params, toks, lens,
-                                 model.init_cache(cfg, N, smax), NEW,
+                                 init_cache(cfg, N, smax), NEW,
                                  jax.random.PRNGKey(1), sp)
     ar2, _ = ar_generate_sampled(cfg, params, toks, lens,
-                                 model.init_cache(cfg, N, smax), NEW,
+                                 init_cache(cfg, N, smax), NEW,
                                  jax.random.PRNGKey(2), sp)
     floor = _max_marginal_tvd(np.asarray(ar1), np.asarray(ar2),
                               cfg.vocab_size)
     tol = min(TVD_MULT * floor + TVD_SLACK, TVD_CAP)
     rows.append((f"sampling/tvd_noise_floor/N{N}", 0.0, f"{floor:.4f}"))
 
-    eng = SpecEngine(cfg, tb, accept="sample", sampling=sp)
+    eng = build_engine(cfg, tb=tb, accept="sample", sampling=sp)
     spec, _, _ = eng.generate(params, mp, toks, lens,
-                              model.init_cache(cfg, N, smax), NEW,
+                              init_cache(cfg, N, smax), NEW,
                               key=jax.random.PRNGKey(3))
     tvd_tree = _max_marginal_tvd(np.asarray(spec), np.asarray(ar1),
                                  cfg.vocab_size)
@@ -110,8 +111,8 @@ def run(smoke: bool = False):
     dparams, _ = split_params(model.init_params(jax.random.PRNGKey(5), dcfg))
     deng = DraftSpecEngine(cfg, dcfg, gamma=3, accept="sample", sampling=sp)
     dspec, _, _ = deng.generate(params, dparams, toks, lens,
-                                model.init_cache(cfg, N, smax),
-                                model.init_cache(dcfg, N, smax), NEW,
+                                init_cache(cfg, N, smax),
+                                init_cache(dcfg, N, smax), NEW,
                                 key=jax.random.PRNGKey(4))
     tvd_chain = _max_marginal_tvd(np.asarray(dspec), np.asarray(ar1),
                                   cfg.vocab_size)

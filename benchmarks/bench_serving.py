@@ -22,12 +22,11 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core import medusa as M
-from repro.core.engine import SpecEngine
+from repro.core.engine import build_engine
 from repro.distributed.sharding import split_params
 from repro.models.api import get_model
 from repro.serving.scheduler import MedusaServer
@@ -42,7 +41,7 @@ def _stack():
     cfg = get_config("qwen1.5-0.5b", reduced=True)
     model = get_model(cfg)
     params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
-    eng = SpecEngine(cfg)
+    eng = build_engine(cfg)
     mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, eng.dtree.K))
     return cfg, model, params, eng, mp
 

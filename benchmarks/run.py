@@ -16,8 +16,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_fig34_speedup, bench_kv_quant,
-                            bench_prefix_cache, bench_sampling,
-                            bench_serving, bench_table2_heads, roofline)
+                            bench_prefix_cache, bench_proposers,
+                            bench_sampling, bench_serving,
+                            bench_table2_heads, roofline)
     suites = [
         ("table2", bench_table2_heads.run),
         ("fig3+fig4+eq2", bench_fig34_speedup.run),
@@ -25,6 +26,7 @@ def main() -> None:
         ("kv_quant", bench_kv_quant.run),
         ("sampling", bench_sampling.run),
         ("prefix_cache", bench_prefix_cache.run),
+        ("proposers", bench_proposers.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

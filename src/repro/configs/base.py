@@ -74,7 +74,11 @@ class ModelConfig:
     frontend_len: int = 0          # number of precomputed prefix embeddings
     frontend_dim: int = 0          # raw embedding dim of the stub output (0 => d_model)
     # --- speculative decoding mode (DESIGN.md §4) ---
-    spec_mode: str = "tree"        # tree | chain
+    spec_mode: str = "tree"        # tree | chain: chain-mode archs
+                                   # (SSM/hybrid) verify single-path
+                                   # candidates only, so they pair with the
+                                   # chain proposers (draft/ngram) or a
+                                   # chain_tree() Medusa — DESIGN.md §13
     # --- numerics ---
     dtype: str = "bfloat16"        # activation / inference weight dtype
     param_dtype: str = "float32"   # training master weight dtype

@@ -1,24 +1,25 @@
 """Classic two-model speculative decoding baseline (Leviathan/Chen 2023).
 
-The paper (§2.2) positions Medusa against the Draft-Model paradigm; we
-implement that baseline on the same static-cache machinery so the comparison
-is apples-to-apples: a small draft model autoregressively proposes a γ-token
-chain, the target verifies it in one forward (chain == degenerate tree), and
-both caches commit with the same zero-copy compaction.
+The paper (§2.2) positions Medusa against the Draft-Model paradigm; the
+implementation now lives in the pluggable-proposer core —
+``core.proposers.DraftModelProposer`` drafts the γ-token chain and the
+generic ``core.engine.SpecEngine`` verifies and commits it (DESIGN.md §13).
+``DraftSpecEngine`` is the thin compatibility shell keeping the original
+two-cache call shape (``init_caches``, ``generate(tparams, dparams, ...,
+tcache, dcache, ...)``) for the tests, examples and benchmarks that predate
+the refactor; it is token-identical to the legacy fused engine (asserted by
+``tests/test_proposers.py`` golden-token tests).
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SamplingParams
-from repro.core import sampling as S
-from repro.core import verify as V
-from repro.core.engine import _squeeze_spec
-from repro.core.tree import chain_tree
-from repro.models.api import get_model
+from repro.core.engine import SpecEngine
+from repro.core.proposers import DraftModelProposer
+from repro.models import api as model_api
 
 
 class DraftSpecEngine:
@@ -32,136 +33,35 @@ class DraftSpecEngine:
     def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
                  gamma: int = 4, accept: str = "greedy",
                  sampling: Optional[SamplingParams] = None):
-        assert target_cfg.vocab_size == draft_cfg.vocab_size, "tokenizer alignment"
         assert accept in ("greedy", "sample"), accept
-        self.tc, self.dc = target_cfg, draft_cfg
-        self.tm, self.dm = get_model(target_cfg), get_model(draft_cfg)
         self.gamma = gamma
-        self.tb = chain_tree(gamma)
-        self.dtree = V.device_tree(self.tb)
+        self.proposer = DraftModelProposer(target_cfg, draft_cfg, gamma=gamma)
+        # the proposer forces the draft's own cache dense (proposer state
+        # cannot be pool-form — core/proposers.py); mirror its config so
+        # init_caches and the model agree on the layout
+        self.tc, self.dc = target_cfg, self.proposer.dc
+        self.engine = SpecEngine(target_cfg, accept=accept, sampling=sampling,
+                                 proposer=self.proposer)
+        self.tb = self.engine.tb
+        self.dtree = self.engine.dtree
         self.accept = accept
-        self.sampling = sampling if sampling is not None else SamplingParams()
+        self.sampling = self.engine.sampling
 
     def init_caches(self, batch: int, max_len: int):
-        """(target_cache, draft_cache) for ``batch`` rows, each honouring its
-        own ``cfg.cache_dtype`` (DESIGN.md §10) — the two caches may use
-        different storage layouts (e.g. int8 target, fp draft)."""
-        return (self.tm.init_cache(self.tc, batch, max_len),
-                self.dm.init_cache(self.dc, batch, max_len))
+        """(target_cache, draft_cache) for ``batch`` rows through the one
+        layout-aware factory (``models.api.init_cache``), each honouring
+        its own ``cfg.cache_dtype`` (DESIGN.md §10) — the two caches may
+        use different storage layouts (e.g. int8 target, fp draft)."""
+        return (model_api.init_cache(self.tc, batch, max_len),
+                model_api.init_cache(self.dc, batch, max_len))
 
-    def _draft_chain(self, dparams, dcache, dlengths, base, key=None):
-        """Draft proposes gamma tokens AR-style.
-        Returns (tokens [B,gamma], draft_logits [B,gamma,V], dcache', dlengths').
-
-        Runs gamma+1 steps: a full accept commits gamma+1 tokens
-        [base, d1..d_gamma], so the draft must have written d_gamma's KV row
-        too (otherwise its next round attends over a stale slot and
-        acceptance collapses — caught by the self-draft test).
-
-        Under ``accept="sample"`` each proposal is *sampled* from the warped
-        draft logits — the per-position distributions q that the
-        rejection-sampling identity needs — and the raw logits are returned
-        so verification re-applies the identical warp (DESIGN.md §11)."""
-        chain1 = jnp.ones((1, 1), bool)
-        depth0 = jnp.zeros((1,), jnp.int32)
-        B = base.shape[0]
-        sp = self.sampling
-
-        def body(i, c):
-            dcache, dlengths, tok, toks, qlog = c
-            hidden, dcache = self.dm.decode(dparams, self.dc, dcache,
-                                            tok[:, None], dlengths, chain1, depth0)
-            dcache = _squeeze_spec(self.dm, self.dc, dcache, dlengths)
-            dlengths = dlengths + 1
-            logits = self.dm.unembed(dparams, self.dc, hidden[:, 0])
-            if self.accept == "sample":
-                nxt = S.sample(jax.random.fold_in(key, i), logits,
-                               sp.temperature, sp.top_k, sp.top_p)
-            else:
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            j = jnp.minimum(i, self.gamma - 1)
-            keep = i < self.gamma   # the gamma+1'th step only writes its KV row
-            toks = jnp.where(keep, toks.at[:, j].set(nxt), toks)
-            qlog = jnp.where(keep, qlog.at[:, j].set(logits.astype(jnp.float32)),
-                             qlog)
-            return (dcache, dlengths, nxt, toks, qlog)
-
-        toks = jnp.zeros((B, self.gamma), jnp.int32)
-        qlog = jnp.zeros((B, self.gamma, self.dc.vocab_size), jnp.float32)
-        dcache, dlengths, _, toks, qlog = jax.lax.fori_loop(
-            0, self.gamma + 1, body, (dcache, dlengths, base, toks, qlog))
-        return toks, qlog, dcache, dlengths - 1
-
-    def step(self, tparams, dparams, tcache, dcache, lengths, dlengths, base,
-             key=None):
-        """One draft-propose / target-verify round.  ``key`` drives the draft
-        sampling and the rejection draws under ``accept="sample"``."""
-        dt = self.dtree
-        key = key if key is not None else jax.random.PRNGKey(0)
-        kd, kv = jax.random.split(key)
-        draft_toks, qlog, dcache, dlengths = self._draft_chain(
-            dparams, dcache, dlengths, base, kd)
-        mtok = draft_toks[:, :, None]                       # [B, gamma, 1]
-        cand = V.generate_candidates(base, mtok, dt)        # [B, gamma+1]
-        hidden, spec_cache = self.tm.decode(
-            tparams, self.tc, tcache, cand, lengths,
-            jnp.asarray(dt.mask), jnp.asarray(dt.depths))
-        logits = self.tm.unembed(tparams, self.tc, hidden)
-        if self.accept == "sample":
-            sp = self.sampling
-            verdict = V.sample_verify_chain(cand, logits, qlog, dt, kv,
-                                            temperature=sp.temperature,
-                                            top_k=sp.top_k, top_p=sp.top_p)
-        else:
-            verdict = V.greedy_verify(cand, logits, dt)
-        tcache, lengths = self.tm.commit(self.tc, spec_cache, lengths,
-                                         verdict.path_slots, verdict.acc)
-        # draft wrote gamma rows from `lengths`; accepted prefix stays, the
-        # rest is dead and gets overwritten — roll dlengths back to match.
-        dlengths = lengths
-        return tcache, dcache, lengths, dlengths, verdict
-
-    def generate(self, tparams, dparams, tokens, prompt_lengths, tcache, dcache,
-                 max_new: int, extra_embeds=None, key=None):
+    def generate(self, tparams, dparams, tokens, prompt_lengths, tcache,
+                 dcache, max_new: int, extra_embeds=None, key=None):
+        """Legacy call shape: the separately passed draft cache becomes the
+        proposer state of one generic ``SpecEngine.generate`` run."""
         B = tokens.shape[0]
-        K1 = self.gamma + 1
-        buf_len = max_new + K1 + 1
-        key = key if key is not None else jax.random.PRNGKey(0)
-        sp = self.sampling
-
-        th, tcache = self.tm.prefill(tparams, self.tc, tokens, prompt_lengths,
-                                     tcache, extra_embeds=extra_embeds)
-        _, dcache = self.dm.prefill(dparams, self.dc, tokens, prompt_lengths,
-                                    dcache, extra_embeds=extra_embeds)
-        tlogits = self.tm.unembed(tparams, self.tc, th)
-        if self.accept == "sample":
-            key, kp = jax.random.split(key)
-            base = S.sample(kp, tlogits, sp.temperature, sp.top_k, sp.top_p)
-        else:
-            base = jnp.argmax(tlogits, axis=-1).astype(jnp.int32)
-        out = jnp.zeros((B, buf_len), jnp.int32)
-
-        def write_out(out, toks, n_out):
-            def one(o, t, s):
-                return jax.lax.dynamic_update_slice(o, t, (s,))
-            return jax.vmap(one)(out, toks, jnp.minimum(n_out, buf_len - K1))
-
-        def cond(c):
-            return (c[6] < max_new) & jnp.any(c[5] < max_new)
-
-        def body(c):
-            tcache, dcache, lengths, dlengths, base, n_out, steps, out, key = c
-            key, sub = jax.random.split(key)
-            tcache, dcache, lengths, dlengths, verdict = self.step(
-                tparams, dparams, tcache, dcache, lengths, dlengths, base, sub)
-            out = write_out(out, verdict.path_tokens, n_out)
-            return (tcache, dcache, lengths, dlengths, verdict.next_token,
-                    n_out + verdict.acc, steps + 1, out, key)
-
-        state = (tcache, dcache, prompt_lengths, prompt_lengths, base,
-                 jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32), out, key)
-        tcache, dcache, lengths, dlengths, base, n_out, steps, out, key = \
-            jax.lax.while_loop(cond, body, state)
-        out = write_out(out, jnp.broadcast_to(base[:, None], (B, K1)), n_out)
-        n_out = n_out + 1
-        return out[:, :max_new], jnp.minimum(n_out, max_new), steps
+        state = {"cache": dcache, "len": jnp.zeros((B,), jnp.int32)}
+        out, n_out, stats = self.engine.generate(
+            tparams, dparams, tokens, prompt_lengths, tcache, max_new,
+            extra_embeds=extra_embeds, key=key, state=state)
+        return out, n_out, stats.steps

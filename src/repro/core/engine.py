@@ -1,14 +1,20 @@
-"""Speculative decoding engines.
+"""Generic speculative decoding engine over a pluggable ``Proposer``.
 
-``SpecEngine`` runs the paper's static Medusa step: candidates from the
-static tree -> one backbone verification forward -> tensorized acceptance ->
-zero-copy commit.  The full generation loop is a single ``lax.while_loop``
-over one compiled step graph — no retraces, no host round-trips; shapes are
-identical every iteration (the NPU "Static Shape" contract, natively XLA).
+``SpecEngine`` runs the paper's static speculation step for *any* proposer
+(trained Medusa heads, a draft model, train-free n-gram lookup —
+``core/proposers.py``, DESIGN.md §13): candidates from the proposer -> one
+backbone verification forward -> tensorized acceptance -> zero-copy commit.
+The full generation loop is a single ``lax.while_loop`` over one compiled
+step graph — no retraces, no host round-trips; shapes are identical every
+iteration (the NPU "Static Shape" contract, natively XLA).  The engine owns
+everything proposer-independent: target prefill and suffix-prefill,
+verification dispatch (greedy / typical / sample via ``core/verify.py``),
+cache construction and commit across dense/paged/fp/int8 layouts, and
+``StepStats``.
 
 ``ar_generate`` is the autoregressive baseline sharing the same cache
 machinery (T=1 decode), used for the paper's speedup/overhead metrics and
-for the losslessness test (greedy Medusa == greedy AR, token for token);
+for the losslessness test (greedy spec == greedy AR, token for token);
 ``ar_generate_sampled`` is its stochastic sibling, the distribution-equality
 oracle for ``accept="sample"`` (DESIGN.md §11).
 
@@ -20,17 +26,18 @@ engines read identical (fake-quantized) values.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SamplingParams
-from repro.core import medusa as M
 from repro.core import sampling as S
 from repro.core import verify as V
-from repro.core.tree import TreeBuffers, default_tree
+from repro.core.proposers import (MedusaProposer, Proposer, make_proposer)
+from repro.core.tree import TreeBuffers
+from repro.models import api as model_api
 from repro.models.api import get_model
 
 
@@ -45,29 +52,38 @@ class StepStats(NamedTuple):
 
 
 class SpecEngine:
-    """Medusa speculative engine for one (config, tree) pair.
+    """Speculative engine for one (config, proposer) pair.
 
-    ``accept`` selects verification: "greedy" (lossless argmax match),
-    "typical" (Medusa's lossy typical acceptance) or "sample" (lossless
-    stochastic rejection-sampling verification under ``sampling`` —
-    DESIGN.md §11).  At ``sampling.temperature <= 0`` the "sample" mode is
-    token-identical to "greedy".
+    ``proposer`` selects the draft policy (``core/proposers.py``); passing
+    a ``TreeBuffers`` as ``tb`` (or nothing) keeps the legacy behaviour of
+    a ``MedusaProposer`` on that tree.  ``accept`` selects verification:
+    "greedy" (lossless argmax match), "typical" (Medusa's lossy typical
+    acceptance) or "sample" (lossless stochastic rejection-sampling
+    verification under ``sampling`` — DESIGN.md §11, dispatched per the
+    proposer's ``q_kind``).  At ``sampling.temperature <= 0`` the "sample"
+    mode is token-identical to "greedy".
     """
 
     def __init__(self, cfg: ModelConfig, tb: Optional[TreeBuffers] = None,
                  use_kernel: bool = False, accept: str = "greedy",
                  temperature: float = 0.7, deferred: bool = False,
-                 sampling: Optional[SamplingParams] = None):
+                 sampling: Optional[SamplingParams] = None,
+                 proposer: Optional[Proposer] = None):
         if accept not in ("greedy", "typical", "sample"):
             raise ValueError(f"unknown accept mode {accept!r}")
+        if proposer is not None and tb is not None:
+            raise ValueError("pass either tb (legacy Medusa tree) or "
+                             "proposer, not both")
         self.cfg = cfg
         self.model = get_model(cfg)
-        self.tb = tb if tb is not None else default_tree(cfg.spec_mode)
+        self.proposer = proposer if proposer is not None \
+            else MedusaProposer(cfg, tb)
+        self.tb = self.proposer.tb
         if cfg.spec_mode == "chain" and not self.tb.is_chain:
             raise ValueError(
                 f"{cfg.name}: SSM/hybrid archs verify in CHAIN mode "
                 "(DESIGN.md §4); pass a chain_tree().")
-        self.dtree = V.device_tree(self.tb)
+        self.dtree = self.proposer.dtree
         self.use_kernel = use_kernel
         self.deferred = deferred and cfg.family != "encdec"
         self.accept = accept
@@ -84,24 +100,44 @@ class SpecEngine:
                 sp.top_p if top_p is None else top_p)
 
     def init_cache(self, batch: int, max_len: int, n_blocks=None):
-        """Decode cache for ``batch`` slots honouring ``cfg.cache_dtype``
-        (int8 layout halves cache bytes per slot — DESIGN.md §10) and
+        """Decode cache for ``batch`` slots via the layout-aware factory
+        (``models.api.init_cache``): honours ``cfg.cache_dtype`` (int8
+        layout halves cache bytes per slot — DESIGN.md §10) and
         ``cfg.cache_layout`` (``n_blocks`` sizes the paged pool; None means
         the allocator-free identity table — DESIGN.md §12)."""
-        return self.model.init_cache(self.cfg, batch, max_len,
-                                     n_blocks=n_blocks)
+        return model_api.init_cache(self.cfg, batch, max_len,
+                                    n_blocks=n_blocks)
+
+    def init_proposer_state(self, batch: int, capacity: int):
+        """Fresh proposer device state for ``batch`` rows holding up to
+        ``capacity`` tokens each (history buffers, draft caches — sized
+        once, static thereafter; DESIGN.md §13)."""
+        return self.proposer.init_state(batch, capacity)
+
+    def _tok_lens(self, lengths, extra_embeds):
+        """True token counts inside the prompt tensor: ``lengths`` minus
+        the frontend-embedding prefix a VLM/audio prefill prepends."""
+        if extra_embeds is not None and self.cfg.frontend \
+                and self.cfg.family != "encdec":
+            return lengths - self.cfg.frontend_len
+        return lengths
 
     # -- one-shot pieces (jit-friendly pure functions) ----------------------
 
-    def prefill(self, params, medusa_params, tokens, lengths, cache,
-                extra_embeds=None, key=None, temperature=None, top_p=None):
-        """-> (cache, lengths, base_token [B], mtok [B,K,tk], mprob).
+    def prefill(self, params, proposer_params, tokens, lengths, cache,
+                extra_embeds=None, key=None, temperature=None, top_p=None,
+                state=None):
+        """-> (cache, lengths, base_token [B], proposer state).
 
         Under ``accept="sample"`` (and a ``key``), the base token — the
         first emitted token — is *sampled* from the warped target logits,
         matching the stochastic AR oracle; otherwise argmax.
         ``temperature``/``top_p`` may be per-row [B] arrays (the serving
-        scheduler's per-request values)."""
+        scheduler's per-request values).  ``state`` is the proposer state
+        to prime; None allocates one sized for the prompt plus a few steps
+        (fine for Medusa, too small for a full n-gram/draft generation —
+        loops should pass ``init_proposer_state`` with a real budget)."""
+        B, Sp = tokens.shape
         last_hidden, cache = self.model.prefill(
             params, self.cfg, tokens, lengths, cache, extra_embeds=extra_embeds)
         logits = self.model.unembed(params, self.cfg, last_hidden)
@@ -110,12 +146,17 @@ class SpecEngine:
             base = S.sample(key, logits, t, k, p)
         else:
             base = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        mtok, mprob = self._heads(medusa_params, last_hidden)
-        return cache, lengths, base, mtok, mprob
+        if state is None:
+            state = self.init_proposer_state(B, Sp + self.dtree.T + 2)
+        state = self.proposer.prime(
+            proposer_params, state, tokens, lengths,
+            self._tok_lens(lengths, extra_embeds), last_hidden, base,
+            extra_embeds=extra_embeds)
+        return cache, lengths, base, state
 
-    def suffix_prefill(self, params, medusa_params, cache, lengths, tokens,
+    def suffix_prefill(self, params, proposer_params, cache, lengths, tokens,
                        n_valid, active, key=None, temperature=None,
-                       top_p=None):
+                       top_p=None, state=None):
         """Continue a prefill from cached prefix rows (prefix-cache
         admission, DESIGN.md §12).
 
@@ -128,13 +169,19 @@ class SpecEngine:
         frozen exactly as in the masked serving step (DESIGN.md §9) and
         their dead writes sink per the paged write rules.
 
-        Returns (cache, lengths, base [B], mtok [B, K, topk], mprob) with
-        meaningful values on active rows only.  Sampling mirrors
-        ``prefill``: under ``accept="sample"`` with a ``key`` the base
-        token is drawn from the warped target logits at the last valid
-        suffix position (``temperature``/``top_p`` may be per-row [B]
-        arrays); otherwise argmax.
+        Returns (cache, lengths, base [B], proposer state) with meaningful
+        values on active rows only.  The proposer is primed from the
+        *suffix* (history-based proposers start without the shared prefix
+        — conservative but lossless; proposers with
+        ``supports_prefix=False`` cannot take this path at all).  Sampling
+        mirrors ``prefill``: under ``accept="sample"`` with a ``key`` the
+        base token is drawn from the warped target logits at the last
+        valid suffix position (``temperature``/``top_p`` may be per-row
+        [B] arrays); otherwise argmax.
         """
+        if not self.proposer.supports_prefix:
+            raise ValueError(f"{type(self.proposer).__name__} cannot be "
+                             "primed from a prompt suffix (DESIGN.md §13)")
         B, T = tokens.shape
         causal = jnp.tril(jnp.ones((T, T), bool))
         depths = jnp.arange(T, dtype=jnp.int32)
@@ -143,8 +190,8 @@ class SpecEngine:
             use_kernel=self.use_kernel)
         path = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
         nv = jnp.clip(n_valid, 1, T)
-        cache, lengths = self.model.commit(self.cfg, spec_cache, lengths,
-                                           path, nv, active=active)
+        cache, new_lengths = self.model.commit(self.cfg, spec_cache, lengths,
+                                               path, nv, active=active)
         h_last = jnp.take_along_axis(
             hidden, (nv - 1)[:, None, None], axis=1)[:, 0]        # [B, d]
         logits = self.model.unembed(params, self.cfg, h_last)
@@ -153,81 +200,101 @@ class SpecEngine:
             base = S.sample(key, logits, t, k, p)
         else:
             base = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        mtok, mprob = self._heads(medusa_params, h_last)
-        return cache, lengths, base, mtok, mprob
+        if state is None:
+            state = self.init_proposer_state(B, T + self.dtree.T + 2)
+        state = self.proposer.prime(proposer_params, state, tokens,
+                                    new_lengths, nv, h_last, base)
+        return cache, new_lengths, base, state
 
-    def _heads(self, medusa_params, hidden):
-        if self.dtree.K == 0 or medusa_params is None:
-            B = hidden.shape[0]
-            z = jnp.zeros((B, max(self.dtree.K, 1), self.dtree.max_topk), jnp.int32)
-            return z, z.astype(jnp.float32)
-        mtok, mprob = M.medusa_topk(medusa_params, hidden, self.dtree.max_topk)
-        return mtok.transpose(1, 0, 2), mprob.transpose(1, 0, 2)
+    def _verify(self, cand, logits, q, key, temperature, top_k, top_p):
+        """Acceptance-rule dispatch (DESIGN.md §3, §11): the engine picks
+        the verifier from (``accept``, proposer ``q_kind``); everything
+        downstream of it is shape-identical."""
+        if self.accept == "typical":
+            return V.typical_verify(cand, logits, self.dtree, key,
+                                    temperature=self.temperature)
+        if self.accept == "sample":
+            if self.proposer.q_kind == "logits":
+                return V.sample_verify_chain(cand, logits, q, self.dtree,
+                                             key, temperature=temperature,
+                                             top_k=top_k, top_p=top_p)
+            return V.sample_verify_tree(cand, logits, q, self.dtree, key,
+                                        temperature=temperature,
+                                        top_k=top_k, top_p=top_p)
+        return V.greedy_verify(cand, logits, self.dtree)
 
-    def spec_step(self, params, medusa_params, cache, lengths, base, mtok, key,
-                  active=None, mprob=None, temperature=None, top_p=None):
+    def spec_step(self, params, proposer_params, cache, lengths, base, state,
+                  key, active=None, temperature=None, top_p=None):
         """One static speculative step.
-        Returns (cache, lengths, verdict, mtok', mprob').
+        Returns (cache, lengths, verdict, state').
 
-        ``active`` [B] bool (optional) enables the masked-commit variant used
-        by the serving scheduler (DESIGN.md §9): all B slots run through the
-        same static graph, but only active slots advance their cache length —
-        empty or finished slots are masked out of the commit so their state
-        stays frozen until admission overwrites the whole slot row.
+        ``state`` is the proposer's device state (from ``prefill`` /
+        ``init_proposer_state``); the step is propose -> one target
+        forward -> verify -> commit -> observe, with every stage
+        fixed-shape.  ``active`` [B] bool (optional) enables the
+        masked-commit variant used by the serving scheduler (DESIGN.md
+        §9): all B slots run through the same static graph, but only
+        active slots advance their cache length — empty or finished slots
+        are masked out of the commit so their state stays frozen until
+        admission overwrites the whole slot row.
 
-        ``mprob`` [B, K, max_topk] (the head probabilities paired with
-        ``mtok``) is the draft distribution q consumed by ``accept="sample"``
-        verification; ``temperature``/``top_p`` override the engine-level
-        ``SamplingParams`` and may be per-slot [B] device arrays.
+        ``temperature``/``top_p`` override the engine-level
+        ``SamplingParams`` and may be per-slot [B] device arrays.  The
+        step ``key`` feeds verification directly for deterministic
+        proposers (the legacy PRNG stream) and is split (propose, verify)
+        when the proposer draws its own randomness.
         """
         dt = self.dtree
-        cand = V.generate_candidates(base, mtok, dt)                  # [B, T]
+        t, k, p = self._sampling_args(temperature, top_p)
+        if self.proposer.consumes_key:
+            k_prop, k_ver = jax.random.split(key)
+        else:
+            k_prop = k_ver = key
+        cand, q, state = self.proposer.propose(
+            proposer_params, state, base, k_prop, t, k, p,
+            stochastic=self.accept == "sample")
         kw = {"deferred": True} if self.deferred else {}
         hidden, spec_cache = self.model.decode(
             params, self.cfg, cache, cand, lengths,
             jnp.asarray(dt.mask), jnp.asarray(dt.depths),
             use_kernel=self.use_kernel, **kw)
         logits = self.model.unembed(params, self.cfg, hidden)         # [B, T, V]
-        if self.accept == "typical":
-            verdict = V.typical_verify(cand, logits, dt, key,
-                                       temperature=self.temperature)
-        elif self.accept == "sample":
-            if mprob is None:
-                mprob = jnp.ones(mtok.shape, jnp.float32)
-            t, k, p = self._sampling_args(temperature, top_p)
-            verdict = V.sample_verify_tree(cand, logits, mprob, dt, key,
-                                           temperature=t, top_k=k, top_p=p)
-        else:
-            verdict = V.greedy_verify(cand, logits, dt)
+        verdict = self._verify(cand, logits, q, k_ver, t, k, p)
         cache, lengths = self.model.commit(
             self.cfg, spec_cache, lengths, verdict.path_slots, verdict.acc,
             active=active)
         h_last = jnp.take_along_axis(
             hidden, verdict.last_slot[:, None, None], axis=1)[:, 0]   # [B, d]
-        mtok2, mprob2 = self._heads(medusa_params, h_last)
-        return cache, lengths, verdict, mtok2, mprob2
+        state = self.proposer.observe(proposer_params, state, verdict,
+                                      h_last, lengths)
+        return cache, lengths, verdict, state
 
     # -- full generation loops ----------------------------------------------
 
-    def generate(self, params, medusa_params, tokens, prompt_lengths, cache,
-                 max_new: int, extra_embeds=None, key=None):
-        """Full Medusa generation loop — one compiled step graph inside a
-        single ``lax.while_loop`` (§2 static-shape contract).
+    def generate(self, params, proposer_params, tokens, prompt_lengths, cache,
+                 max_new: int, extra_embeds=None, key=None, state=None):
+        """Full speculative generation loop — one compiled step graph inside
+        a single ``lax.while_loop`` (§2 static-shape contract), identical
+        for every proposer.
 
         tokens [B, S_p] int32 right-padded prompts, prompt_lengths [B]
         int32, cache from ``init_cache`` (any layout/dtype — dense/paged,
         fp/int8).  Returns (out_tokens [B, max_new] int32, n_out [B] int32
         true lengths, StepStats).  ``key`` drives prefill base sampling and
-        per-step acceptance draws under ``accept="sample"``."""
-        cfg, dt = self.cfg, self.dtree
+        per-step acceptance draws under ``accept="sample"``.  ``state``
+        (optional) is a pre-built proposer state — e.g. a draft cache the
+        caller allocated; None allocates one sized for this call."""
+        dt = self.dtree
         key = key if key is not None else jax.random.PRNGKey(0)
-        B = tokens.shape[0]
+        B, Sp = tokens.shape
         K1 = dt.K + 1
         buf_len = max_new + K1 + 1
+        if state is None:
+            state = self.init_proposer_state(B, Sp + max_new + dt.T + 2)
         key, kp = jax.random.split(key)
-        cache, lengths, base, mtok, mprob = self.prefill(
-            params, medusa_params, tokens, prompt_lengths, cache, extra_embeds,
-            key=kp)
+        cache, lengths, base, state = self.prefill(
+            params, proposer_params, tokens, prompt_lengths, cache,
+            extra_embeds, key=kp, state=state)
         out = jnp.zeros((B, buf_len), jnp.int32)
         max_steps = max_new  # worst case 1 token/step
 
@@ -237,15 +304,14 @@ class SpecEngine:
             return jax.vmap(one)(out, toks, jnp.minimum(n_out, buf_len - K1))
 
         def cond(c):
-            n_out, steps = c[6], c[7]
+            n_out, steps = c[5], c[6]
             return (steps < max_steps) & jnp.any(n_out < max_new)
 
         def body(c):
-            cache, lengths, base, mtok, mprob, out, n_out, steps, acc_sum, key = c
+            cache, lengths, base, state, out, n_out, steps, acc_sum, key = c
             key, sub = jax.random.split(key)
-            cache, lengths, verdict, mtok, mprob = self.spec_step(
-                params, medusa_params, cache, lengths, base, mtok, sub,
-                mprob=mprob)
+            cache, lengths, verdict, state = self.spec_step(
+                params, proposer_params, cache, lengths, base, state, sub)
             out = write_out(out, verdict.path_tokens, n_out)
             # per-step accepted count clamped to the remaining budget: the
             # last step may overshoot max_new, and the bonus token is
@@ -253,19 +319,45 @@ class SpecEngine:
             acc_sum = acc_sum + jnp.sum(
                 jnp.minimum(verdict.acc, jnp.maximum(max_new - n_out, 0)))
             n_out = n_out + verdict.acc
-            return (cache, lengths, verdict.next_token, mtok, mprob, out,
+            return (cache, lengths, verdict.next_token, state, out,
                     n_out, steps + 1, acc_sum, key)
 
         n_out = jnp.zeros((B,), jnp.int32)
-        state = (cache, lengths, base, mtok, mprob, out, n_out,
+        carry = (cache, lengths, base, state, out, n_out,
                  jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), key)
-        (cache, lengths, base, mtok, mprob, out, n_out, steps, acc_sum,
-         _) = jax.lax.while_loop(cond, body, state)
+        (cache, lengths, base, state, out, n_out, steps, acc_sum,
+         _) = jax.lax.while_loop(cond, body, carry)
         # final certain token
         out = write_out(out, jnp.broadcast_to(base[:, None], (B, K1)), n_out)
         n_out = n_out + 1
         stats = StepStats(tokens_out=n_out, steps=steps, accepted_sum=acc_sum)
         return out[:, :max_new], jnp.minimum(n_out, max_new), stats
+
+
+def build_engine(cfg: ModelConfig, proposer: str = "medusa", *,
+                 tb: Optional[TreeBuffers] = None,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_layers: int = 2, gamma: int = 4, max_n: int = 3,
+                 min_n: int = 1, use_kernel: bool = False,
+                 accept: str = "greedy",
+                 sampling: Optional[SamplingParams] = None) -> SpecEngine:
+    """One-stop engine construction shared by the launcher, the benchmarks
+    and the tests (DESIGN.md §13).
+
+    ``proposer`` names the draft policy (medusa | draft | ngram).  For
+    "draft" a ``draft_cfg`` may be supplied; omitted, a ``draft_layers``-
+    layer sibling of ``cfg`` is derived (the classic small-draft setup).
+    ``tb`` overrides the Medusa tree (default: ``cfg.spec_mode``'s tree);
+    ``gamma``/``max_n``/``min_n`` shape the chain proposers.
+    """
+    if proposer == "draft" and draft_cfg is None:
+        draft_cfg = dataclasses.replace(
+            cfg, num_layers=min(draft_layers, cfg.num_layers),
+            name=cfg.name + "-draft")
+    p = make_proposer(proposer, cfg, tb=tb, draft_cfg=draft_cfg, gamma=gamma,
+                      max_n=max_n, min_n=min_n)
+    return SpecEngine(cfg, use_kernel=use_kernel, accept=accept,
+                      sampling=sampling, proposer=p)
 
 
 def ar_generate(cfg: ModelConfig, params, tokens, prompt_lengths, cache,

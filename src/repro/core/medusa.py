@@ -4,6 +4,11 @@ K parallel decoding heads on the frozen backbone's final hidden state.
 Each head k is a residual MLP block (zero-initialised, so heads start as
 the identity) followed by its own vocabulary projection, predicting the
 token at t + k + 1.
+
+This module is pure head math (init/apply/top-k); the speculation-side
+consumer is ``core.proposers.MedusaProposer``, which turns ``medusa_topk``
+output into candidate trees for the generic engine (DESIGN.md §13).
+Training lives in ``training/steps.py``.
 """
 from __future__ import annotations
 

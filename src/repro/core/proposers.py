@@ -1,0 +1,381 @@
+"""Pluggable draft proposers for the speculative-decoding core (DESIGN.md §13).
+
+The paper's pipeline fuses "propose candidates" and "verify on the target"
+into one static step; this module is the seam between the two.  A
+``Proposer`` produces the candidate tree (and the draft distribution q the
+stochastic verifier needs) from whatever signal it owns — trained Medusa
+heads, a small autoregressive draft model, or the token history itself —
+and the generic ``core.engine.SpecEngine`` owns everything else: target
+prefill, the jitted spec step, verification dispatch (``core/verify.py``),
+cache commit across dense/paged/fp/int8 layouts, and ``StepStats``.
+
+Static-shape contract for proposers (the §2 NPU constraint, extended):
+
+* the candidate topology (``tb``/``dtree``) is fixed at construction — one
+  compiled step graph for the proposer's lifetime;
+* ``init_state`` allocates every device buffer the proposer will ever own,
+  sized by (batch, capacity) alone; ``propose``/``observe`` may change only
+  *values*, never shapes, so they trace once inside ``lax.while_loop`` and
+  the serving scheduler's jitted step;
+* per-leaf batch axes are declared by ``state_axes`` so the scheduler can
+  gather/merge proposer state through batched admission exactly like the
+  KV cache (DESIGN.md §9) without knowing what is inside.
+
+Three implementations:
+
+* ``MedusaProposer``   — the paper's trained multi-head proposer (§3.1);
+* ``DraftModelProposer`` — classic two-model chain speculation
+  (Leviathan/Chen), the draft's KV cache riding along as proposer state;
+* ``NgramProposer``    — train-free prompt-lookup decoding: match the last
+  n emitted tokens against the prompt + generated history and propose the
+  continuation that followed last time.  q is a point mass (the proposal
+  is deterministic), so ``accept="sample"`` verification reduces to the
+  residual-mass rule of ``sample_verify_tree`` — still lossless
+  (DESIGN.md §13).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import medusa as M
+from repro.core import sampling as S
+from repro.core import verify as V
+from repro.core.tree import TreeBuffers, chain_tree, default_tree
+
+
+class Proposer:
+    """Protocol + shared plumbing for candidate proposers.
+
+    Subclasses set ``tb``/``dtree`` in ``__init__`` and implement
+    ``init_state`` / ``prime`` / ``propose`` / ``observe``.  Class
+    attributes describe the contract to the engine:
+
+    * ``consumes_key``  — propose() draws randomness, so the engine must
+      split the step key into (propose, verify) halves.  False keeps the
+      legacy single-key stream (Medusa token-identity).
+    * ``q_kind``        — "mprob" (per-node head probabilities, verified by
+      ``sample_verify_tree``) or "logits" (full per-position draft logits,
+      verified by ``sample_verify_chain``).
+    * ``supports_prefix`` — the proposer can be primed from a prompt
+      *suffix* (prefix-cache admission, DESIGN.md §12).  False for the
+      draft model, whose own cache cannot map shared prefix blocks.
+    """
+
+    tb: TreeBuffers
+    dtree: V.DeviceTree
+    consumes_key: bool = False
+    q_kind: str = "mprob"
+    supports_prefix: bool = True
+
+    def init_state(self, batch: int, capacity: int):
+        """Allocate the proposer's device state for ``batch`` rows.
+
+        ``capacity`` bounds the tokens a row may ever hold (prompt +
+        generated + tree slack) — it sizes history buffers and draft
+        caches; shape-free proposers ignore it."""
+        raise NotImplementedError
+
+    def state_axes(self, state):
+        """Pytree of ints (same structure as ``state``): the batch axis of
+        each leaf, for the scheduler's admission gather/merge."""
+        return jax.tree.map(lambda _: 0, state)
+
+    def prime(self, pp, state, tokens, lengths, tok_lens, hidden, base,
+              extra_embeds=None):
+        """(Re)initialise ``state`` rows after a target prefill.
+
+        tokens [B, S_p] right-padded prompt (or un-cached suffix), lengths
+        [B] the *cache* lengths the target prefilled at, tok_lens [B] true
+        token counts inside ``tokens`` (== lengths minus any frontend
+        prefix), hidden [B, d] the target's last hidden state, base [B]
+        the first emitted token."""
+        raise NotImplementedError
+
+    def propose(self, pp, state, base, key, temperature, top_k, top_p,
+                stochastic: bool):
+        """-> (candidates [B, T] int32, q, state').
+
+        ``q`` is the draft distribution in ``q_kind`` form; ``stochastic``
+        is True under ``accept="sample"`` (a sampling proposer must then
+        *draw* its chain so q matches the proposal distribution)."""
+        raise NotImplementedError
+
+    def observe(self, pp, state, verdict, hidden, lengths):
+        """Fold the verification outcome back into the state: ``hidden``
+        [B, d] is the target hidden at the last accepted node, ``lengths``
+        the post-commit cache lengths."""
+        raise NotImplementedError
+
+
+class MedusaProposer(Proposer):
+    """The paper's trained K-head proposer (§3.1) as a pluggable policy.
+
+    State is the pair (mtok, mprob) [B, K, max_topk] — the head top-k
+    computed from the target hidden at the *previous* step's last accepted
+    node, exactly the tensors the pre-refactor engine threaded by hand.
+    ``propose`` is pure gather (no randomness: ``consumes_key=False``
+    keeps the PRNG stream, and therefore the sampled token stream,
+    identical to the legacy engine).
+    """
+
+    consumes_key = False
+    q_kind = "mprob"
+    supports_prefix = True
+
+    def __init__(self, cfg: ModelConfig, tb: Optional[TreeBuffers] = None):
+        self.cfg = cfg
+        self.tb = tb if tb is not None else default_tree(cfg.spec_mode)
+        self.dtree = V.device_tree(self.tb)
+
+    def _heads(self, pp, hidden):
+        if self.dtree.K == 0 or pp is None:
+            B = hidden.shape[0]
+            z = jnp.zeros((B, max(self.dtree.K, 1), self.dtree.max_topk),
+                          jnp.int32)
+            return {"mtok": z, "mprob": z.astype(jnp.float32)}
+        mtok, mprob = M.medusa_topk(pp, hidden, self.dtree.max_topk)
+        return {"mtok": mtok.transpose(1, 0, 2),
+                "mprob": mprob.transpose(1, 0, 2)}
+
+    def init_state(self, batch: int, capacity: int):
+        z = jnp.zeros((batch, max(self.dtree.K, 1), self.dtree.max_topk),
+                      jnp.int32)
+        return {"mtok": z, "mprob": z.astype(jnp.float32)}
+
+    def prime(self, pp, state, tokens, lengths, tok_lens, hidden, base,
+              extra_embeds=None):
+        return self._heads(pp, hidden)
+
+    def propose(self, pp, state, base, key, temperature, top_k, top_p,
+                stochastic):
+        cand = V.generate_candidates(base, state["mtok"], self.dtree)
+        return cand, state["mprob"], state
+
+    def observe(self, pp, state, verdict, hidden, lengths):
+        return self._heads(pp, hidden)
+
+
+class DraftModelProposer(Proposer):
+    """Classic two-model chain speculation (Leviathan/Chen 2023) as a
+    proposer: a small draft model autoregressively proposes a γ-token
+    chain; its KV cache and write position are the proposer state.
+
+    The draft runs γ+1 T=1 decode steps per propose (the extra step writes
+    the last proposal's KV row so a full accept leaves no stale slot —
+    caught by the self-draft test), and ``observe`` rolls the draft length
+    back to the target's post-commit length: the accepted prefix stays,
+    rejected rows are dead and get overwritten next round.
+    """
+
+    consumes_key = True
+    q_kind = "logits"
+    supports_prefix = False
+
+    def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
+                 gamma: int = 4):
+        import dataclasses
+
+        from repro.models.api import get_model
+        assert target_cfg.vocab_size == draft_cfg.vocab_size, \
+            "tokenizer alignment"
+        # the draft's own cache is proposer *state*, merged per-slot through
+        # batched admission along state_axes — pool-form (paged) leaves have
+        # no per-slot axis to merge on, and a 2-layer draft cache is too
+        # small to be worth paging, so it stays dense whatever the target
+        # layout (the target cache pages normally)
+        if draft_cfg.paged:
+            draft_cfg = dataclasses.replace(draft_cfg, cache_layout="dense")
+        self.tc, self.dc = target_cfg, draft_cfg
+        self.dm = get_model(draft_cfg)
+        self.gamma = gamma
+        self.tb = chain_tree(gamma)
+        self.dtree = V.device_tree(self.tb)
+
+    def init_state(self, batch: int, capacity: int):
+        from repro.models.api import init_cache
+        return {"cache": init_cache(self.dc, batch, capacity),
+                "len": jnp.zeros((batch,), jnp.int32)}
+
+    def state_axes(self, state):
+        return {"cache": jax.tree.map(lambda _: 1, state["cache"]),
+                "len": 0}
+
+    def prime(self, pp, state, tokens, lengths, tok_lens, hidden, base,
+              extra_embeds=None):
+        _, dcache = self.dm.prefill(pp, self.dc, tokens, lengths,
+                                    state["cache"],
+                                    extra_embeds=extra_embeds)
+        return {"cache": dcache, "len": lengths}
+
+    def propose(self, pp, state, base, key, temperature, top_k, top_p,
+                stochastic):
+        from repro.core.engine import _squeeze_spec
+        chain1 = jnp.ones((1, 1), bool)
+        depth0 = jnp.zeros((1,), jnp.int32)
+        B = base.shape[0]
+        dcache, dlen = state["cache"], state["len"]
+
+        def body(i, c):
+            dcache, dlen, tok, toks, qlog = c
+            hid, dcache = self.dm.decode(pp, self.dc, dcache, tok[:, None],
+                                         dlen, chain1, depth0)
+            dcache = _squeeze_spec(self.dm, self.dc, dcache, dlen)
+            dlen = dlen + 1
+            logits = self.dm.unembed(pp, self.dc, hid[:, 0])
+            if stochastic:
+                nxt = S.sample(jax.random.fold_in(key, i), logits,
+                               temperature, top_k, top_p)
+            else:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            j = jnp.minimum(i, self.gamma - 1)
+            keep = i < self.gamma  # γ+1'th step only writes its KV row
+            toks = jnp.where(keep, toks.at[:, j].set(nxt), toks)
+            qlog = jnp.where(keep,
+                             qlog.at[:, j].set(logits.astype(jnp.float32)),
+                             qlog)
+            return (dcache, dlen, nxt, toks, qlog)
+
+        toks = jnp.zeros((B, self.gamma), jnp.int32)
+        qlog = jnp.zeros((B, self.gamma, self.dc.vocab_size), jnp.float32)
+        dcache, dlen, _, toks, qlog = jax.lax.fori_loop(
+            0, self.gamma + 1, body, (dcache, dlen, base, toks, qlog))
+        cand = V.generate_candidates(base, toks[:, :, None], self.dtree)
+        return cand, qlog, {"cache": dcache, "len": dlen - 1}
+
+    def observe(self, pp, state, verdict, hidden, lengths):
+        # draft wrote γ rows past the old length; the accepted prefix
+        # stays, the rest is dead — roll the draft length back to match
+        # the target's committed length
+        return {"cache": state["cache"], "len": lengths}
+
+
+class NgramProposer(Proposer):
+    """Train-free prompt-lookup decoding (PLD; PAPERS.md related work): the
+    history itself is the draft model.
+
+    State per row is an append-only token history ``hist`` [B, H] whose
+    valid prefix ``hist[:hlen]`` is prompt + every committed token
+    *including* the current base, and ``propose`` matches the history's
+    n-token suffix (n = ``max_n`` .. ``min_n``, longest match wins, most
+    recent occurrence wins) against all earlier windows, proposing the γ
+    tokens that followed the match as a chain.  Rows with no match (or a
+    match whose continuation runs past the history) propose token 0 —
+    garbage proposals cost nothing but their slot in the already-fixed
+    [B, γ+1] step and are rejected by verification.
+
+    Everything is fixed-shape: the n-loop is a static Python unroll, the
+    window scan is O(max_n · H) elementwise compares, and acceptance
+    changes only gather indices — the proposer runs unmodified inside
+    ``lax.while_loop`` and the serving scheduler's jitted step.
+
+    q is a *point mass* (the proposal is deterministic), so under
+    ``accept="sample"`` the engine verifies with ``sample_verify_tree``'s
+    residual-mass rule — accept x with probability r(x) — which is the
+    only acceptance preserving the warped target distribution for
+    deterministic proposals (DESIGN.md §11, §13); the mprob the proposer
+    returns is all-ones and is consumed solely for (trivial) sibling
+    ordering, the chain having one child per node.
+    """
+
+    consumes_key = False
+    q_kind = "mprob"
+    supports_prefix = True
+
+    def __init__(self, cfg: ModelConfig, gamma: int = 4, max_n: int = 3,
+                 min_n: int = 1):
+        if not (1 <= min_n <= max_n):
+            raise ValueError(f"need 1 <= min_n <= max_n, got "
+                             f"({min_n}, {max_n})")
+        self.cfg = cfg
+        self.gamma = gamma
+        self.max_n, self.min_n = max_n, min_n
+        self.tb = chain_tree(gamma)
+        self.dtree = V.device_tree(self.tb)
+
+    def init_state(self, batch: int, capacity: int):
+        return {"hist": jnp.zeros((batch, capacity), jnp.int32),
+                "hlen": jnp.zeros((batch,), jnp.int32)}
+
+    def prime(self, pp, state, tokens, lengths, tok_lens, hidden, base,
+              extra_embeds=None):
+        B, Sp = tokens.shape
+        H = state["hist"].shape[1]
+        hist = jnp.zeros_like(state["hist"])
+        hist = hist.at[:, :Sp].set(tokens.astype(jnp.int32))
+        rows = jnp.arange(B)
+        pos = jnp.clip(tok_lens, 0, H - 1)
+        hist = hist.at[rows, pos].set(base)
+        return {"hist": hist, "hlen": jnp.clip(tok_lens + 1, 0, H)}
+
+    def propose(self, pp, state, base, key, temperature, top_k, top_p,
+                stochastic):
+        hist, hlen = state["hist"], state["hlen"]
+        B, H = hist.shape
+        pos = jnp.arange(H)
+        found = jnp.zeros((B,), bool)
+        cstart = jnp.zeros((B,), jnp.int32)
+        for n in range(self.max_n, self.min_n - 1, -1):  # longest match wins
+            # pattern = the last n valid history tokens (ends at base)
+            pidx = hlen[:, None] - n + jnp.arange(n)[None, :]
+            pat = jnp.take_along_axis(hist, jnp.clip(pidx, 0, H - 1), axis=1)
+            # window s matches iff hist[s:s+n] == pattern; s + n <= hlen-1
+            # excludes the suffix itself and guarantees >= 1 continuation
+            # token (it also kills every window when hlen < n + 1, so the
+            # clipped pattern gather can never fabricate a match)
+            ok = pos[None, :] + n <= hlen[:, None] - 1
+            for k in range(n):
+                sh = jnp.take_along_axis(
+                    hist, jnp.minimum(pos + k, H - 1)[None, :], axis=1)
+                ok = ok & (sh == pat[:, k][:, None])
+            has = jnp.any(ok, axis=1)
+            last = (H - 1) - jnp.argmax(jnp.flip(ok, axis=1), axis=1)
+            take = has & ~found
+            cstart = jnp.where(take, (last + n).astype(jnp.int32), cstart)
+            found = found | take
+        cidx = cstart[:, None] + jnp.arange(self.gamma)[None, :]
+        cont = jnp.take_along_axis(hist, jnp.clip(cidx, 0, H - 1), axis=1)
+        cont = jnp.where(found[:, None] & (cidx < hlen[:, None]), cont, 0)
+        cand = V.generate_candidates(base, cont[:, :, None], self.dtree)
+        q = jnp.ones((B, self.gamma, 1), jnp.float32)  # point mass: §13
+        return cand, q, state
+
+    def observe(self, pp, state, verdict, hidden, lengths):
+        hist, hlen = state["hist"], state["hlen"]
+        B, H = hist.shape
+        K1 = self.dtree.K + 1
+        rows = jnp.arange(B)
+        # tokens new to the history this step: path_tokens[1:acc] (slot 0
+        # is the base, already recorded) then the bonus/resampled
+        # next_token at offset acc-1 — acc tokens total.  Slots >= acc are
+        # garbage but land beyond the claimed prefix, where the next
+        # append overwrites them before they become readable.
+        vec = jnp.pad(verdict.path_tokens[:, 1:], ((0, 0), (0, 1)))
+        vec = vec.at[rows, verdict.acc - 1].set(verdict.next_token)
+        start = jnp.clip(hlen, 0, H - K1)
+
+        def one(h, v, s):
+            return jax.lax.dynamic_update_slice(h, v, (s,))
+
+        hist = jax.vmap(one)(hist, vec.astype(jnp.int32), start)
+        return {"hist": hist, "hlen": jnp.clip(hlen + verdict.acc, 0, H)}
+
+
+def make_proposer(kind: str, cfg: ModelConfig, *, tb=None, draft_cfg=None,
+                  gamma: int = 4, max_n: int = 3, min_n: int = 1) -> Proposer:
+    """Build a proposer by name — the ``--proposer {medusa,draft,ngram}``
+    dispatch point shared by ``build_engine``, the launcher and the
+    benchmarks."""
+    if kind == "medusa":
+        return MedusaProposer(cfg, tb)
+    if kind == "draft":
+        if draft_cfg is None:
+            raise ValueError("proposer='draft' needs draft_cfg")
+        return DraftModelProposer(cfg, draft_cfg, gamma=gamma)
+    if kind == "ngram":
+        return NgramProposer(cfg, gamma=gamma, max_n=max_n, min_n=min_n)
+    raise ValueError(f"unknown proposer {kind!r} "
+                     "(expected medusa | draft | ngram)")

@@ -1,7 +1,8 @@
-"""Serving launcher: continuous-batching Medusa server on a reduced model.
+"""Serving launcher: continuous-batching speculative server on a reduced
+model with a pluggable proposer (DESIGN.md §13).
 
   PYTHONPATH=src python -m repro.launch.serve --arch openpangu-7b \
-      --requests 16 --slots 4 --max-new 24
+      --requests 16 --slots 4 --max-new 24 --proposer ngram
 """
 from __future__ import annotations
 
@@ -14,11 +15,10 @@ import numpy as np
 from repro.configs.base import SamplingParams
 from repro.configs.registry import ALL_ARCHS, get_config
 from repro.core import medusa as M
-from repro.core.engine import SpecEngine
-from repro.core.tree import chain_tree, medusa_63
+from repro.core.engine import build_engine
 from repro.distributed.sharding import split_params
 from repro.models.api import get_model
-from repro.serving.scheduler import MedusaServer
+from repro.serving.scheduler import SpecServer
 
 
 def main():
@@ -28,6 +28,14 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--proposer", default="medusa",
+                    choices=("medusa", "draft", "ngram"),
+                    help="draft policy (DESIGN.md §13): trained Medusa "
+                         "heads, a 2-layer draft-model sibling, or "
+                         "train-free n-gram prompt lookup")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="chain length for the draft/ngram proposers "
+                         "(medusa uses its static tree)")
     ap.add_argument("--admission", default="batched",
                     choices=("batched", "serial"),
                     help="scheduler v2 batched bucketed prefill (default) "
@@ -63,15 +71,23 @@ def main():
                                   page_size=args.page_size)
     model = get_model(cfg)
     params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
-    tb = chain_tree(4) if cfg.spec_mode == "chain" else medusa_63()
-    eng = SpecEngine(cfg, tb, accept=args.accept,
-                     sampling=SamplingParams(temperature=args.temperature,
-                                             top_p=args.top_p))
-    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, tb.K))
+    eng = build_engine(cfg, args.proposer, gamma=args.gamma,
+                       accept=args.accept,
+                       sampling=SamplingParams(temperature=args.temperature,
+                                               top_p=args.top_p))
+    # proposer params: Medusa heads, draft-model weights, or nothing (ngram)
+    if args.proposer == "medusa":
+        pp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg,
+                                           eng.tb.K))
+    elif args.proposer == "draft":
+        pp, _ = split_params(model.init_params(jax.random.PRNGKey(1),
+                                               eng.proposer.dc))
+    else:
+        pp = None
 
-    srv = MedusaServer(eng, params, mp, batch_slots=args.slots,
-                       max_len=args.max_len, admission=args.admission,
-                       prefix_cache=args.prefix_cache)
+    srv = SpecServer(eng, params, pp, batch_slots=args.slots,
+                     max_len=args.max_len, admission=args.admission,
+                     prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = [srv.submit(rng.integers(0, cfg.vocab_size,
@@ -85,9 +101,9 @@ def main():
     toks = sum(len(r.output) for r in done if r.status == "done")
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({iters} scheduler iterations, {toks/dt:.1f} tok/s on CPU)")
-    print(f"admission={args.admission}: {srv.stats['admitted']} slot "
-          f"admissions (incl. retries) in {srv.stats['prefill_calls']} "
-          f"prefill calls")
+    print(f"proposer={args.proposer} admission={args.admission}: "
+          f"{srv.stats['admitted']} slot admissions (incl. retries) in "
+          f"{srv.stats['prefill_calls']} prefill calls")
     if args.cache_layout == "paged":
         print(f"paged: peak {srv.stats['peak_blocks']}/{srv.n_blocks - 1} "
               f"blocks, {srv.stats['deferred']} deferred admissions, "

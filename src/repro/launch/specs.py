@@ -161,16 +161,21 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     csh = _named(profiles.cache_pspecs(cache, cfg, shape, mesh, multi_pod), mesh)
     len_sds, len_sh = _act((B,), ("batch",), mesh, rules)
     base_sds, base_sh = _act((B,), ("batch",), mesh, rules)
+    # proposer state (DESIGN.md §13): the Medusa head top-k pytree, [B]-leading
     mtok_sds, mtok_sh = _act((B, MEDUSA_K, tb.max_topk), ("batch", None, None),
                              mesh, rules)
+    mprob_sds, mprob_sh = _act((B, MEDUSA_K, tb.max_topk),
+                               ("batch", None, None), mesh, rules, jnp.float32)
+    state_sds = {"mtok": mtok_sds, "mprob": mprob_sds}
+    state_sh = {"mtok": mtok_sh, "mprob": mprob_sh}
     key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
     key_sh = NamedSharding(mesh, P())
 
-    def fn(params, mp, cache, lengths, base, mtok, key):
-        return eng.spec_step(params, mp, cache, lengths, base, mtok, key)
+    def fn(params, mp, cache, lengths, base, state, key):
+        return eng.spec_step(params, mp, cache, lengths, base, state, key)
 
-    args = (params, mp, cache, len_sds, base_sds, mtok_sds, key_sds)
-    shardings = (psh, msh, csh, len_sh, base_sh, mtok_sh, key_sh)
+    args = (params, mp, cache, len_sds, base_sds, state_sds, key_sds)
+    shardings = (psh, msh, csh, len_sh, base_sh, state_sh, key_sh)
     return CellSpec(fn, args, shardings, (2,),
                     {"kind": kind, "tree_T": tb.T, "spec_mode": cfg.spec_mode,
                      "optimized": optimized})

@@ -2,6 +2,12 @@
 
 Every family module exposes: init_params, forward_train, init_cache,
 prefill, decode, commit, unembed, stacked_axes_fixup, embed_tokens.
+
+``init_cache`` here is THE layout-aware cache factory: every consumer —
+the engines, the serving scheduler, the benchmarks — builds decode caches
+through it, so layout/dtype policy (dense vs paged, fp vs int8 —
+DESIGN.md §10, §12) lives in exactly one dispatch point and an engine
+never needs family-specific construction code.
 """
 from repro.configs.base import ModelConfig
 from repro.models import encdec, transformer
@@ -9,3 +15,14 @@ from repro.models import encdec, transformer
 
 def get_model(cfg: ModelConfig):
     return encdec if cfg.family == "encdec" else transformer
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, n_blocks=None,
+               dtype=None, abstract: bool = False):
+    """Decode cache for ``batch`` slots of ``max_len`` tokens, honouring
+    ``cfg.cache_dtype`` (int8 adds scale leaves — DESIGN.md §10) and
+    ``cfg.cache_layout`` (``n_blocks`` sizes the paged pool; None means
+    the allocator-free identity table — DESIGN.md §12).  ``abstract``
+    returns ``ShapeDtypeStruct`` leaves for shape planning."""
+    return get_model(cfg).init_cache(cfg, batch, max_len, dtype=dtype,
+                                     abstract=abstract, n_blocks=n_blocks)

@@ -132,8 +132,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
     """
     if cfg.paged:
         raise NotImplementedError(
-            "cache_layout='paged' is not supported for the encdec family "
-            "(DESIGN.md §12); use the dense layout")
+            f"{cfg.name}: cache_layout='paged' is not supported for the "
+            "encdec (whisper-style) family — the cross-attention cache is "
+            "written once per request and read every step, so block-pooling "
+            "it saves nothing, and the self-attn paged write path is "
+            "decoder-only-transformer scoped (DESIGN.md §12).  Use "
+            "cache_layout='dense' (optionally with cache_dtype='int8' for "
+            "the self-attn cache, DESIGN.md §10).")
     dt = jnp.dtype(dtype or cfg.resolved_cache_dtype)
     xdt = jnp.dtype(cfg.dtype)
     nu, hd = cfg.num_layers, cfg.resolved_head_dim

@@ -1,9 +1,16 @@
-"""Serving engine v2: static-slot continuous batching over the Medusa engine.
+"""Serving engine v2: static-slot continuous batching over one ``SpecEngine``.
 
 Static-graph discipline (the paper's core constraint) shapes the design:
 the decode batch is B fixed slots; every decode step runs all B slots with
 per-slot lengths — empty slots carry a dummy row and are masked out of the
 commit (``spec_step(..., active=...)``), never out of tensor shapes.
+
+The scheduler is proposer-generic (DESIGN.md §13): it never looks inside
+the engine's proposer state — head top-k tensors (Medusa), a draft-model
+KV cache, or an n-gram history buffer all thread through admission, the
+jitted step and recovery as one opaque pytree, merged per-leaf along the
+batch axes the proposer declares (``Proposer.state_axes``), exactly like
+the KV cache.  Swapping ``--proposer`` changes zero scheduler code.
 
 Scheduler v2 (DESIGN.md §9) replaces v1's per-request host loops with two
 batched device paths:
@@ -92,6 +99,19 @@ from repro.serving.block_pool import BlockPool, PrefixCache
 NO_EOS = -1  # device-side "no eos configured" sentinel (token ids are >= 0)
 
 
+def _merge_rows(big, small, src, mask, axis: int):
+    """Gather rows ``src`` of ``small`` into ``big`` where ``mask`` along
+    ``axis`` — the scatter-free slot merge (a slot-indexed gather from the
+    small group batch plus a ``where`` on the slot mask, which the SPMD
+    partitioner keeps local, unlike a scatter).  ``axis`` is the leaf's
+    batch axis: 1 for cache leaves ([n_units, B, ...]), proposer-declared
+    per state leaf (DESIGN.md §13)."""
+    rows = jnp.take(small, src, axis=axis).astype(big.dtype)
+    shp = [1] * big.ndim
+    shp[axis] = -1
+    return jnp.where(mask.reshape(shp), rows, big)
+
+
 def cache_bytes_per_slot(cfg, max_len: int) -> int:
     """Attention KV-cache bytes one decode slot pins for its lifetime
     (values + int8 scales; SSM state is O(1) in max_len and excluded).
@@ -105,7 +125,7 @@ def cache_bytes_per_slot(cfg, max_len: int) -> int:
 
 def slots_for_budget(cfg, max_len: int, hbm_bytes: int) -> int:
     """Decode slots a ``hbm_bytes`` cache budget sustains at ``max_len``
-    (DESIGN.md §10) — the sizing knob for ``MedusaServer(batch_slots=...)``
+    (DESIGN.md §10) — the sizing knob for ``SpecServer(batch_slots=...)``
     under the dense layout, where every slot pins its worst case."""
     return int(hbm_bytes // cache_bytes_per_slot(cfg, max_len))
 
@@ -114,7 +134,7 @@ def blocks_for_budget(cfg, hbm_bytes: int) -> int:
     """Physical pool blocks a ``hbm_bytes`` cache budget sustains — the
     pool-based capacity formula of the paged layout (DESIGN.md §12, §10):
     ``hbm / (kv_cache_bytes_per_token() * page_size)``.  The sizing knob
-    for ``MedusaServer(n_blocks=...)``; a request then consumes blocks for
+    for ``SpecServer(n_blocks=...)``; a request then consumes blocks for
     its *own* length (minus any shared prefix) rather than ``max_len``."""
     return int(hbm_bytes // (cfg.kv_cache_bytes_per_token() * cfg.page_size))
 
@@ -170,26 +190,32 @@ def _pow2(n: int) -> int:
     return p
 
 
-class MedusaServer:
-    """Continuous-batching server over one ``SpecEngine``.
+class SpecServer:
+    """Continuous-batching server over one ``SpecEngine`` (any proposer).
 
     Host-owned state: the request ``queue``, per-slot ``Request`` bindings
     (``slots``), retry/deadline policy, numpy mirrors of the per-slot step
     inputs (``_active``/``_eos``/``_maxnew``/``_temp``/``_topp``) and —
     under the paged layout — the block allocator and table mirror.
-    Device-owned state (all [B]-leading, donated through every jitted
-    call): ``cache`` (the engine cache pytree), ``lengths`` [B] int32,
-    ``base`` [B] int32, ``mtok``/``mprob`` [B, K, max_topk], ``n_out`` [B]
-    int32.  The per-step host<->device contract is exactly one ``SlotSync``
-    down and the (dirty) slot metadata up.
+    Device-owned state (donated through every jitted call): ``cache`` (the
+    engine cache pytree), ``lengths`` [B] int32, ``base`` [B] int32,
+    ``pstate`` (the proposer's opaque state pytree — DESIGN.md §13, merged
+    per-leaf along ``Proposer.state_axes``), ``n_out`` [B] int32.  The
+    per-step host<->device contract is exactly one ``SlotSync`` down and
+    the (dirty) slot metadata up.
+
+    ``proposer_params`` are whatever the engine's proposer consumes:
+    Medusa head params, draft-model params, or None for the train-free
+    n-gram proposer.
 
     ``n_blocks`` sizes the paged pool (default: enough for every slot's
     worst case, i.e. dense-equivalent capacity; size from an HBM budget
     with ``blocks_for_budget``).  ``prefix_cache=True`` enables the §12
-    shared-prefix registry (paged layout only, attention-only families).
+    shared-prefix registry (paged layout only, attention-only families,
+    proposers that can be primed from a prompt suffix).
     """
 
-    def __init__(self, engine: SpecEngine, params, medusa_params,
+    def __init__(self, engine: SpecEngine, params, proposer_params,
                  batch_slots: int, max_len: int,
                  prompt_buckets=(32, 128, 512), max_retries: int = 1,
                  admission: str = "batched", n_blocks: Optional[int] = None,
@@ -199,7 +225,7 @@ class MedusaServer:
         self.cfg = engine.cfg
         self.model = engine.model
         self.params = params
-        self.medusa_params = medusa_params
+        self.proposer_params = proposer_params
         self.B = batch_slots
         self.max_len = max_len
         # a bucket wider than the cache cannot be prefilled (the padded
@@ -224,6 +250,11 @@ class MedusaServer:
                              or self.cfg.family == "encdec"):
             raise ValueError("prefix_cache shares KV blocks only; SSM/encdec "
                              "state cannot be reconstructed from them")
+        if prefix_cache and not engine.proposer.supports_prefix:
+            raise ValueError(
+                f"prefix_cache needs a proposer that can be primed from a "
+                f"prompt suffix; {type(engine.proposer).__name__} cannot "
+                "(DESIGN.md §13)")
         self.prefix_enabled = prefix_cache
 
         self.queue: deque[Request] = deque()
@@ -252,15 +283,16 @@ class MedusaServer:
         # after each call, so XLA aliases them instead of holding 2x cache.
         self._admit_jit = jax.jit(
             self._admit_paged_impl if self.paged else self._admit_bucket_impl,
-            donate_argnums=(7, 8, 9, 10, 11, 12))
+            donate_argnums=(7, 8, 9, 10, 11))
         self._prefill_jit = jax.jit(
-            lambda p, mp, t, l, c, key, temp, topp: self.engine.prefill(
-                p, mp, t, l, c, key=key, temperature=temp, top_p=topp))
+            lambda p, pp, t, l, c, key, temp, topp, st: self.engine.prefill(
+                p, pp, t, l, c, key=key, temperature=temp, top_p=topp,
+                state=st))
         self._step_jit = jax.jit(self._serve_step_impl,
-                                 donate_argnums=(2, 3, 4, 5, 6, 7))
+                                 donate_argnums=(2, 3, 4, 5, 6))
         if self.paged:
             self._suffix_jit = jax.jit(self._suffix_impl,
-                                       donate_argnums=(6, 7, 8, 9, 10, 11))
+                                       donate_argnums=(6, 7, 8, 9, 10))
             self._copy_jit = jax.jit(self._copy_blocks_impl,
                                      donate_argnums=(0,))
 
@@ -341,8 +373,8 @@ class MedusaServer:
 
     # ---------------------------------------------------- jitted device code
 
-    def _admit_bucket_impl(self, params, medusa_params, toks, plens, gtemp,
-                           gtopp, key, cache, lengths, base, mtok, mprob,
+    def _admit_bucket_impl(self, params, proposer_params, toks, plens, gtemp,
+                           gtopp, key, cache, lengths, base, pstate,
                            n_out, src, mask):
         """Prefill one bucket group [n, bucket] and merge it into the B-slot
         state in the same compiled call.
@@ -351,40 +383,40 @@ class MedusaServer:
         mask is False); mask [B] bool: slot receives a new request.  The
         merge is a gather from the small group batch + elementwise select —
         the scatter-free formulation ``_update_rows`` uses, which keeps a
-        seq-sharded cache local under SPMD.  gtemp/gtopp [n] are the group
-        rows' sampling params (the base token of a sample-mode engine is
-        drawn per request at its own temperature — DESIGN.md §11).
+        seq-sharded cache local under SPMD; proposer-state leaves merge the
+        same way along their declared batch axes (DESIGN.md §13).
+        gtemp/gtopp [n] are the group rows' sampling params (the base token
+        of a sample-mode engine is drawn per request at its own temperature
+        — DESIGN.md §11).
         """
         n = toks.shape[0]
         cache_n = self.engine.init_cache(n, self.max_len)
-        cache_n, len_n, base_n, mtok_n, mprob_n = self.engine.prefill(
-            params, medusa_params, toks, plens, cache_n,
-            key=key, temperature=gtemp, top_p=gtopp)
+        st_n = self.engine.init_proposer_state(n, self.max_len)
+        cache_n, len_n, base_n, st_n = self.engine.prefill(
+            params, proposer_params, toks, plens, cache_n,
+            key=key, temperature=gtemp, top_p=gtopp, state=st_n)
         srcc = jnp.clip(src, 0, n - 1)
-
-        def merge(big, small):
-            rows = jnp.take(small, srcc, axis=1).astype(big.dtype)
-            m = mask.reshape((1, -1) + (1,) * (big.ndim - 2))
-            return jnp.where(m, rows, big)
-
-        cache = jax.tree.map(merge, cache, cache_n)
+        cache = jax.tree.map(
+            lambda b, s: _merge_rows(b, s, srcc, mask, 1), cache, cache_n)
+        pstate = jax.tree.map(
+            lambda b, s, ax: _merge_rows(b, s, srcc, mask, ax),
+            pstate, st_n, self._sax)
         lengths = jnp.where(mask, len_n[srcc], lengths)
         base = jnp.where(mask, base_n[srcc], base)
-        mtok = jnp.where(mask[:, None, None], mtok_n[srcc], mtok)
-        mprob = jnp.where(mask[:, None, None], mprob_n[srcc], mprob)
         n_out = jnp.where(mask, 0, n_out)
-        return cache, lengths, base, mtok, mprob, n_out
+        return cache, lengths, base, pstate, n_out
 
-    def _admit_paged_impl(self, params, medusa_params, toks, plens, gtemp,
-                          gtopp, key, cache, lengths, base, mtok, mprob,
+    def _admit_paged_impl(self, params, proposer_params, toks, plens, gtemp,
+                          gtopp, key, cache, lengths, base, pstate,
                           n_out, src, mask, gtable):
         """Paged variant of ``_admit_bucket_impl`` (DESIGN.md §12).
 
         Prefill writes land in the *global* pool through ``gtable``
         [n, max_blocks] (the admitted slots' table rows; padding rows are
         all-zero so their writes sink into the trash block), so the cache
-        merge disappears for pool leaves — only per-slot SSM leaves (and
-        the [B]-sized step state) still merge by ``src``/``mask``.
+        merge disappears for pool leaves — only per-slot SSM leaves, the
+        [B]-sized step state and the proposer state still merge by
+        ``src``/``mask``.
         """
         n = toks.shape[0]
         view = {}
@@ -397,15 +429,11 @@ class MedusaServer:
                 view[pos] = {nm: jnp.zeros((x.shape[0], n) + x.shape[2:],
                                            x.dtype) for nm, x in entry.items()}
         view[PAGES_KEY] = {"table": gtable}
-        view, len_n, base_n, mtok_n, mprob_n = self.engine.prefill(
-            params, medusa_params, toks, plens, view,
-            key=key, temperature=gtemp, top_p=gtopp)
+        st_n = self.engine.init_proposer_state(n, self.max_len)
+        view, len_n, base_n, st_n = self.engine.prefill(
+            params, proposer_params, toks, plens, view,
+            key=key, temperature=gtemp, top_p=gtopp, state=st_n)
         srcc = jnp.clip(src, 0, n - 1)
-
-        def merge(big, small):
-            rows = jnp.take(small, srcc, axis=1).astype(big.dtype)
-            m = mask.reshape((1, -1) + (1,) * (big.ndim - 2))
-            return jnp.where(m, rows, big)
 
         new_cache = {}
         for pos, entry in cache.items():
@@ -414,16 +442,19 @@ class MedusaServer:
             elif "k" in entry:
                 new_cache[pos] = view[pos]      # pool updated in place
             else:
-                new_cache[pos] = jax.tree.map(merge, entry, view[pos])
+                new_cache[pos] = jax.tree.map(
+                    lambda b, s: _merge_rows(b, s, srcc, mask, 1),
+                    entry, view[pos])
+        pstate = jax.tree.map(
+            lambda b, s, ax: _merge_rows(b, s, srcc, mask, ax),
+            pstate, st_n, self._sax)
         lengths = jnp.where(mask, len_n[srcc], lengths)
         base = jnp.where(mask, base_n[srcc], base)
-        mtok = jnp.where(mask[:, None, None], mtok_n[srcc], mtok)
-        mprob = jnp.where(mask[:, None, None], mprob_n[srcc], mprob)
         n_out = jnp.where(mask, 0, n_out)
-        return new_cache, lengths, base, mtok, mprob, n_out
+        return new_cache, lengths, base, pstate, n_out
 
-    def _suffix_impl(self, params, medusa_params, stoks, nv, mlen, key,
-                     cache, lengths, base, mtok, mprob, n_out, smask,
+    def _suffix_impl(self, params, proposer_params, stoks, nv, mlen, key,
+                     cache, lengths, base, pstate, n_out, smask,
                      temp, topp):
         """Prefix-cache admission forward (DESIGN.md §12): continue prefill
         from cached prefix rows for the slots in ``smask`` [B] bool.
@@ -444,15 +475,18 @@ class MedusaServer:
         """
         cap = jnp.int32(self.blocks_per_slot * self.page_size)
         lens_in = jnp.where(smask, mlen, cap)
-        cache, lens_new, base_n, mtok_n, mprob_n = self.engine.suffix_prefill(
-            params, medusa_params, cache, lens_in, stoks, nv, smask,
-            key=key, temperature=temp, top_p=topp)
+        st_n = self.engine.init_proposer_state(self.B, self.max_len)
+        cache, lens_new, base_n, st_n = self.engine.suffix_prefill(
+            params, proposer_params, cache, lens_in, stoks, nv, smask,
+            key=key, temperature=temp, top_p=topp, state=st_n)
+        rows = jnp.arange(self.B)
         lengths = jnp.where(smask, lens_new, lengths)
         base = jnp.where(smask, base_n, base)
-        mtok = jnp.where(smask[:, None, None], mtok_n, mtok)
-        mprob = jnp.where(smask[:, None, None], mprob_n, mprob)
+        pstate = jax.tree.map(
+            lambda b, s, ax: _merge_rows(b, s, rows, smask, ax),
+            pstate, st_n, self._sax)
         n_out = jnp.where(smask, 0, n_out)
-        return cache, lengths, base, mtok, mprob, n_out
+        return cache, lengths, base, pstate, n_out
 
     def _copy_blocks_impl(self, cache, src, dst):
         """Copy-on-write device op: pool rows of physical blocks ``src``
@@ -471,8 +505,8 @@ class MedusaServer:
                 new[pos] = entry
         return new
 
-    def _serve_step_impl(self, params, medusa_params, cache, lengths, base,
-                         mtok, mprob, n_out, key, active, eos_id, max_new,
+    def _serve_step_impl(self, params, proposer_params, cache, lengths, base,
+                         pstate, n_out, key, active, eos_id, max_new,
                          temp, topp):
         """One masked speculative step + on-device bookkeeping.
 
@@ -481,9 +515,9 @@ class MedusaServer:
         ``temp``/``topp`` [B] are the per-request sampling params batched as
         per-slot device arrays (consumed by accept="sample" verification).
         """
-        cache, lengths, verdict, mtok, mprob = self.engine.spec_step(
-            params, medusa_params, cache, lengths, base, mtok, key,
-            active=active, mprob=mprob, temperature=temp, top_p=topp)
+        cache, lengths, verdict, pstate = self.engine.spec_step(
+            params, proposer_params, cache, lengths, base, pstate, key,
+            active=active, temperature=temp, top_p=topp)
         K1 = verdict.path_tokens.shape[1]
         pos = jnp.arange(K1)
         within = pos[None, :] < verdict.acc[:, None]
@@ -497,7 +531,7 @@ class MedusaServer:
         n_out = n_out + n_take
         done = active & ((n_out >= max_new) | has_eos)
         sync = SlotSync(n_take, verdict.path_tokens, done)
-        return cache, lengths, verdict.next_token, mtok, mprob, n_out, sync
+        return cache, lengths, verdict.next_token, pstate, n_out, sync
 
     # ------------------------------------------------------------- internals
 
@@ -669,11 +703,11 @@ class MedusaServer:
         smask = np.zeros((self.B,), bool)
         smask[slot_idx] = True
         self._key, sub = jax.random.split(self._key)
-        (self.cache, self.lengths, self.base, self.mtok, self.mprob,
+        (self.cache, self.lengths, self.base, self.pstate,
          self.n_out) = self._suffix_jit(
-            self.params, self.medusa_params, jnp.asarray(stoks),
+            self.params, self.proposer_params, jnp.asarray(stoks),
             jnp.asarray(nv), jnp.asarray(mlen), sub, self.cache,
-            self.lengths, self.base, self.mtok, self.mprob, self.n_out,
+            self.lengths, self.base, self.pstate, self.n_out,
             jnp.asarray(smask), jnp.asarray(self._temp),
             jnp.asarray(self._topp))
         self.stats["prefill_calls"] += 1
@@ -708,12 +742,12 @@ class MedusaServer:
                     gtable[j] = self._table[i]
             self._key, sub = jax.random.split(self._key)
             extra = (jnp.asarray(gtable),) if self.paged else ()
-            (self.cache, self.lengths, self.base, self.mtok, self.mprob,
+            (self.cache, self.lengths, self.base, self.pstate,
              self.n_out) = self._admit_jit(
-                self.params, self.medusa_params, jnp.asarray(toks),
+                self.params, self.proposer_params, jnp.asarray(toks),
                 jnp.asarray(plens), jnp.asarray(gtemp), jnp.asarray(gtopp),
-                sub, self.cache, self.lengths, self.base, self.mtok,
-                self.mprob, self.n_out, jnp.asarray(src), jnp.asarray(mask),
+                sub, self.cache, self.lengths, self.base, self.pstate,
+                self.n_out, jnp.asarray(src), jnp.asarray(mask),
                 *extra)
             self.stats["prefill_calls"] += 1
 
@@ -723,23 +757,27 @@ class MedusaServer:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, : len(req.prompt)] = req.prompt[:bucket]
         cache1 = self.engine.init_cache(1, self.max_len)
+        st1 = self.engine.init_proposer_state(1, self.max_len)
         lengths1 = jnp.asarray([len(req.prompt)], jnp.int32)
         self._key, sub = jax.random.split(self._key)
-        cache1, lengths1, base1, mtok1, mprob1 = self._prefill_jit(
-            self.params, self.medusa_params, jnp.asarray(toks), lengths1,
+        cache1, lengths1, base1, st1 = self._prefill_jit(
+            self.params, self.proposer_params, jnp.asarray(toks), lengths1,
             cache1, sub, jnp.asarray([req.temperature], jnp.float32),
-            jnp.asarray([req.top_p], jnp.float32))
+            jnp.asarray([req.top_p], jnp.float32), st1)
         self.stats["prefill_calls"] += 1
 
-        # scatter the single-row cache into this slot (batch axis = 1)
-        def insert(big, one):
-            idx = (0, slot_idx) + (0,) * (big.ndim - 2)
-            return jax.lax.dynamic_update_slice(big, one.astype(big.dtype), idx)
-        self.cache = jax.tree.map(insert, self.cache, cache1)
+        # scatter the single-row cache/state into this slot along each
+        # leaf's batch axis (cache: 1; proposer state: as declared)
+        def insert(big, one, axis):
+            idx = [0] * big.ndim
+            idx[axis] = slot_idx
+            return jax.lax.dynamic_update_slice(big, one.astype(big.dtype),
+                                                tuple(idx))
+        self.cache = jax.tree.map(lambda b, o: insert(b, o, 1),
+                                  self.cache, cache1)
+        self.pstate = jax.tree.map(insert, self.pstate, st1, self._sax)
         self.lengths = self.lengths.at[slot_idx].set(lengths1[0])
         self.base = self.base.at[slot_idx].set(base1[0])
-        self.mtok = self.mtok.at[slot_idx].set(mtok1[0])
-        self.mprob = self.mprob.at[slot_idx].set(mprob1[0])
         self.n_out = self.n_out.at[slot_idx].set(0)
 
     def _push_table(self):
@@ -767,10 +805,10 @@ class MedusaServer:
                                   jnp.asarray(self._temp),
                                   jnp.asarray(self._topp))
         active, eos, maxnew, temp, topp = self._slotmeta_dev
-        (self.cache, self.lengths, self.base, self.mtok, self.mprob,
+        (self.cache, self.lengths, self.base, self.pstate,
          self.n_out, sync) = self._step_jit(
-            self.params, self.medusa_params, self.cache, self.lengths,
-            self.base, self.mtok, self.mprob, self.n_out, sub, active, eos,
+            self.params, self.proposer_params, self.cache, self.lengths,
+            self.base, self.pstate, self.n_out, sub, active, eos,
             maxnew, temp, topp)
         self.stats["steps"] += 1
         acc = np.asarray(sync.acc)
@@ -840,11 +878,12 @@ class MedusaServer:
         self._slotmeta_dev = None
 
     def _reset_device_state(self):
-        """(Re)create all per-slot device arrays that jitted calls donate,
-        plus — under the paged layout — the host allocator state they
-        mirror (block pool, table mirror, prefix registry): after a
-        recovery the device pool contents are gone, so every host claim
-        about block ownership must be dropped with them."""
+        """(Re)create all per-slot device arrays that jitted calls donate
+        — including the proposer's opaque state pytree — plus, under the
+        paged layout, the host allocator state they mirror (block pool,
+        table mirror, prefix registry): after a recovery the device pool
+        contents are gone, so every host claim about block ownership must
+        be dropped with them."""
         if self.paged:
             self.pool = BlockPool(self.n_blocks)
             self.prefix = (PrefixCache(self.page_size)
@@ -859,9 +898,12 @@ class MedusaServer:
             self.prefix = None
             self.cache = self.engine.init_cache(self.B, self.max_len)
         self.lengths = jnp.ones((self.B,), jnp.int32)
-        K = max(self.engine.dtree.K, 1)
         self.base = jnp.zeros((self.B,), jnp.int32)
-        self.mtok = jnp.zeros((self.B, K, self.engine.dtree.max_topk), jnp.int32)
-        self.mprob = jnp.zeros((self.B, K, self.engine.dtree.max_topk),
-                               jnp.float32)
+        self.pstate = self.engine.init_proposer_state(self.B, self.max_len)
+        self._sax = self.engine.proposer.state_axes(self.pstate)
         self.n_out = jnp.zeros((self.B,), jnp.int32)
+
+
+# Backwards-compatible name from before the pluggable-proposer refactor
+# (DESIGN.md §13): the server was Medusa-only when it was christened.
+MedusaServer = SpecServer

@@ -1,0 +1,94 @@
+"""Regenerate ``tests/golden/proposer_goldens.npz`` — the pre-refactor
+golden token streams for the Medusa and draft-model engines.
+
+The committed file was produced at the commit *before* the
+Proposer/Verifier refactor (PR "Pluggable Proposer/Verifier core"), so
+``tests/test_proposers.py::test_golden_tokens_*`` asserts that the
+refactored engines reproduce the legacy engines token for token across
+{greedy, sample, typical} x {dense, paged} x {fp, int8}.  Rerunning this
+script on a later commit only re-derives the *current* outputs — do that
+solely to extend coverage, never to paper over a divergence.
+
+  PYTHONPATH=src python tests/golden/capture_proposer_goldens.py
+"""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SamplingParams
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.draft_model import DraftSpecEngine
+from repro.core.engine import SpecEngine
+from repro.core.tree import cartesian_tree
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+
+B, SP, NEW = 2, 8, 16
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(1), cfg))
+    tb = cartesian_tree((3, 2))
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(2), cfg, tb.K))
+    mp["w1"] = jax.random.normal(jax.random.PRNGKey(3), mp["w1"].shape,
+                                 mp["w1"].dtype) * 0.1
+    dcfg = dataclasses.replace(cfg, num_layers=2, name="draft")
+    dparams, _ = split_params(model.init_params(jax.random.PRNGKey(4), dcfg))
+
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0,
+                              cfg.vocab_size)
+    lens = jnp.full((B,), SP, jnp.int32)
+    smax = SP + NEW + tb.T + 8
+    key = jax.random.PRNGKey(7)
+    sp = SamplingParams(temperature=0.8)
+    out = {"prompt": np.asarray(toks)}
+
+    def variant(c, suffix):
+        m = get_model(c)
+        # engine-level paged runs use the allocator-free identity table
+        # (n_blocks=None); explicit n_blocks builds the scheduler's zero
+        # tables, whose writes all sink into the trash block
+        cache = lambda: m.init_cache(c, B, smax)
+        g, _, _ = SpecEngine(c, tb).generate(params, mp, toks, lens, cache(),
+                                             NEW, key=key)
+        out[f"medusa_greedy_{suffix}"] = np.asarray(g)
+        s, _, _ = SpecEngine(c, tb, accept="sample", sampling=sp).generate(
+            params, mp, toks, lens, cache(), NEW, key=key)
+        out[f"medusa_sample_{suffix}"] = np.asarray(s)
+        t, _, _ = SpecEngine(c, tb, accept="typical", temperature=0.8
+                             ).generate(params, mp, toks, lens, cache(), NEW,
+                                        key=key)
+        out[f"medusa_typical_{suffix}"] = np.asarray(t)
+        dg = DraftSpecEngine(c, dcfg, gamma=3)
+        o, _, _ = dg.generate(params, dparams, toks, lens, cache(),
+                              get_model(dcfg).init_cache(dcfg, B, smax), NEW,
+                              key=key)
+        out[f"draft_greedy_{suffix}"] = np.asarray(o)
+        ds = DraftSpecEngine(c, dcfg, gamma=3, accept="sample", sampling=sp)
+        o, _, _ = ds.generate(params, dparams, toks, lens, cache(),
+                              get_model(dcfg).init_cache(dcfg, B, smax), NEW,
+                              key=key)
+        out[f"draft_sample_{suffix}"] = np.asarray(o)
+
+    variant(cfg, "dense_fp")
+    variant(dataclasses.replace(cfg, cache_dtype="int8"), "dense_int8")
+    variant(dataclasses.replace(cfg, cache_layout="paged", page_size=8),
+            "paged_fp")
+    variant(dataclasses.replace(cfg, cache_layout="paged", page_size=8,
+                                cache_dtype="int8"), "paged_int8")
+
+    path = pathlib.Path(__file__).parent / "proposer_goldens.npz"
+    np.savez_compressed(path, **out)
+    print(f"wrote {path} ({len(out)} arrays)")
+    for k in sorted(out):
+        print(" ", k, out[k].shape)
+
+
+if __name__ == "__main__":
+    main()

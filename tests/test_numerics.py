@@ -112,13 +112,14 @@ def test_oracle_candidates_fully_accepted():
     lens = jnp.full((B,), SP, jnp.int32)
     # oracle: AR rollout gives the exact future tokens
     ar, _ = ar_generate(cfg, params, toks, lens, m.init_cache(cfg, B, 128), K + 2)
-    cache, lengths, base, _, _ = eng.prefill(params, None, toks, lens,
-                                             m.init_cache(cfg, B, 128))
+    cache, lengths, base, state = eng.prefill(params, None, toks, lens,
+                                              m.init_cache(cfg, B, 128))
     assert int(base[0]) == int(ar[0, 0])
     mtok = np.zeros((B, K, 1), np.int32)
     mtok[0, :, 0] = np.asarray(ar)[0, 1: K + 1]            # perfect heads
-    cache, lengths, verdict, _, _ = eng.spec_step(
-        params, None, cache, lengths, base, jnp.asarray(mtok),
+    state = {"mtok": jnp.asarray(mtok), "mprob": state["mprob"]}
+    cache, lengths, verdict, _ = eng.spec_step(
+        params, None, cache, lengths, base, state,
         jax.random.PRNGKey(2))
     assert int(verdict.acc[0]) == K + 1
     np.testing.assert_array_equal(np.asarray(verdict.path_tokens)[0],
@@ -153,10 +154,12 @@ def test_spec_step_shapes_are_static():
     cache = m.init_cache(cfg, B, 64)
     lengths = jnp.full((B,), 4, jnp.int32)
     base = jnp.zeros((B,), jnp.int32)
-    mtok = jnp.zeros((B, 3, 1), jnp.int32)
+    state = eng.init_proposer_state(B, 64)
     fn = jax.jit(eng.spec_step)
-    fn(params, None, cache, lengths, base, mtok, jax.random.PRNGKey(0))
+    fn(params, None, cache, lengths, base, state, jax.random.PRNGKey(0))
     n0 = fn._cache_size()
     # different runtime values, same shapes: must NOT retrace
-    fn(params, None, cache, lengths + 3, base + 9, mtok + 1, jax.random.PRNGKey(7))
+    state2 = {"mtok": state["mtok"] + 1, "mprob": state["mprob"]}
+    fn(params, None, cache, lengths + 3, base + 9, state2,
+       jax.random.PRNGKey(7))
     assert fn._cache_size() == n0 == 1

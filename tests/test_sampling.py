@@ -332,14 +332,14 @@ def test_accepted_sum_counts_clamped_acc_without_bonus():
     # replay generate()'s loop (same PRNG splits) accumulating the spec
     key = jax.random.PRNGKey(0)
     key, kp = jax.random.split(key)
-    cache, lengths, base, mtok, mprob = eng.prefill(
+    cache, lengths, base, state = eng.prefill(
         params, mp, toks, lens, m.init_cache(cfg, B, SMAX), key=kp)
     n = np.zeros((B,), np.int64)
     expected, steps = 0, 0
     while steps < NEW and (n < NEW).any():
         key, sub = jax.random.split(key)
-        cache, lengths, verdict, mtok, mprob = eng.spec_step(
-            params, mp, cache, lengths, base, mtok, sub, mprob=mprob)
+        cache, lengths, verdict, state = eng.spec_step(
+            params, mp, cache, lengths, base, state, sub)
         base = verdict.next_token
         acc = np.asarray(verdict.acc)
         expected += int(np.minimum(acc, np.maximum(NEW - n, 0)).sum())
