@@ -1,40 +1,74 @@
-"""Serving scheduler benchmark (DESIGN.md §9): v1-style serial admission vs
-scheduler v2 batched bucketed prefill, plus a Poisson arrival-trace replay.
+"""Serving scheduler benchmark (DESIGN.md §9, §14): admission batching plus
+an SLO-grade overload comparison of the §14 scheduler against the PR-5
+worst-case-reserving scheduler.
 
-Two measurements:
+Three measurements:
 
-* **Admission phase** — 16 queued requests admitted into 16 free slots.
-  Serial mode issues one [1, bucket] prefill call plus a host-side cache
-  insert per request; batched mode issues one [n_bucket, bucket] call per
-  prompt bucket with the slot merge fused into the same compiled call.
-  Reported as us per admission round and requests/s; the speedup row is the
-  acceptance gate (>= 1.5x).
-* **Trace replay** — a Poisson arrival trace driven through ``step_once``;
-  reports end-to-end throughput (tok/s) and p50/p99 request latency.
+* **Admission phase** (full mode only) — 16 queued requests admitted into
+  16 free slots.  Serial mode issues one [1, bucket] prefill call plus a
+  host-side cache insert per request; batched mode issues one
+  [n_bucket, bucket] call per prompt bucket with the slot merge fused into
+  the same compiled call.  Reported as us per admission round and
+  requests/s; the speedup row is the acceptance gate (>= 1.5x).
+* **Overload trace replay** — the same seeded Poisson trace
+  (``benchmarks.common.poisson_trace``: bimodal prompt lengths, heavy long
+  tail) is driven through two servers on a deliberately undersized paged
+  pool: the legacy scheduler (whole-prompt prefill + worst-case block
+  reservation) and the §14 scheduler (chunked prefill + optimistic
+  allocation with preemption + adaptive speculation).  Latency is measured
+  in deterministic *virtual time* — a fixed per-iteration cost model (see
+  ``C_*`` below) over the scheduler's own work counters — so the p50/p99
+  and goodput gates are machine-independent and CI-stable, unlike
+  wall-clock on a shared runner.  Gates: the §14 scheduler must improve
+  both p99 latency and goodput on the same trace.
+* **Losslessness** — every request completed by either server (including
+  preempted-and-resumed ones) is asserted token-identical to greedy
+  autoregressive decoding of its prompt.  Speculation, chunking and
+  preemption move work around; they never change tokens.
 
-Everything runs on CPU with a reduced backbone and random weights (admission
-cost does not depend on weight quality).
+Results are also written to ``BENCH_serving.json`` (p50/p99, goodput,
+preemption count) so CI can persist the perf trajectory per PR.
 
-  PYTHONPATH=src python -m benchmarks.bench_serving
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import time
 
 import jax
 import numpy as np
 
+from benchmarks.common import poisson_trace
+from repro.configs.base import SchedulerParams
 from repro.configs.registry import get_config
 from repro.core import medusa as M
-from repro.core.engine import build_engine
+from repro.core.engine import ar_generate, build_engine
 from repro.distributed.sharding import split_params
-from repro.models.api import get_model
-from repro.serving.scheduler import MedusaServer
+from repro.models.api import get_model, init_cache
+from repro.serving.scheduler import MedusaServer, SpecServer
 
 N_QUEUED = 16          # acceptance gate: admission speedup at 16 queued requests
 SLOTS = 16
 MAX_LEN = 256
 PROMPT_SIZES = (5, 9, 17, 3, 30, 7, 12, 4, 21, 40, 60, 90, 33, 110, 14, 26)
+
+# ---- overload scenario (DESIGN.md §14) -----------------------------------
+OV_SLOTS = 4
+OV_MAX_LEN = 512
+OV_PAGE = 32
+OV_BLOCKS = 21         # 1 reserved + 20 usable: ~1.3 long requests worst-case
+OV_MAX_NEW = 48
+OV_GAMMA = 4
+# virtual-time cost model: one unit ~ one full-speculation decode step.
+# Prefill costs are per token (a 64-token chunk ~ one decode step);
+# decode-step cost scales with the verified tree width so adaptive
+# speculation's smaller graphs are genuinely cheaper in model time.
+C_TOK = 1.0 / 64.0
+C_STEP_BASE = 0.55
+C_STEP_TOK = 0.09
+C_FLOOR = 0.02         # host bookkeeping floor per iteration
 
 
 def _stack():
@@ -62,6 +96,141 @@ def _admission_time(srv: MedusaServer, prompts, reps: int = 4) -> float:
             times.append(dt)
         srv.release_all()
     return float(np.median(times))
+
+
+def _virtual_replay(srv: SpecServer, trace):
+    """Drive ``trace`` through ``srv`` on the virtual clock; returns
+    (latencies {rid: vt}, outputs {rid: (prompt, output)}, total_vt).
+
+    Each iteration advances virtual time by the §14 cost model applied to
+    the scheduler's own counters for that iteration: prefill tokens (whole
+    prompts or chunks alike) at ``C_TOK`` each, plus each decode step at a
+    cost growing with the speculation width it actually ran."""
+    vt, it, nxt = 0.0, 0, 0
+    arrival, lat, outs = {}, {}, {}
+    while nxt < len(trace) or srv.busy:
+        while nxt < len(trace) and trace[nxt]["t"] <= vt:
+            r = trace[nxt]
+            rid = srv.submit(r["prompt"], max_new=r["max_new"])
+            arrival[rid] = r["t"]
+            nxt += 1
+        if not srv.busy:
+            vt = max(vt, trace[nxt]["t"])   # idle: jump to the next arrival
+            continue
+        pt0 = srv.stats["prefill_tokens"]
+        gs0 = dict(srv.stats["gamma_steps"])
+        srv.step_once(it=it)
+        it += 1
+        dv = (srv.stats["prefill_tokens"] - pt0) * C_TOK
+        for g, n in srv.stats["gamma_steps"].items():
+            dv += (n - gs0[g]) * (C_STEP_BASE + C_STEP_TOK * (g + 1))
+        vt += max(dv, C_FLOOR)
+        for rid in [r for r in arrival if srv.result(r) is not None]:
+            req = srv.result(rid)
+            assert req.status == "done", (rid, req.status)
+            lat[rid] = vt - arrival.pop(rid)
+            outs[rid] = (req.prompt, np.asarray(req.output, np.int32))
+    return lat, outs, vt
+
+
+def _ar_oracle(cfg, params, cache_len: int):
+    """Greedy AR reference, memoised per prompt; prompts are right-padded
+    to a couple of fixed widths so XLA compiles only two shapes."""
+    memo = {}
+
+    def oracle(prompt: np.ndarray, max_new: int) -> np.ndarray:
+        key = (prompt.tobytes(), max_new)
+        if key not in memo:
+            width = 64 if len(prompt) <= 64 else OV_MAX_LEN
+            toks = np.zeros((1, width), np.int32)
+            toks[0, :len(prompt)] = prompt
+            ar, _ = ar_generate(cfg, params, jax.numpy.asarray(toks),
+                                jax.numpy.full((1,), len(prompt),
+                                               jax.numpy.int32),
+                                init_cache(cfg, 1, cache_len), max_new)
+            memo[key] = np.asarray(ar)[0]
+        return memo[key]
+    return oracle
+
+
+def _overload(smoke: bool):
+    """The §14 overload comparison; returns (rows, json_payload)."""
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    pcfg = dataclasses.replace(cfg, cache_layout="paged", page_size=OV_PAGE)
+    model = get_model(pcfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), pcfg))
+    eng = build_engine(pcfg, "ngram", gamma=OV_GAMMA)
+
+    n_req = 10 if smoke else 24
+    trace = poisson_trace(seed=7, n_req=n_req, rate_hz=0.15,
+                          vocab=pcfg.vocab_size, max_new=OV_MAX_NEW)
+    oracle = _ar_oracle(cfg, params, OV_MAX_LEN + 64)
+
+    modes = {
+        "baseline": SchedulerParams(),
+        "chunked_preemptive": SchedulerParams(chunk_size=64, preemption=True,
+                                              adaptive_gamma=True),
+    }
+    res = {}
+    for name, sp in modes.items():
+        srv = SpecServer(eng, params, None, batch_slots=OV_SLOTS,
+                         max_len=OV_MAX_LEN, n_blocks=OV_BLOCKS,
+                         prefix_cache=(name != "baseline"), sched=sp)
+        lat, outs, total = _virtual_replay(srv, trace)
+        assert len(lat) == n_req, (name, len(lat), n_req)
+        for rid, (prompt, out) in outs.items():
+            ref = oracle(prompt, OV_MAX_NEW)
+            np.testing.assert_array_equal(
+                out, ref[:len(out)],
+                err_msg=f"{name} rid={rid} diverged from greedy AR")
+            assert len(out) == OV_MAX_NEW, (name, rid, len(out))
+        res[name] = {
+            "lat": np.asarray(sorted(lat.values())),
+            "total_vt": total,
+            "tokens": {rid: len(o) for rid, (_, o) in outs.items()},
+            "lat_by_rid": lat,
+            "preemptions": srv.stats["preemptions"],
+            "resumed": srv.stats["resumed"],
+            "deferred": srv.stats["deferred"],
+            "reclaimed_blocks": srv.stats["reclaimed_blocks"],
+            "gamma_steps": {str(g): n
+                            for g, n in srv.stats["gamma_steps"].items()},
+        }
+
+    slo = 1.5 * float(np.percentile(res["baseline"]["lat"], 50))
+    rows, payload = [], {"n_req": n_req, "slo_vt": slo, "smoke": smoke}
+    for name, r in res.items():
+        p50 = float(np.percentile(r["lat"], 50))
+        p99 = float(np.percentile(r["lat"], 99))
+        good = sum(r["tokens"][rid] for rid, l in r["lat_by_rid"].items()
+                   if l <= slo) / r["total_vt"]
+        r.update(p50=p50, p99=p99, goodput=good)
+        rows += [
+            (f"serving/overload/{name}/p50_latency", p50, f"{p50:.2f}vt"),
+            (f"serving/overload/{name}/p99_latency", p99, f"{p99:.2f}vt"),
+            (f"serving/overload/{name}/goodput", good, f"{good:.2f}tok_vt"),
+            (f"serving/overload/{name}/preemptions", float(r["preemptions"]),
+             f'{r["preemptions"]}'),
+        ]
+        payload[name] = {
+            "p50_latency_vt": p50, "p99_latency_vt": p99,
+            "goodput_tok_per_vt": good, "preemptions": r["preemptions"],
+            "resumed": r["resumed"], "deferred": r["deferred"],
+            "reclaimed_blocks": r["reclaimed_blocks"],
+            "gamma_steps": r["gamma_steps"],
+        }
+
+    base, new = res["baseline"], res["chunked_preemptive"]
+    rows.append(("serving/overload/p99_improvement", 0.0,
+                 f'{base["p99"] / max(new["p99"], 1e-9):.2f}x'))
+    # acceptance gates (DESIGN.md §14): same trace, same pool — the §14
+    # scheduler must strictly improve tail latency and SLO goodput
+    assert new["p99"] < base["p99"], \
+        f'overload p99 {new["p99"]:.2f} !< baseline {base["p99"]:.2f}'
+    assert new["goodput"] > base["goodput"], \
+        f'overload goodput {new["goodput"]:.2f} !> baseline ' \
+        f'{base["goodput"]:.2f}'
+    return rows, payload
 
 
 def _replay_trace(srv: MedusaServer, cfg, rng, n_req: int = 24,
@@ -106,40 +275,52 @@ def _replay_trace(srv: MedusaServer, cfg, rng, n_req: int = 24,
     return time.perf_counter() - t0, tokens, lat
 
 
-def run():
-    cfg, model, params, eng, mp = _stack()
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
-               for n in PROMPT_SIZES]
+def run(smoke: bool = False):
+    rows, payload = [], {}
+    if not smoke:
+        cfg, model, params, eng, mp = _stack()
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in PROMPT_SIZES]
 
-    rows = []
-    t_mode = {}
-    for mode in ("serial", "batched"):
-        srv = MedusaServer(eng, params, mp, batch_slots=SLOTS, max_len=MAX_LEN,
-                           admission=mode)
-        t = _admission_time(srv, prompts)
-        t_mode[mode] = t
-        rows.append((f"serving/admit{N_QUEUED}/{mode}", t * 1e6,
-                     f"{N_QUEUED / t:.1f}req_s"))
-    speedup = t_mode["serial"] / t_mode["batched"]
-    rows.append((f"serving/admit{N_QUEUED}/batched_speedup", 0.0,
-                 f"{speedup:.2f}x"))
-    assert speedup >= 1.5, f"admission speedup {speedup:.2f}x < 1.5x gate"
+        t_mode = {}
+        for mode in ("serial", "batched"):
+            srv = MedusaServer(eng, params, mp, batch_slots=SLOTS,
+                               max_len=MAX_LEN, admission=mode)
+            t = _admission_time(srv, prompts)
+            t_mode[mode] = t
+            rows.append((f"serving/admit{N_QUEUED}/{mode}", t * 1e6,
+                         f"{N_QUEUED / t:.1f}req_s"))
+        speedup = t_mode["serial"] / t_mode["batched"]
+        rows.append((f"serving/admit{N_QUEUED}/batched_speedup", 0.0,
+                     f"{speedup:.2f}x"))
+        assert speedup >= 1.5, f"admission speedup {speedup:.2f}x < 1.5x gate"
 
-    srv = MedusaServer(eng, params, mp, batch_slots=8, max_len=MAX_LEN,
-                       admission="batched")
-    total, tokens, lat = _replay_trace(srv, cfg, rng)
-    lat = np.asarray(sorted(lat)) if lat else np.asarray([0.0])
-    rows += [
-        ("serving/trace/throughput", 0.0, f"{tokens / total:.1f}tok_s"),
-        ("serving/trace/p50_latency", float(np.percentile(lat, 50)) * 1e6,
-         f"{np.percentile(lat, 50) * 1e3:.0f}ms"),
-        ("serving/trace/p99_latency", float(np.percentile(lat, 99)) * 1e6,
-         f"{np.percentile(lat, 99) * 1e3:.0f}ms"),
-    ]
+        srv = MedusaServer(eng, params, mp, batch_slots=8, max_len=MAX_LEN,
+                           admission="batched")
+        total, tokens, lat = _replay_trace(srv, cfg, rng)
+        lat = np.asarray(sorted(lat)) if lat else np.asarray([0.0])
+        rows += [
+            ("serving/trace/throughput", 0.0, f"{tokens / total:.1f}tok_s"),
+            ("serving/trace/p50_latency", float(np.percentile(lat, 50)) * 1e6,
+             f"{np.percentile(lat, 50) * 1e3:.0f}ms"),
+            ("serving/trace/p99_latency", float(np.percentile(lat, 99)) * 1e6,
+             f"{np.percentile(lat, 99) * 1e3:.0f}ms"),
+        ]
+
+    ov_rows, ov_payload = _overload(smoke)
+    rows += ov_rows
+    payload["overload"] = ov_payload
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized overload trace only (skips the wall-clock "
+                         "admission phase)")
+    for r in run(smoke=ap.parse_args().smoke):
         print(",".join(map(str, r)))

@@ -58,6 +58,31 @@ def trained_stack(arch: str = "openpangu-7b", lm_steps: int = 150,
     return cfg, model, params, mp, corpus, np.asarray(met["head_acc"])
 
 
+def poisson_trace(seed: int = 0, n_req: int = 24, rate_hz: float = 6.0,
+                  vocab: int = 256, short=(4, 48), long=(200, 440),
+                  long_frac: float = 0.2, max_new: int = 16):
+    """Deterministic seeded request trace: Poisson arrivals with a bimodal
+    prompt-length mixture (mostly short interactive prompts plus a heavy
+    tail of long documents).  Shared by ``bench_serving`` and the overload
+    scheduler tests so both exercise the same arrival process (DESIGN.md
+    §14).  Returns a list of ``{"t", "prompt", "max_new"}`` dicts with
+    ``t`` the absolute arrival time in seconds and ``prompt`` an int32
+    token array."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=n_req)
+    arrivals = np.cumsum(gaps)
+    trace = []
+    for t in arrivals:
+        lo, hi = long if rng.random() < long_frac else short
+        plen = int(rng.integers(lo, hi + 1))
+        trace.append({
+            "t": float(t),
+            "prompt": rng.integers(0, vocab, size=plen).astype(np.int32),
+            "max_new": int(max_new),
+        })
+    return trace
+
+
 def max_marginal_tvd(a, b, vocab: int) -> float:
     """Max over positions of the total-variation distance between the
     empirical token marginals of two [N, L] int sample matrices — the

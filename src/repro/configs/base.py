@@ -34,6 +34,41 @@ class SamplingParams:
 
 
 @dataclass(frozen=True)
+class SchedulerParams:
+    """Serving-scheduler policy knobs (DESIGN.md §14).
+
+    The defaults reproduce the conservative PR-5 scheduler exactly: whole-
+    prompt prefill, worst-case paged block reservation with FIFO deferral,
+    and one fixed speculation topology.  Each knob opts one overload
+    counter-measure in:
+
+    * ``chunk_size`` — split prompts longer than this into chunk-sized
+      pieces prefilled through ``SpecEngine.suffix_prefill`` and
+      interleaved with decode steps, so per-step latency stays bounded by
+      ``B * chunk_size`` whatever the prompt length (0 disables; requires
+      a ``supports_prefix`` proposer and an attention-only family).
+    * ``preemption`` — paged layout only: admission allocates blocks
+      optimistically (prompt + one step of slack, not the worst case),
+      decode grows a slot's table on demand, and pool exhaustion preempts
+      the lowest-priority victim instead of stalling — the victim's blocks
+      are released and it re-admits later via prefix-cache-assisted
+      recompute, token-identical to an uninterrupted run.
+    * ``adaptive_gamma`` — track a per-slot acceptance EMA and select
+      host-side among a small pre-compiled family of step graphs
+      (``gamma_levels`` chain prefixes plus the full topology), shrinking
+      speculation when acceptance is low so wasted verify FLOPs don't eat
+      the decode budget under load.
+    """
+    chunk_size: int = 0            # 0 => whole-prompt prefill (legacy)
+    preemption: bool = False       # optimistic paged alloc + preempt/requeue
+    adaptive_gamma: bool = False   # host-side step-graph family selection
+    gamma_levels: tuple = ()       # () => derived (1, 3, ..., full)
+    accept_ema: float = 0.8        # per-slot acceptance EMA decay
+    adapt_low: float = 0.35        # shrink speculation below this EMA
+    adapt_high: float = 0.7        # grow speculation above this EMA
+
+
+@dataclass(frozen=True)
 class ModelConfig:
     name: str
     family: str                    # dense | moe | ssm | hybrid | encdec | vlm

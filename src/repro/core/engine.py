@@ -36,7 +36,7 @@ from repro.configs.base import ModelConfig, SamplingParams
 from repro.core import sampling as S
 from repro.core import verify as V
 from repro.core.proposers import (MedusaProposer, Proposer, make_proposer)
-from repro.core.tree import TreeBuffers
+from repro.core.tree import TreeBuffers, chain_tree
 from repro.models import api as model_api
 from repro.models.api import get_model
 
@@ -49,6 +49,11 @@ class StepStats(NamedTuple):
                                  # and excluding the final bonus token, so
                                  # accepted_sum / (steps * B) is the
                                  # unbiased mean accepted length
+    accepted_per_slot: Optional[jnp.ndarray] = None
+                                 # [B] int32 — the same clamped per-step acc
+                                 # summed per row; the per-slot acceptance
+                                 # signal adaptive speculation feeds on
+                                 # (DESIGN.md §14)
 
 
 class SpecEngine:
@@ -206,25 +211,50 @@ class SpecEngine:
                                     new_lengths, nv, h_last, base)
         return cache, new_lengths, base, state
 
-    def _verify(self, cand, logits, q, key, temperature, top_k, top_p):
+    def _verify(self, cand, logits, q, key, temperature, top_k, top_p,
+                dtree=None):
         """Acceptance-rule dispatch (DESIGN.md §3, §11): the engine picks
         the verifier from (``accept``, proposer ``q_kind``); everything
-        downstream of it is shape-identical."""
+        downstream of it is shape-identical.  ``dtree`` overrides the
+        engine topology for the adaptive-gamma graph family (DESIGN.md
+        §14) — every verifier is lossless for ANY proposal topology, so
+        switching trees between steps never changes the output stream."""
+        dt = self.dtree if dtree is None else dtree
         if self.accept == "typical":
-            return V.typical_verify(cand, logits, self.dtree, key,
+            return V.typical_verify(cand, logits, dt, key,
                                     temperature=self.temperature)
         if self.accept == "sample":
             if self.proposer.q_kind == "logits":
-                return V.sample_verify_chain(cand, logits, q, self.dtree,
+                return V.sample_verify_chain(cand, logits, q, dt,
                                              key, temperature=temperature,
                                              top_k=top_k, top_p=top_p)
-            return V.sample_verify_tree(cand, logits, q, self.dtree, key,
+            return V.sample_verify_tree(cand, logits, q, dt, key,
                                         temperature=temperature,
                                         top_k=top_k, top_p=top_p)
-        return V.greedy_verify(cand, logits, self.dtree)
+        return V.greedy_verify(cand, logits, dt)
+
+    def step_dtrees(self, levels=()):
+        """The adaptive-speculation graph family (DESIGN.md §14): a small,
+        static list of ``(gamma, DeviceTree)`` step topologies, ascending,
+        always ending with the proposer's full tree.
+
+        Each level is a single-path ``chain_tree`` prefix — the cheapest
+        way to shrink speculation while staying verifiable by every accept
+        mode — and the family is fixed at build time so the serving
+        scheduler compiles one step graph per level and only *selects*
+        host-side (HADES' static-graph-family discipline: adapting depth
+        must not mean recompiling).  ``levels`` lists the chain gammas
+        (default (1, 3), filtered to < the full tree's K)."""
+        K = self.dtree.K
+        fam = []
+        for g in sorted(set(levels or (1, 3))):
+            if 0 < g < K:
+                fam.append((g, V.device_tree(chain_tree(g))))
+        fam.append((K, self.dtree))
+        return fam
 
     def spec_step(self, params, proposer_params, cache, lengths, base, state,
-                  key, active=None, temperature=None, top_p=None):
+                  key, active=None, temperature=None, top_p=None, dtree=None):
         """One static speculative step.
         Returns (cache, lengths, verdict, state').
 
@@ -243,8 +273,15 @@ class SpecEngine:
         step ``key`` feeds verification directly for deterministic
         proposers (the legacy PRNG stream) and is split (propose, verify)
         when the proposer draws its own randomness.
+
+        ``dtree`` (optional) overrides the step topology with a member of
+        ``step_dtrees()`` — the adaptive-gamma graph family (DESIGN.md
+        §14).  The proposer truncates its candidates to the smaller tree
+        (a draft model actually runs fewer draft steps) and verification
+        stays lossless, so the scheduler may pick a different level every
+        step without touching the token stream.
         """
-        dt = self.dtree
+        dt = self.dtree if dtree is None else dtree
         t, k, p = self._sampling_args(temperature, top_p)
         if self.proposer.consumes_key:
             k_prop, k_ver = jax.random.split(key)
@@ -252,14 +289,14 @@ class SpecEngine:
             k_prop = k_ver = key
         cand, q, state = self.proposer.propose(
             proposer_params, state, base, k_prop, t, k, p,
-            stochastic=self.accept == "sample")
+            stochastic=self.accept == "sample", dtree=dt)
         kw = {"deferred": True} if self.deferred else {}
         hidden, spec_cache = self.model.decode(
             params, self.cfg, cache, cand, lengths,
             jnp.asarray(dt.mask), jnp.asarray(dt.depths),
             use_kernel=self.use_kernel, **kw)
         logits = self.model.unembed(params, self.cfg, hidden)         # [B, T, V]
-        verdict = self._verify(cand, logits, q, k_ver, t, k, p)
+        verdict = self._verify(cand, logits, q, k_ver, t, k, p, dtree=dt)
         cache, lengths = self.model.commit(
             self.cfg, spec_cache, lengths, verdict.path_slots, verdict.acc,
             active=active)
@@ -308,7 +345,8 @@ class SpecEngine:
             return (steps < max_steps) & jnp.any(n_out < max_new)
 
         def body(c):
-            cache, lengths, base, state, out, n_out, steps, acc_sum, key = c
+            (cache, lengths, base, state, out, n_out, steps, acc_sum,
+             acc_slot, key) = c
             key, sub = jax.random.split(key)
             cache, lengths, verdict, state = self.spec_step(
                 params, proposer_params, cache, lengths, base, state, sub)
@@ -316,21 +354,24 @@ class SpecEngine:
             # per-step accepted count clamped to the remaining budget: the
             # last step may overshoot max_new, and the bonus token is
             # accounted separately — both would bias mean-accepted-length
-            acc_sum = acc_sum + jnp.sum(
-                jnp.minimum(verdict.acc, jnp.maximum(max_new - n_out, 0)))
+            acc_row = jnp.minimum(verdict.acc, jnp.maximum(max_new - n_out, 0))
+            acc_sum = acc_sum + jnp.sum(acc_row)
+            acc_slot = acc_slot + acc_row
             n_out = n_out + verdict.acc
             return (cache, lengths, verdict.next_token, state, out,
-                    n_out, steps + 1, acc_sum, key)
+                    n_out, steps + 1, acc_sum, acc_slot, key)
 
         n_out = jnp.zeros((B,), jnp.int32)
         carry = (cache, lengths, base, state, out, n_out,
-                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32), key)
-        (cache, lengths, base, state, out, n_out, steps, acc_sum,
+                 jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                 jnp.zeros((B,), jnp.int32), key)
+        (cache, lengths, base, state, out, n_out, steps, acc_sum, acc_slot,
          _) = jax.lax.while_loop(cond, body, carry)
         # final certain token
         out = write_out(out, jnp.broadcast_to(base[:, None], (B, K1)), n_out)
         n_out = n_out + 1
-        stats = StepStats(tokens_out=n_out, steps=steps, accepted_sum=acc_sum)
+        stats = StepStats(tokens_out=n_out, steps=steps, accepted_sum=acc_sum,
+                          accepted_per_slot=acc_slot)
         return out[:, :max_new], jnp.minimum(n_out, max_new), stats
 
 

@@ -96,19 +96,45 @@ class Proposer:
         raise NotImplementedError
 
     def propose(self, pp, state, base, key, temperature, top_k, top_p,
-                stochastic: bool):
+                stochastic: bool, dtree=None):
         """-> (candidates [B, T] int32, q, state').
 
         ``q`` is the draft distribution in ``q_kind`` form; ``stochastic``
         is True under ``accept="sample"`` (a sampling proposer must then
-        *draw* its chain so q matches the proposal distribution)."""
+        *draw* its chain so q matches the proposal distribution).
+
+        ``dtree`` (optional) asks for candidates on a *smaller* topology
+        than the proposer's own — a member of the adaptive-speculation
+        graph family (DESIGN.md §14).  Implementations must honour it as
+        the candidate/verify shape; they may keep producing their full-
+        size signal internally (``generate_candidates`` gathers by the
+        tree's node indices, so an oversized head/history tensor is fine).
+        """
         raise NotImplementedError
 
     def observe(self, pp, state, verdict, hidden, lengths):
         """Fold the verification outcome back into the state: ``hidden``
         [B, d] is the target hidden at the last accepted node, ``lengths``
-        the post-commit cache lengths."""
+        the post-commit cache lengths.  Implementations must size their
+        updates from the ``verdict`` shapes, not ``self.dtree`` — under an
+        adaptive-gamma step the verdict may come from a smaller tree."""
         raise NotImplementedError
+
+    def reset_rows(self, state, keep):
+        """Zero the state rows of slots where ``keep`` [B] bool is False —
+        the preemption state trim (DESIGN.md §14).  A preempted request's
+        slot re-admits some *other* request later; its history buffers /
+        draft cache rows must not leak into the next tenant, and the
+        default (zero along each leaf's declared batch axis) is exactly
+        what ``init_state`` would have produced for those rows."""
+        axes = self.state_axes(state)
+
+        def zero(x, ax):
+            shp = [1] * x.ndim
+            shp[ax] = -1
+            return jnp.where(keep.reshape(shp), x, jnp.zeros_like(x))
+
+        return jax.tree.map(zero, state, axes)
 
 
 class MedusaProposer(Proposer):
@@ -151,8 +177,12 @@ class MedusaProposer(Proposer):
         return self._heads(pp, hidden)
 
     def propose(self, pp, state, base, key, temperature, top_k, top_p,
-                stochastic):
-        cand = V.generate_candidates(base, state["mtok"], self.dtree)
+                stochastic, dtree=None):
+        # a smaller adaptive-gamma tree (DESIGN.md §14) gathers from the
+        # same full-size head tensors: node_head/node_choice index into
+        # [K, max_topk], so no state reshaping is needed to shrink
+        dt = self.dtree if dtree is None else dtree
+        cand = V.generate_candidates(base, state["mtok"], dt)
         return cand, state["mprob"], state
 
     def observe(self, pp, state, verdict, hidden, lengths):
@@ -212,8 +242,13 @@ class DraftModelProposer(Proposer):
         return {"cache": dcache, "len": lengths}
 
     def propose(self, pp, state, base, key, temperature, top_k, top_p,
-                stochastic):
+                stochastic, dtree=None):
         from repro.core.engine import _squeeze_spec
+        # a smaller adaptive-gamma chain (DESIGN.md §14) really runs fewer
+        # draft decode steps — for the draft proposer adapting speculation
+        # saves actual FLOPs, not just verify width
+        dt = self.dtree if dtree is None else dtree
+        gamma = dt.K
         chain1 = jnp.ones((1, 1), bool)
         depth0 = jnp.zeros((1,), jnp.int32)
         B = base.shape[0]
@@ -231,19 +266,19 @@ class DraftModelProposer(Proposer):
                                temperature, top_k, top_p)
             else:
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            j = jnp.minimum(i, self.gamma - 1)
-            keep = i < self.gamma  # γ+1'th step only writes its KV row
+            j = jnp.minimum(i, gamma - 1)
+            keep = i < gamma  # γ+1'th step only writes its KV row
             toks = jnp.where(keep, toks.at[:, j].set(nxt), toks)
             qlog = jnp.where(keep,
                              qlog.at[:, j].set(logits.astype(jnp.float32)),
                              qlog)
             return (dcache, dlen, nxt, toks, qlog)
 
-        toks = jnp.zeros((B, self.gamma), jnp.int32)
-        qlog = jnp.zeros((B, self.gamma, self.dc.vocab_size), jnp.float32)
+        toks = jnp.zeros((B, gamma), jnp.int32)
+        qlog = jnp.zeros((B, gamma, self.dc.vocab_size), jnp.float32)
         dcache, dlen, _, toks, qlog = jax.lax.fori_loop(
-            0, self.gamma + 1, body, (dcache, dlen, base, toks, qlog))
-        cand = V.generate_candidates(base, toks[:, :, None], self.dtree)
+            0, gamma + 1, body, (dcache, dlen, base, toks, qlog))
+        cand = V.generate_candidates(base, toks[:, :, None], dt)
         return cand, qlog, {"cache": dcache, "len": dlen - 1}
 
     def observe(self, pp, state, verdict, hidden, lengths):
@@ -312,7 +347,8 @@ class NgramProposer(Proposer):
         return {"hist": hist, "hlen": jnp.clip(tok_lens + 1, 0, H)}
 
     def propose(self, pp, state, base, key, temperature, top_k, top_p,
-                stochastic):
+                stochastic, dtree=None):
+        dt = self.dtree if dtree is None else dtree
         hist, hlen = state["hist"], state["hlen"]
         B, H = hist.shape
         pos = jnp.arange(H)
@@ -339,14 +375,18 @@ class NgramProposer(Proposer):
         cidx = cstart[:, None] + jnp.arange(self.gamma)[None, :]
         cont = jnp.take_along_axis(hist, jnp.clip(cidx, 0, H - 1), axis=1)
         cont = jnp.where(found[:, None] & (cidx < hlen[:, None]), cont, 0)
-        cand = V.generate_candidates(base, cont[:, :, None], self.dtree)
+        # dt may be a shorter adaptive-gamma chain (DESIGN.md §14): its
+        # node_head indices gather a prefix of the full-gamma continuation
+        cand = V.generate_candidates(base, cont[:, :, None], dt)
         q = jnp.ones((B, self.gamma, 1), jnp.float32)  # point mass: §13
         return cand, q, state
 
     def observe(self, pp, state, verdict, hidden, lengths):
         hist, hlen = state["hist"], state["hlen"]
         B, H = hist.shape
-        K1 = self.dtree.K + 1
+        # sized from the verdict, not self.dtree: an adaptive-gamma step
+        # (DESIGN.md §14) verifies on a shorter chain than the proposer's
+        K1 = verdict.path_tokens.shape[1]
         rows = jnp.arange(B)
         # tokens new to the history this step: path_tokens[1:acc] (slot 0
         # is the base, already recorded) then the bonus/resampled

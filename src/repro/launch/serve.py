@@ -12,7 +12,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs.base import SamplingParams
+from repro.configs.base import SamplingParams, SchedulerParams
 from repro.configs.registry import ALL_ARCHS, get_config
 from repro.core import medusa as M
 from repro.core.engine import build_engine
@@ -53,6 +53,18 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="reuse shared prompt-prefix blocks across requests "
                          "(requires --cache-layout paged; DESIGN.md §12)")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="chunked prefill: admit long prompts in pieces of "
+                         "this many tokens interleaved with decode steps; "
+                         "0 = whole-prompt prefill (DESIGN.md §14)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="optimistic block allocation with preempt-and-"
+                         "requeue on pool exhaustion (requires "
+                         "--cache-layout paged; DESIGN.md §14)")
+    ap.add_argument("--adaptive-gamma", action="store_true",
+                    help="adapt speculation depth per step from the recent "
+                         "acceptance EMA, switching among pre-compiled "
+                         "step graphs (DESIGN.md §14)")
     ap.add_argument("--accept", default="greedy", choices=("greedy", "sample"),
                     help="verification mode: greedy argmax match or lossless "
                          "stochastic rejection sampling (DESIGN.md §11)")
@@ -85,9 +97,12 @@ def main():
     else:
         pp = None
 
+    sched = SchedulerParams(chunk_size=args.chunk_size,
+                            preemption=args.preemption,
+                            adaptive_gamma=args.adaptive_gamma)
     srv = SpecServer(eng, params, pp, batch_slots=args.slots,
                      max_len=args.max_len, admission=args.admission,
-                     prefix_cache=args.prefix_cache)
+                     prefix_cache=args.prefix_cache, sched=sched)
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = [srv.submit(rng.integers(0, cfg.vocab_size,
@@ -109,6 +124,14 @@ def main():
               f"blocks, {srv.stats['deferred']} deferred admissions, "
               f"{srv.stats['cached_tokens']} prompt tokens served from the "
               f"prefix cache ({srv.stats['cow_copies']} CoW copies)")
+    if args.chunk_size or args.preemption or args.adaptive_gamma:
+        gs = ", ".join(f"gamma{g}={n}" for g, n in
+                       sorted(srv.stats["gamma_steps"].items()))
+        print(f"overload (DESIGN.md §14): {srv.stats['chunk_calls']} chunk "
+              f"calls, {srv.stats['preemptions']} preemptions "
+              f"({srv.stats['resumed']} resumed admissions), "
+              f"{srv.stats['reclaimed_blocks']} blocks reclaimed at reap, "
+              f"{srv.stats['grown_blocks']} grown in-place; steps {gs}")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.status} steps={r.steps} "
               f"tokens/step={len(r.output)/max(r.steps,1):.2f}")

@@ -48,6 +48,9 @@ class BlockPool:
         self.ref[TRASH_BLOCK] = 1                       # permanently pinned
         # LIFO free list, low ids first out (test determinism)
         self._free: List[int] = list(range(n_blocks - 1, TRASH_BLOCK, -1))
+        # §14 overload telemetry: how often an alloc found the pool empty —
+        # each one is a deferred admission or a preemption trigger
+        self.exhaustions = 0
 
     @property
     def available(self) -> int:
@@ -62,6 +65,7 @@ class BlockPool:
         allocation is all-or-nothing so a half-admitted request never holds
         blocks)."""
         if n > len(self._free):
+            self.exhaustions += 1
             return None
         out = [self._free.pop() for _ in range(n)]
         self.ref[out] = 1

@@ -79,6 +79,30 @@ un-cached suffix is prefilled (``SpecEngine.suffix_prefill``).  Reaping a
 slot frees its blocks (refcount 0 returns them to the pool) and zeroes its
 table row so the slot's dead writes inside the static step sink into the
 reserved trash block.
+
+Overload countermeasures (DESIGN.md §14), opted in via ``SchedulerParams``:
+
+* **Chunked prefill** (``chunk_size``) — a prompt longer than the chunk
+  runs as successive ``suffix_prefill`` chunks of one fixed [B, chunk]
+  shape, all mid-chunk slots advancing together in ONE jitted call per
+  scheduler iteration, interleaved with the decode step — so admitting a
+  4k-token prompt no longer stalls every decoding slot for a monolithic
+  prefill, and per-iteration latency is bounded by B*chunk + one step.
+* **Optimistic allocation + preemption** (``preemption``, paged only) —
+  admission reserves only ``blocks_for(prompt + T + 2)`` and the decode
+  loop grows each slot's table just ahead of its committed length; on
+  pool exhaustion the *latest-submitted* running request is preempted:
+  blocks freed, proposer-state rows trimmed, request re-queued at the
+  head with its delivered tokens folded into the resume prompt, so the
+  re-admission is a prefix-cache-assisted recompute that is token-
+  identical (temp-0/greedy determinism) to a never-preempted run.
+* **Adaptive speculation** (``adaptive_gamma``) — per-slot acceptance is
+  tracked as an EMA from the raw per-step verifier acceptance
+  (``SlotSync.spec_acc``), and each step the host picks one of a small
+  family of PRE-COMPILED step graphs (``SpecEngine.step_dtrees``: chain
+  prefixes + the full tree), shrinking speculation when acceptance is low
+  — wasted verify FLOPs stop eating decode budget, and no graph is ever
+  (re)compiled after warmup.
 """
 from __future__ import annotations
 
@@ -91,6 +115,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import SchedulerParams
 from repro.core.engine import SpecEngine
 from repro.kernels.paging import blocks_for
 from repro.models.transformer import PAGES_KEY
@@ -160,6 +185,7 @@ class Request:
     output: List[int] = field(default_factory=list)
     steps: int = 0
     retries: int = 0
+    preemptions: int = 0                # times evicted mid-flight (§14)
     status: str = "queued"              # queued|running|done|cancelled|failed
 
 
@@ -181,6 +207,11 @@ class SlotSync(NamedTuple):
     acc: jnp.ndarray        # [B] int32 — tokens to append (EOS/budget-clipped)
     tokens: jnp.ndarray     # [B, K+1] int32 — this step's committed path
     done: jnp.ndarray       # [B] bool — slot finished (EOS hit or budget met)
+    spec_acc: jnp.ndarray   # [B] int32 — RAW verifier acceptance (what
+                            # ``commit`` advanced the cache length by, pre
+                            # EOS/budget clip): feeds the host's committed-
+                            # length mirror and the adaptive-speculation
+                            # acceptance EMA (DESIGN.md §14)
 
 
 def _pow2(n: int) -> int:
@@ -219,7 +250,8 @@ class SpecServer:
                  batch_slots: int, max_len: int,
                  prompt_buckets=(32, 128, 512), max_retries: int = 1,
                  admission: str = "batched", n_blocks: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 sched: Optional[SchedulerParams] = None):
         assert admission in ("batched", "serial"), admission
         self.engine = engine
         self.cfg = engine.cfg
@@ -228,6 +260,7 @@ class SpecServer:
         self.proposer_params = proposer_params
         self.B = batch_slots
         self.max_len = max_len
+        self.sched = sched if sched is not None else SchedulerParams()
         # a bucket wider than the cache cannot be prefilled (the padded
         # [n, bucket] write would overrun [n, max_len] rows) — clamp to
         # max_len so every prompt that fits the cache stays servable;
@@ -257,13 +290,39 @@ class SpecServer:
                 "(DESIGN.md §13)")
         self.prefix_enabled = prefix_cache
 
+        # overload countermeasures (DESIGN.md §14)
+        self.chunk = min(int(self.sched.chunk_size), max_len) \
+            if self.sched.chunk_size else 0
+        if self.chunk and not engine.proposer.supports_prefix:
+            raise ValueError(
+                f"chunked prefill rides the suffix_prefill path; "
+                f"{type(engine.proposer).__name__} cannot be primed from a "
+                "suffix (DESIGN.md §13)")
+        if self.chunk and (self.cfg.num_ssm_layers > 0
+                           or self.cfg.family == "encdec"):
+            raise ValueError(
+                "chunked prefill needs an attention-only family: the "
+                "commit inside suffix_prefill selects SSM state for ALL "
+                "rows, so interleaving chunks with live decode slots would "
+                "corrupt them (DESIGN.md §14)")
+        self.preemption = bool(self.sched.preemption)
+        if self.preemption and not self.paged:
+            raise ValueError("preemption (optimistic block allocation) "
+                             "requires cache_layout='paged' — the dense "
+                             "layout has no pool to exhaust (DESIGN.md §14)")
+        self.adaptive = bool(self.sched.adaptive_gamma)
+
         self.queue: deque[Request] = deque()
         self.slots = [_Slot() for _ in range(self.B)]
         self.done: Dict[int, Request] = {}
         self._rid = 0
-        self.stats = {"prefill_calls": 0, "admitted": 0, "steps": 0,
-                      "deferred": 0, "prefill_tokens": 0, "cached_tokens": 0,
-                      "cow_copies": 0, "peak_blocks": 0}
+
+        # adaptive-speculation graph family (DESIGN.md §14): one jitted
+        # step per level, compiled lazily on first use, selected host-side
+        self._levels = (engine.step_dtrees(self.sched.gamma_levels)
+                        if self.adaptive else [(engine.dtree.K, engine.dtree)])
+        self._level = len(self._levels) - 1   # start at full speculation
+        self.stats = self._fresh_stats()
 
         self._reset_device_state()
         self._key = jax.random.PRNGKey(0)
@@ -276,6 +335,12 @@ class SpecServer:
         self._topp = np.ones((self.B,), np.float32)    # (DESIGN.md §11)
         self._done_now = np.zeros((self.B,), bool)
         self._slotmeta_dev = None   # device copies, refreshed only on mutation
+        # §14 host bookkeeping: committed-cache-length mirror (tracks the
+        # raw SlotSync.spec_acc, which is what commit advanced by), the
+        # per-slot acceptance EMA, and the mid-chunk prefill cursors
+        self._len_host = np.zeros((self.B,), np.int64)
+        self._acc_ema = np.ones((self.B,), np.float64)
+        self._chunk_state: Dict[int, dict] = {}
 
         # one jitted callable each; XLA re-specialises per input shape, so the
         # [n_group, bucket] admission variants share a single cache here.
@@ -290,11 +355,31 @@ class SpecServer:
                 state=st))
         self._step_jit = jax.jit(self._serve_step_impl,
                                  donate_argnums=(2, 3, 4, 5, 6))
-        if self.paged:
+        # per-level step graphs (the full-tree level deliberately does NOT
+        # alias self._step_jit: tests monkeypatch _step_jit to inject
+        # failures, and that must keep working for the default path)
+        self._step_jits = [
+            jax.jit((lambda _dt: lambda *a: self._serve_step_impl(
+                *a, dtree=_dt))(dt), donate_argnums=(2, 3, 4, 5, 6))
+            for _, dt in self._levels]
+        self._trim_jit = jax.jit(
+            lambda st, keep: self.engine.proposer.reset_rows(st, keep),
+            donate_argnums=(0,))
+        if self.paged or self.chunk:
             self._suffix_jit = jax.jit(self._suffix_impl,
                                        donate_argnums=(6, 7, 8, 9, 10))
+        if self.paged:
             self._copy_jit = jax.jit(self._copy_blocks_impl,
                                      donate_argnums=(0,))
+
+    def _fresh_stats(self) -> dict:
+        return {"prefill_calls": 0, "admitted": 0, "steps": 0,
+                "deferred": 0, "prefill_tokens": 0, "cached_tokens": 0,
+                "cow_copies": 0, "peak_blocks": 0,
+                # §14 overload counters
+                "chunk_calls": 0, "preemptions": 0, "resumed": 0,
+                "reclaimed_blocks": 0, "grown_blocks": 0,
+                "gamma_steps": {g: 0 for g, _ in self._levels}}
 
     # ------------------------------------------------------------------ API
 
@@ -330,11 +415,14 @@ class SpecServer:
         Admission sits inside the recovery scope: its jitted call donates the
         slot state too, so a failure there must re-queue and rebuild exactly
         like a failed decode step (requests attach to slots before prefill,
-        so ``_recover`` sees them)."""
+        so ``_recover`` sees them).  So do the chunk advance and the decode
+        step — mid-chunk slots re-queue like any in-flight request
+        (DESIGN.md §14)."""
         try:
             self._admit()
             if fail_hook is not None and fail_hook(it):
                 raise RuntimeError("injected step failure")
+            self._chunk_step()
             self._decode_step()
         except RuntimeError:
             self._recover()
@@ -367,8 +455,30 @@ class SpecServer:
                 self._matched[i] = 0
         if self.paged:
             self._table_dirty = True
+        self._reset_host_slots()
+
+    def reset(self):
+        """Fresh server, warm graphs: drop every queued / in-flight /
+        finished request, zero the stats and rebuild the device state while
+        keeping all compiled step/admission callables — so a test or bench
+        harness can run many independent scenarios on one ``SpecServer``
+        without paying recompilation per scenario."""
+        self.queue.clear()
+        self.done.clear()
+        for slot in self.slots:
+            slot.request = None
+        self.stats = self._fresh_stats()
+        self._level = len(self._levels) - 1
+        self._reset_device_state()
+        self._reset_host_slots()
+
+    def _reset_host_slots(self):
+        """Clear every host per-slot mirror to the no-tenant state."""
         self._active[:] = False
         self._done_now[:] = False
+        self._len_host[:] = 0
+        self._acc_ema[:] = 1.0
+        self._chunk_state.clear()
         self._slotmeta_dev = None
 
     # ---------------------------------------------------- jitted device code
@@ -471,9 +581,13 @@ class SpecServer:
         non-``smask`` slot therefore runs this call at length = capacity —
         its dead writes fall past the table's reach and sink into the
         trash block (kernels/paging.py) — and has its real length restored
-        on return.
+        on return.  Chunked prefill (DESIGN.md §14) reuses this same call
+        under the DENSE layout too, where capacity is ``max_len`` and the
+        out-of-range writes are dropped by ``_update_rows``'s bounds check
+        instead of a trash block.
         """
-        cap = jnp.int32(self.blocks_per_slot * self.page_size)
+        cap = jnp.int32(self.blocks_per_slot * self.page_size
+                        if self.paged else self.max_len)
         lens_in = jnp.where(smask, mlen, cap)
         st_n = self.engine.init_proposer_state(self.B, self.max_len)
         cache, lens_new, base_n, st_n = self.engine.suffix_prefill(
@@ -507,17 +621,20 @@ class SpecServer:
 
     def _serve_step_impl(self, params, proposer_params, cache, lengths, base,
                          pstate, n_out, key, active, eos_id, max_new,
-                         temp, topp):
+                         temp, topp, dtree=None):
         """One masked speculative step + on-device bookkeeping.
 
         EOS detection, budget clipping and the done mask are folded into the
         compiled step so the host only reads the small ``SlotSync`` struct.
         ``temp``/``topp`` [B] are the per-request sampling params batched as
         per-slot device arrays (consumed by accept="sample" verification).
+        ``dtree`` selects a member of the adaptive-speculation graph family
+        (DESIGN.md §14) — each member is its own compiled graph, closed
+        over its topology, so selection is a host-side list index.
         """
         cache, lengths, verdict, pstate = self.engine.spec_step(
             params, proposer_params, cache, lengths, base, pstate, key,
-            active=active, temperature=temp, top_p=topp)
+            active=active, temperature=temp, top_p=topp, dtree=dtree)
         K1 = verdict.path_tokens.shape[1]
         pos = jnp.arange(K1)
         within = pos[None, :] < verdict.acc[:, None]
@@ -530,7 +647,8 @@ class SpecServer:
         n_take = jnp.where(active, n_take, 0)
         n_out = n_out + n_take
         done = active & ((n_out >= max_new) | has_eos)
-        sync = SlotSync(n_take, verdict.path_tokens, done)
+        sync = SlotSync(n_take, verdict.path_tokens, done,
+                        jnp.where(active, verdict.acc, 0))
         return cache, lengths, verdict.next_token, pstate, n_out, sync
 
     # ------------------------------------------------------------- internals
@@ -541,50 +659,80 @@ class SpecServer:
                 return b
         return self.buckets[-1]
 
+    def _effective(self, req: Request):
+        """(effective prompt, remaining max_new) for (re-)admission.
+
+        A preempted request resumes by folding its already-delivered tokens
+        into the prompt (DESIGN.md §14): the re-admission recomputes (or
+        prefix-matches) exactly the sequence the first tenure committed, so
+        at temperature 0 the resumed continuation is token-identical to a
+        never-preempted run."""
+        if req.output:
+            return (np.concatenate([req.prompt,
+                                    np.asarray(req.output, np.int32)]),
+                    req.max_new - len(req.output))
+        return req.prompt, req.max_new
+
     def _admit(self):
         """Admission round (host): drain the queue into free slots.
 
         Dense: the free-slot count is the only resource.  Paged (DESIGN.md
-        §12): each request must also reserve its worst-case block count
-        from the pool — ``_plan_blocks`` returns None on exhaustion and the
-        request is deferred (put back at the queue head, FIFO preserved)
-        until a reap frees blocks.  Prefix-cached requests (a non-empty
-        match) admit via the per-request suffix path; the rest go through
-        the bucketed group prefill, whose writes land directly in the
-        global pool through the group's table rows."""
+        §12): each request must also reserve its block count from the pool
+        — worst case (``prompt + max_new + T + 2`` tokens) by default,
+        optimistic (``prompt + T + 2``, grown on demand by
+        ``_ensure_blocks``) under ``sched.preemption`` (DESIGN.md §14).
+        ``_plan_blocks`` returning None defers the request (queue head,
+        FIFO preserved) until a reap frees blocks.  Prefix-cached requests
+        (a non-empty match) admit via the per-request suffix path; prompts
+        longer than ``sched.chunk_size`` only install their slot here and
+        stream through ``_chunk_step``; the rest go through the bucketed
+        group prefill, whose writes land directly in the global pool
+        through the group's table rows."""
         free = [i for i, s in enumerate(self.slots) if s.free]
         take: List[tuple] = []
         while self.queue and len(take) < len(free):
             req = self.queue.popleft()
+            p_ext, mn = self._effective(req)
             # reject what cannot run losslessly: prompts that don't fit the
-            # cache budget, or exceed the largest prefill bucket (prefill
-            # would silently truncate the prompt but keep the full length)
-            if (len(req.prompt) + req.max_new + self.engine.dtree.T + 2 > self.max_len
-                    or len(req.prompt) > self.buckets[-1]):
+            # cache budget, or (chunking off) exceed the largest prefill
+            # bucket (prefill would silently truncate the prompt but keep
+            # the full length).  Under optimistic allocation also reject a
+            # request whose worst case exceeds the whole pool: admitting it
+            # would guarantee an unservable growth demand later (preempting
+            # everything else could still not fit it).
+            if (len(p_ext) + mn + self.engine.dtree.T + 2 > self.max_len
+                    or (not self.chunk and len(p_ext) > self.buckets[-1])
+                    or (self.paged and self.preemption and
+                        blocks_for(len(p_ext) + mn + self.engine.dtree.T + 2,
+                                   self.page_size) > self.n_blocks - 1)):
                 req.status = "failed"
                 self.done[req.rid] = req
                 continue
-            plan = self._plan_blocks(req) if self.paged else None
+            plan = self._plan_blocks(req, p_ext, mn) if self.paged else None
             if self.paged and plan is None:
                 # pool exhausted: defer — re-queue at the head and stop
                 # admitting so order is preserved; nothing mid-flight is
-                # touched (lossless, no preemption)
+                # touched here (under §14 preemption the *decode* path may
+                # still evict to make room for already-admitted slots)
                 self.queue.appendleft(req)
                 self.stats["deferred"] += 1
                 break
-            take.append((req, plan))
+            take.append((req, plan, p_ext, mn))
         if not take:
             return
-        pairs = [(i, req) for i, (req, _) in zip(free, take)]
+        pairs = []          # (slot, req, p_ext) for this round's prefills
         cows = []
-        for (i, req), (_, plan) in zip(pairs, take):
+        for i, (req, plan, p_ext, mn) in zip(free, take):
             req.status = "running"
             self.slots[i].request = req
-            self._active[i] = True
+            if req.output:
+                self.stats["resumed"] += 1
             self._eos[i] = NO_EOS if req.eos_id is None else req.eos_id
-            self._maxnew[i] = req.max_new
+            self._maxnew[i] = mn
             self._temp[i] = req.temperature
             self._topp[i] = req.top_p
+            self._acc_ema[i] = 1.0
+            matched = 0
             if plan is not None:
                 row = plan["shared"] + plan["fresh"]
                 self._table[i, :] = 0
@@ -592,22 +740,43 @@ class SpecServer:
                 self._table_dirty = True
                 self._slot_alloc[i] = row
                 self._matched[i] = plan["matched"]
+                matched = plan["matched"]
                 if plan["cow"] is not None:
                     cows.append((plan["cow"], plan["fresh"][0]))
+            if self.chunk and len(p_ext) - matched > self.chunk:
+                # chunked prefill (DESIGN.md §14): the slot holds its
+                # request but stays inactive; _chunk_step streams the
+                # prompt through suffix_prefill, one chunk per iteration
+                self._chunk_state[i] = {"toks": p_ext, "pos": matched}
+                self._active[i] = False
+                self._len_host[i] = matched
+            else:
+                self._active[i] = True
+                self._len_host[i] = len(p_ext)
+                pairs.append((i, req, p_ext))
         self._slotmeta_dev = None
-        self.stats["admitted"] += len(pairs)
+        self.stats["admitted"] += len(take)
         if self.paged:
             self._admit_paged(pairs, cows)
         elif self.admission == "serial":
-            for i, req in pairs:
-                self._prefill_one(req, i)
+            for i, req, p_ext in pairs:
+                self._prefill_one(req, i, p_ext)
         else:
             self._admit_batched(pairs)
 
     # ---- paged admission (host side, DESIGN.md §12) -----------------------
 
-    def _plan_blocks(self, req: Request):
+    def _plan_blocks(self, req: Request, p_ext: np.ndarray, mn: int):
         """Reserve blocks for ``req`` (all-or-nothing; None = defer).
+
+        ``p_ext``/``mn`` are the request's effective prompt and remaining
+        budget (``_effective`` — a resumed request's prompt includes its
+        already-delivered tokens).  The default reservation is the worst
+        case (``p_ext + mn + T + 2`` tokens); under ``sched.preemption``
+        it is optimistic — just the prompt plus one step of speculation
+        slack (``p_ext + T + 2``), with ``_ensure_blocks`` growing the
+        slot's table ahead of the committed length every decode step
+        (DESIGN.md §14).
 
         Returns {"shared": [ids], "fresh": [ids], "matched": int,
         "cow": src_block|None}.  ``shared`` blocks hold an already-cached
@@ -624,12 +793,13 @@ class SpecServer:
         as one of this request's own fresh blocks."""
         shared, div_block, div_tokens = [], None, 0
         if self.prefix is not None:
-            shared, div_block, div_tokens = self.prefix.match(req.prompt)
+            shared, div_block, div_tokens = self.prefix.match(p_ext)
         pinned = shared + ([div_block] if div_tokens else [])
         self.pool.share(pinned)
-        total = blocks_for(
-            len(req.prompt) + req.max_new + self.engine.dtree.T + 2,
-            self.page_size)
+        need_tokens = len(p_ext) + self.engine.dtree.T + 2
+        if not self.preemption:
+            need_tokens += mn           # worst-case reservation (§12)
+        total = blocks_for(need_tokens, self.page_size)
         n_fresh = total - len(shared)
         shortfall = n_fresh - self.pool.available
         if shortfall > 0 and self.prefix is not None:
@@ -657,7 +827,10 @@ class SpecServer:
     def _admit_paged(self, pairs, cows):
         """Execute a planned paged admission round: push tables, run CoW
         copies, group-prefill unmatched requests, suffix-prefill matched
-        ones, then register the new prompts in the prefix cache."""
+        ones, then register the new prompts in the prefix cache.  Chunked
+        slots are absent from ``pairs`` — their table rows and CoW copies
+        are installed here, but their prefill streams via ``_chunk_step``
+        (registration happens when the last chunk lands)."""
         self._push_table()
         if cows:
             n = _pow2(len(cows))
@@ -669,30 +842,30 @@ class SpecServer:
                                         jnp.asarray(dst))
             self.pool.free([s for s, _ in cows])   # release the cow pins
             self.stats["cow_copies"] += len(cows)
-        full = [(i, req) for i, req in pairs if self._matched[i] == 0]
-        pref = [(i, req) for i, req in pairs if self._matched[i] > 0]
+        full = [p for p in pairs if self._matched[p[0]] == 0]
+        pref = [p for p in pairs if self._matched[p[0]] > 0]
         if self.admission == "serial":
             for pair in full:
                 self._admit_batched([pair])
         elif full:
             self._admit_batched(full)
-        for i, req in pref:
-            self._admit_suffix_one(i, req, self._matched[i])
-        for i, req in pairs:
-            self.stats["prefill_tokens"] += len(req.prompt) - self._matched[i]
+        for i, req, p_ext in pref:
+            self._admit_suffix_one(i, p_ext, self._matched[i])
+        for i, req, p_ext in pairs:
+            self.stats["prefill_tokens"] += len(p_ext) - self._matched[i]
             self.stats["cached_tokens"] += self._matched[i]
             if self.prefix is not None:
-                self.prefix.register(req.prompt, self._table[i], self.pool)
+                self.prefix.register(p_ext, self._table[i], self.pool)
         self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
                                         self.pool.in_use)
 
-    def _admit_suffix_one(self, slot_idx: int, req: Request, matched: int):
+    def _admit_suffix_one(self, slot_idx: int, p_ext: np.ndarray, matched: int):
         """Admit one prefix-matched request: causal suffix prefill over the
         slot's (already mapped) cached prefix (``SpecEngine.suffix_prefill``
         via ``_suffix_impl``).  One [B, suffix_bucket] call per request —
         prefix admission trades the dense path's group batching for block
         reuse; the prefill-token savings dominate when prefixes are long."""
-        suffix = req.prompt[matched:]
+        suffix = p_ext[matched:]
         bucket = self._bucket(len(suffix))
         stoks = np.zeros((self.B, bucket), np.int32)
         stoks[slot_idx, : len(suffix)] = suffix[:bucket]
@@ -719,8 +892,9 @@ class SpecServer:
         table rows ride along (``gtable`` [n, max_blocks]; padding rows
         all-zero = trash-sinked writes) and the call is the paged variant."""
         groups: Dict[int, list] = {}
-        for i, req in pairs:
-            groups.setdefault(self._bucket(len(req.prompt)), []).append((i, req))
+        for i, req, p_ext in pairs:
+            groups.setdefault(self._bucket(len(p_ext)), []).append(
+                (i, req, p_ext))
         for bucket, grp in groups.items():
             n = _pow2(len(grp))
             toks = np.zeros((n, bucket), np.int32)
@@ -731,9 +905,9 @@ class SpecServer:
             mask = np.zeros((self.B,), bool)
             gtable = (np.zeros((n, self.blocks_per_slot), np.int32)
                       if self.paged else None)
-            for j, (i, req) in enumerate(grp):
-                toks[j, : len(req.prompt)] = req.prompt[:bucket]
-                plens[j] = len(req.prompt)
+            for j, (i, req, p_ext) in enumerate(grp):
+                toks[j, : len(p_ext)] = p_ext[:bucket]
+                plens[j] = len(p_ext)
                 gtemp[j] = req.temperature
                 gtopp[j] = req.top_p
                 src[i] = j
@@ -751,14 +925,16 @@ class SpecServer:
                 *extra)
             self.stats["prefill_calls"] += 1
 
-    def _prefill_one(self, req: Request, slot_idx: int):
+    def _prefill_one(self, req: Request, slot_idx: int,
+                     p_ext: Optional[np.ndarray] = None):
         """v1 serial admission: one [1, bucket] prefill + host-side insert."""
-        bucket = self._bucket(len(req.prompt))
+        p_ext = req.prompt if p_ext is None else p_ext
+        bucket = self._bucket(len(p_ext))
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, : len(req.prompt)] = req.prompt[:bucket]
+        toks[0, : len(p_ext)] = p_ext[:bucket]
         cache1 = self.engine.init_cache(1, self.max_len)
         st1 = self.engine.init_proposer_state(1, self.max_len)
-        lengths1 = jnp.asarray([len(req.prompt)], jnp.int32)
+        lengths1 = jnp.asarray([len(p_ext)], jnp.int32)
         self._key, sub = jax.random.split(self._key)
         cache1, lengths1, base1, st1 = self._prefill_jit(
             self.params, self.proposer_params, jnp.asarray(toks), lengths1,
@@ -788,12 +964,170 @@ class SpecServer:
             self.cache[PAGES_KEY]["table"] = jnp.asarray(self._table)
             self._table_dirty = False
 
+    def _chunk_step(self):
+        """Advance every mid-chunk slot by one ``chunk_size`` piece in a
+        single ``suffix_prefill`` call (DESIGN.md §14).
+
+        All chunking slots share one fixed [B, chunk] call shape — the
+        per-iteration prefill work is bounded by B * chunk whatever the
+        prompt length, and the decode step that follows in the same
+        ``step_once`` keeps every active slot flowing.  A slot whose final
+        chunk lands here becomes active (its base token and primed
+        proposer state come from that last call, exactly like a prefix-
+        cache suffix admission) and, under the paged layout, registers its
+        prompt in the prefix registry."""
+        if not self._chunk_state:
+            return
+        self._push_table()
+        C = self.chunk
+        stoks = np.zeros((self.B, C), np.int32)
+        nv = np.ones((self.B,), np.int32)
+        mlen = np.zeros((self.B,), np.int32)
+        smask = np.zeros((self.B,), bool)
+        finishing = []
+        for i, cs in self._chunk_state.items():
+            toks, pos = cs["toks"], cs["pos"]
+            n = min(C, len(toks) - pos)
+            stoks[i, :n] = toks[pos:pos + n]
+            nv[i] = n
+            mlen[i] = pos
+            smask[i] = True
+            cs["pos"] = pos + n
+            if cs["pos"] >= len(toks):
+                finishing.append(i)
+        self._key, sub = jax.random.split(self._key)
+        (self.cache, self.lengths, self.base, self.pstate,
+         self.n_out) = self._suffix_jit(
+            self.params, self.proposer_params, jnp.asarray(stoks),
+            jnp.asarray(nv), jnp.asarray(mlen), sub, self.cache,
+            self.lengths, self.base, self.pstate, self.n_out,
+            jnp.asarray(smask), jnp.asarray(self._temp),
+            jnp.asarray(self._topp))
+        self.stats["chunk_calls"] += 1
+        self.stats["prefill_calls"] += 1
+        for i, cs in self._chunk_state.items():
+            self._len_host[i] = cs["pos"]
+            self.stats["prefill_tokens"] += int(nv[i])
+        for i in finishing:
+            cs = self._chunk_state.pop(i)
+            self._active[i] = True
+            self._acc_ema[i] = 1.0
+            self._slotmeta_dev = None
+            if self.prefix is not None:
+                self.prefix.register(cs["toks"], self._table[i], self.pool)
+
+    # ---- optimistic allocation + preemption (host side, DESIGN.md §14) ----
+
+    def _ensure_blocks(self):
+        """Grow every active slot's block table to reach ``len + T + 2``
+        rows before the decode step writes there (optimistic allocation's
+        counterpart to §12's worst-case reserve).
+
+        On pool exhaustion: evict registry-only prefix blocks first, then
+        preempt the latest-submitted running request and retry — possibly
+        preempting the very slot being grown (admission guarantees any
+        admitted request fits an otherwise-empty pool, so the loop always
+        terminates)."""
+        T2 = self.engine.dtree.T + 2
+        for i in range(self.B):
+            if not self._active[i]:
+                continue
+            need = blocks_for(int(self._len_host[i]) + T2, self.page_size)
+            have = len(self._slot_alloc.get(i, []))
+            while need > have:
+                short = need - have
+                if short > self.pool.available and self.prefix is not None:
+                    self.prefix.evict(self.pool, short - self.pool.available)
+                fresh = self.pool.alloc(short)
+                if fresh is None:
+                    if not self._preempt_lowest():
+                        raise RuntimeError(
+                            "block pool exhausted with no preemptible "
+                            "victim (DESIGN.md §14)")
+                    if not self._active[i]:
+                        break              # this very slot was the victim
+                    continue
+                row = self._slot_alloc[i]
+                self._table[i, have:need] = fresh
+                row.extend(fresh)
+                self._table_dirty = True
+                self.stats["grown_blocks"] += len(fresh)
+                have = need
+        self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                        self.pool.in_use)
+
+    def _preempt_lowest(self) -> bool:
+        """Preempt the lowest-priority preemptible tenant (priority =
+        submission order, so the latest rid goes first).  False if no
+        tenant can be preempted."""
+        cand = sorted((i for i, s in enumerate(self.slots)
+                       if s.request is not None),
+                      key=lambda i: self.slots[i].request.rid, reverse=True)
+        for i in cand:
+            if self._preempt(i):
+                return True
+        return False
+
+    def _preempt(self, i: int) -> bool:
+        """Preempt-and-requeue slot ``i`` (DESIGN.md §14): release its
+        blocks (prefix-registered ones survive in the registry for the
+        resume to match), trim its proposer-state rows, and put the
+        request back at the queue head with its delivered tokens folded
+        into the resume prompt (``_effective``).  Returns False when the
+        request could not be resumed losslessly (its extended prompt no
+        longer fits a prefill bucket and chunking is off)."""
+        req = self.slots[i].request
+        if req is None:
+            return False
+        if not self.chunk and \
+                len(req.prompt) + len(req.output) > self.buckets[-1]:
+            return False
+        req.preemptions += 1
+        req.status = "queued"
+        self.queue.appendleft(req)
+        self.slots[i].request = None
+        self._active[i] = False
+        self._done_now[i] = False
+        self._chunk_state.pop(i, None)
+        self._len_host[i] = 0
+        self._slotmeta_dev = None
+        if self.paged:
+            self.pool.free(self._slot_alloc.pop(i, []))
+            self._table[i, :] = 0
+            self._matched[i] = 0
+            self._table_dirty = True
+        keep = np.ones((self.B,), bool)
+        keep[i] = False
+        self.pstate = self._trim_jit(self.pstate, jnp.asarray(keep))
+        self.stats["preemptions"] += 1
+        return True
+
+    def _pick_level(self):
+        """Select this step's speculation level (DESIGN.md §14): move one
+        level at a time on the active slots' mean acceptance EMA, with
+        ``adapt_low``/``adapt_high`` hysteresis so the level doesn't
+        thrash between adjacent graphs."""
+        if not self.adaptive or not self._active.any():
+            return
+        mean = float(self._acc_ema[self._active].mean())
+        if mean < self.sched.adapt_low and self._level > 0:
+            self._level -= 1
+        elif mean > self.sched.adapt_high and \
+                self._level < len(self._levels) - 1:
+            self._level += 1
+
     def _decode_step(self):
         """One jitted serving step (device) + the SlotSync host apply.
 
-        Syncs exactly three [B]-sized arrays back (``SlotSync``); the
-        per-slot metadata device copies refresh only when host bookkeeping
-        changed them (``_slotmeta_dev`` / the paged block table)."""
+        Syncs exactly one small ``SlotSync`` struct back; the per-slot
+        metadata device copies refresh only when host bookkeeping changed
+        them (``_slotmeta_dev`` / the paged block table).  Mid-chunk slots
+        (inactive, request attached) are skipped by the masked commit and
+        by the host apply.  Under §14 the step may run a smaller graph
+        from the adaptive family, and ``_ensure_blocks`` grows optimistic
+        allocations (possibly preempting) before any write happens."""
+        if self.paged and self.preemption:
+            self._ensure_blocks()
         if not self._active.any():
             return
         self._push_table()
@@ -805,18 +1139,32 @@ class SpecServer:
                                   jnp.asarray(self._temp),
                                   jnp.asarray(self._topp))
         active, eos, maxnew, temp, topp = self._slotmeta_dev
+        self._pick_level()
+        gamma, _ = self._levels[self._level]
+        step_fn = (self._step_jits[self._level] if self.adaptive
+                   else self._step_jit)
         (self.cache, self.lengths, self.base, self.pstate,
-         self.n_out, sync) = self._step_jit(
+         self.n_out, sync) = step_fn(
             self.params, self.proposer_params, self.cache, self.lengths,
             self.base, self.pstate, self.n_out, sub, active, eos,
             maxnew, temp, topp)
         self.stats["steps"] += 1
+        self.stats["gamma_steps"][gamma] += 1
         acc = np.asarray(sync.acc)
         toks = np.asarray(sync.tokens)
+        spec_acc = np.asarray(sync.spec_acc)
         self._done_now = np.array(sync.done)   # copy: host-mutated at reap
+        # committed-length mirror + acceptance EMA (§14): spec_acc is the
+        # raw verifier acceptance = exactly what commit advanced by
+        self._len_host[self._active] += spec_acc[self._active]
+        d = self.sched.accept_ema
+        ratio = (spec_acc - 1.0) / max(gamma, 1)
+        self._acc_ema[self._active] = (
+            d * self._acc_ema[self._active]
+            + (1.0 - d) * ratio[self._active])
         for i, slot in enumerate(self.slots):
             req = slot.request
-            if req is None:
+            if req is None or not self._active[i]:
                 continue
             req.steps += 1
             req.output.extend(int(t) for t in toks[i, : acc[i]])
@@ -849,14 +1197,30 @@ class SpecServer:
                 # survive) and zero the table row so the freed slot's dead
                 # writes inside the static step sink into the trash block
                 for i in freed:
-                    self.pool.free(self._slot_alloc.pop(i, []))
+                    alloc = self._slot_alloc.pop(i, [])
+                    # §14 reclaimed-block accounting: under worst-case
+                    # reservation an early EOS strands the tail of the
+                    # up-front reserve — surface how many blocks the
+                    # request reserved but never wrote
+                    used = blocks_for(int(self._len_host[i]), self.page_size)
+                    self.stats["reclaimed_blocks"] += max(0,
+                                                          len(alloc) - used)
+                    self.pool.free(alloc)
                     self._table[i, :] = 0
                     self._matched[i] = 0
                 self._table_dirty = True
+            for i in freed:
+                # a straggler-cancelled request may still be mid-chunk
+                self._chunk_state.pop(i, None)
+                self._len_host[i] = 0
+                self._acc_ema[i] = 1.0
 
     def _recover(self):
         """Node-failure recovery: re-queue all in-flight work (their caches
-        are lost), reset device state."""
+        are lost), reset device state.  Mid-chunk slots re-queue like any
+        other in-flight request — their chunk cursors die with the cache
+        (DESIGN.md §14), and delivered-output state is cleared so the
+        retry is a plain from-scratch admission, not a resume."""
         for slot in self.slots:
             if slot.request is not None:
                 req = slot.request
@@ -873,9 +1237,8 @@ class SpecServer:
         # rebuild EVERY donated device array: a failure raised after the
         # jitted step dispatched has already invalidated the old buffers
         self._reset_device_state()
-        self._active[:] = False
-        self._done_now[:] = False
-        self._slotmeta_dev = None
+        self._reset_host_slots()
+        self._level = len(self._levels) - 1
 
     def _reset_device_state(self):
         """(Re)create all per-slot device arrays that jitted calls donate

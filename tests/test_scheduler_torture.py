@@ -1,0 +1,152 @@
+"""Scheduler torture tests (DESIGN.md §14): random interleavings of
+submit / step / forced-preempt sequences across the proposer × layout
+matrix, with every completed request asserted token-identical to greedy
+AR decoding of its prompt.
+
+Property testing rides ``tests/_hypothesis_stub.py``: real hypothesis when
+installed, a deterministic seeded sampler otherwise — either way the same
+op sequences replay against every (proposer, layout) combination, so a
+schedule that breaks only one cache layout or proposer still fails the
+suite.  Servers are built once per combination and ``reset()`` between
+examples: compiled step/admission graphs stay warm, which is what makes
+dozens of random schedules affordable in tier-1 CI."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from benchmarks.common import poisson_trace
+from repro.configs.base import SchedulerParams
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.engine import ar_generate, build_engine
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+from repro.serving.scheduler import SpecServer
+
+MAX_LEN = 128
+MAX_NEW = 6
+N_PROMPTS = 8
+COMBOS = (("medusa", "dense"), ("medusa", "paged"),
+          ("ngram", "dense"), ("ngram", "paged"))
+
+_state: dict = {}
+
+
+def _stack():
+    """Module-cached weights, prompts, servers (one per combo) and the AR
+    oracle — everything torture examples share."""
+    if _state:
+        return _state
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(n)).astype(np.int32)
+               for n in rng.integers(3, 41, size=N_PROMPTS)]
+
+    servers = {}
+    for prop, layout in COMBOS:
+        c = (cfg if layout == "dense" else
+             dataclasses.replace(cfg, cache_layout="paged", page_size=8))
+        eng = build_engine(c, prop)
+        pp = None
+        if prop == "medusa":
+            pp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), c,
+                                               eng.tb.K))
+        paged = layout == "paged"
+        # paged pools are deliberately tight — big enough for any single
+        # request's worst case (medusa's 64-node tree needs 14 blocks at
+        # the 40-token prompt cap) but not for two, so random schedules
+        # hit organic pool-exhaustion preemptions on top of the forced
+        # ones
+        servers[(prop, layout)] = SpecServer(
+            eng, params, pp, batch_slots=2, max_len=MAX_LEN,
+            n_blocks=(17 if prop == "medusa" else 11) if paged else None,
+            sched=SchedulerParams(chunk_size=16, adaptive_gamma=True,
+                                  preemption=paged))
+
+    oracle_memo = {}
+
+    def oracle(p: np.ndarray):
+        key = p.tobytes()
+        if key not in oracle_memo:
+            ar, _ = ar_generate(cfg, params, jnp.asarray(p)[None],
+                                jnp.asarray([len(p)], jnp.int32),
+                                model.init_cache(cfg, 1, MAX_LEN), MAX_NEW)
+            oracle_memo[key] = np.asarray(ar)[0].tolist()
+        return oracle_memo[key]
+
+    _state.update(prompts=prompts, servers=servers, oracle=oracle)
+    return _state
+
+
+def _torture(srv: SpecServer, prompts, oracle, ops):
+    """Replay one op sequence and check every completion against AR."""
+    srv.reset()
+    submitted = {}
+    for code, arg in ops:
+        if code == 0:                       # submit one of the pooled prompts
+            p = prompts[arg % N_PROMPTS]
+            # generous step budget: repeated preemption legitimately costs
+            # extra steps, which must not trip the straggler reaper
+            submitted[srv.submit(p, max_new=MAX_NEW, max_steps=200)] = p
+        elif code == 1:                     # run 1-3 scheduler iterations
+            for it in range(1 + arg % 3):
+                srv.step_once(it=it)
+        else:                               # force-preempt an occupied slot
+            srv._preempt(arg % srv.B)
+    srv.run(max_iters=500)
+    assert not srv.busy
+    for rid, p in submitted.items():
+        req = srv.result(rid)
+        assert req.status == "done", (rid, req.status)
+        assert req.output == oracle(p), \
+            f"rid={rid} diverged from AR (preemptions={req.preemptions})"
+    if srv.paged:
+        assert srv.pool.in_use == 0         # every block returned
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7)),
+                min_size=1, max_size=10))
+def test_random_interleavings_lossless(ops):
+    """Any submit/step/preempt schedule leaves every completed request
+    token-identical to AR, for every proposer × layout combination."""
+    s = _stack()
+    for combo in COMBOS:
+        _torture(s["servers"][combo], s["prompts"], s["oracle"], ops)
+
+
+def test_poisson_trace_replay_lossless():
+    """The shared arrival-trace generator (``benchmarks.common.
+    poisson_trace`` — the same process ``bench_serving`` replays under
+    overload) is deterministic per seed, and replaying its arrival order
+    through the chunked + preemptive paged server leaves every request
+    token-identical to AR."""
+    s = _stack()
+    kw = dict(seed=3, n_req=6, rate_hz=5.0, vocab=256,
+              short=(3, 30), long=(40, 60), long_frac=0.3, max_new=MAX_NEW)
+    trace = poisson_trace(**kw)
+    again = poisson_trace(**kw)
+    assert all(a["t"] == b["t"] and np.array_equal(a["prompt"], b["prompt"])
+               for a, b in zip(trace, again))
+
+    srv = s["servers"][("ngram", "paged")]
+    srv.reset()
+    rids = {}
+    for r in sorted(trace, key=lambda x: x["t"]):
+        rids[srv.submit(r["prompt"], max_new=r["max_new"],
+                        max_steps=200)] = r["prompt"]
+        srv.step_once(it=len(rids))     # arrivals interleave with decode
+    srv.run(max_iters=500)
+    assert not srv.busy
+    for rid, p in rids.items():
+        req = srv.result(rid)
+        assert req.status == "done", (rid, req.status)
+        assert req.output == s["oracle"](p)
+    assert srv.pool.in_use == 0

@@ -1,16 +1,52 @@
 """Serving scheduler: continuous batching correctness, straggler
-cancellation, node-failure recovery (at-least-once)."""
+cancellation, node-failure recovery (at-least-once), and the §14 overload
+machinery — chunked prefill, optimistic allocation with preemption,
+adaptive speculation — including fault injection at its new seams."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs.base import SchedulerParams
 from repro.configs.registry import get_config
 from repro.core import medusa as M
-from repro.core.engine import SpecEngine, ar_generate
+from repro.core.engine import SpecEngine, ar_generate, build_engine
 from repro.distributed.sharding import split_params
 from repro.models.api import get_model
-from repro.serving.scheduler import MedusaServer
+from repro.serving.scheduler import MedusaServer, SpecServer
+
+
+class FailingEngine:
+    """Fault injector for the scheduler's jitted seams: wraps one callable
+    attribute of ``obj`` so it runs the real (donating) call first and THEN
+    raises — modelling a device fault surfacing after the buffers are gone
+    (DESIGN.md §14).  ``should_fail(n_calls, srv, args)`` arms the single
+    shot."""
+
+    def __init__(self, obj, attr, srv, should_fail):
+        self.real = getattr(obj, attr)
+        self.srv = srv
+        self.should_fail = should_fail
+        self.calls = 0
+        self.fired = False
+        setattr(obj, attr, self)
+
+    def __call__(self, *args):
+        out = self.real(*args)
+        self.calls += 1
+        if not self.fired and self.should_fail(self.calls, self.srv, args):
+            self.fired = True
+            raise RuntimeError("injected device failure")
+        return out
+
+
+def _ar(cfg, m, params, p, n, max_len=256):
+    ar, _ = ar_generate(cfg, params, jnp.asarray(p)[None],
+                        jnp.asarray([len(p)], jnp.int32),
+                        m.init_cache(cfg, 1, max_len), n)
+    return np.asarray(ar)[0].tolist()
 
 
 @pytest.fixture(scope="module")
@@ -237,3 +273,199 @@ def test_bucket_wider_than_cache_clamped(served, rng):
     srv.run()
     assert srv.result(big).status == "done" and len(srv.result(big).output) == 8
     assert srv.result(ok).status == "done" and len(srv.result(ok).output) == 4
+
+
+# ---------------- §14: chunked prefill / preemption / adaptive gamma ----------
+
+
+@pytest.fixture(scope="module")
+def ngram_paged(served):
+    """An n-gram paged stack sharing the module's weights: the §14
+    preemption scenario (tight pool, page_size 8, max_len 64)."""
+    cfg, m, params, eng, mp = served
+    pcfg = dataclasses.replace(cfg, cache_layout="paged", page_size=8)
+    peng = build_engine(pcfg, "ngram", gamma=4)
+    return pcfg, get_model(pcfg), params, peng
+
+
+def test_chunked_prefill_matches_ar(served, rng):
+    """Chunked admission (chunk_size < prompt) is token-identical to AR and
+    to whole-prompt prefill for every request."""
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256,
+                       sched=SchedulerParams(chunk_size=16))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (100, 6, 37, 120)]
+    rids = [srv.submit(p, max_new=8) for p in prompts]
+    srv.run()
+    assert srv.stats["chunk_calls"] > 0
+    for rid, p in zip(rids, prompts):
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 8
+        assert req.output == _ar(cfg, m, params, p, 8)
+
+
+def test_chunked_prefill_interleaves_decode(served, rng):
+    """While a long prompt is being chunked in, an already-admitted request
+    keeps committing tokens — chunking bounds per-iteration prefill work
+    instead of stalling the batch (DESIGN.md §14)."""
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256,
+                       sched=SchedulerParams(chunk_size=16))
+    short = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    long = rng.integers(0, cfg.vocab_size, size=120).astype(np.int32)
+    rid_s = srv.submit(short, max_new=16)
+    srv.step_once(it=0)                       # short admitted, decoding
+    rid_l = srv.submit(long, max_new=8)
+    overlapped, it = 0, 1
+    while srv.busy and it < 100:
+        steps0 = srv.stats["steps"]
+        srv.step_once(it=it)
+        if srv._chunk_state and srv.stats["steps"] > steps0:
+            overlapped += 1                   # a chunk advanced AND a
+        it += 1                               # decode step committed
+    assert overlapped >= 2
+    assert srv.result(rid_s).output == _ar(cfg, m, params, short, 16)
+    assert srv.result(rid_l).output == _ar(cfg, m, params, long, 8)
+
+
+def test_adaptive_gamma_matches_ar(served, rng):
+    """Adaptive speculation on random prompts (near-zero head acceptance)
+    shrinks to smaller step graphs and stays token-identical to AR."""
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256,
+                       sched=SchedulerParams(adaptive_gamma=True))
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (9, 21, 5)]
+    rids = [srv.submit(p, max_new=20) for p in prompts]
+    srv.run()
+    used = {g: n for g, n in srv.stats["gamma_steps"].items() if n}
+    assert len(used) >= 2, used      # actually switched levels
+    assert min(used) < eng.dtree.K   # ... down to a smaller graph
+    for rid, p in zip(rids, prompts):
+        assert srv.result(rid).output == _ar(cfg, m, params, p, 20)
+
+
+def test_preemption_resume_matches_ar(ngram_paged, served, rng):
+    """Optimistic allocation on a pool too small for both requests' worst
+    case: the later request is preempted mid-decode, requeued, resumed,
+    and every output is still token-identical to AR (and to a run that was
+    never preempted)."""
+    pcfg, pm, params, peng = ngram_paged
+    cfg, m, _, _, _ = served
+    prompts = [rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+               for _ in range(2)]
+    roomy = SpecServer(peng, params, None, batch_slots=2, max_len=64,
+                       sched=SchedulerParams(preemption=True))
+    tight = SpecServer(peng, params, None, batch_slots=2, max_len=64,
+                       n_blocks=9, sched=SchedulerParams(preemption=True))
+    outs = {}
+    for name, srv in (("roomy", roomy), ("tight", tight)):
+        rids = [srv.submit(p, max_new=24) for p in prompts]
+        srv.run()
+        outs[name] = [srv.result(r).output for r in rids]
+        for rid, p in zip(rids, prompts):
+            req = srv.result(rid)
+            assert req.status == "done" and len(req.output) == 24
+            assert req.output == _ar(cfg, m, params, p, 24)
+    assert tight.stats["preemptions"] >= 1
+    assert tight.stats["resumed"] >= 1
+    assert max(tight.result(r).preemptions for r in tight.done) >= 1
+    # preempted-then-resumed == never-preempted, token for token
+    assert outs["tight"] == outs["roomy"]
+
+
+def test_preemption_without_victim_fails_cleanly(ngram_paged, rng):
+    """A single tenant that outgrows the whole pool cannot preempt itself
+    into progress: admission rejects it up front (worst case > pool)."""
+    pcfg, pm, params, peng = ngram_paged
+    srv = SpecServer(peng, params, None, batch_slots=2, max_len=64,
+                     n_blocks=5, sched=SchedulerParams(preemption=True))
+    rid = srv.submit(rng.integers(0, pcfg.vocab_size, size=16).astype(np.int32),
+                     max_new=24)
+    srv.run()
+    assert srv.result(rid).status == "failed"
+
+
+def test_eos_reap_reclaims_unused_blocks(ngram_paged, served, rng):
+    """Fix: reaping accounts the blocks actually used — an early EOS under
+    worst-case reservation returns the unused tail to the pool and the
+    ``reclaimed_blocks`` stat surfaces it."""
+    pcfg, pm, params, peng = ngram_paged
+    cfg, m, _, _, _ = served
+    p = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    eos = _ar(cfg, m, params, p, 24)[4]      # EOS hits at step 5 of 24
+    srv = SpecServer(peng, params, None, batch_slots=2, max_len=64)
+    rid = srv.submit(p, max_new=24, eos_id=eos)
+    srv.run()
+    req = srv.result(rid)
+    assert req.status == "done" and req.output[-1] == eos
+    assert srv.stats["reclaimed_blocks"] > 0
+    assert srv.pool.in_use == 0
+
+
+def test_recovery_mid_chunk_prefill(served, rng):
+    """Injected failure while a prompt is mid-chunk: the half-prefilled
+    request re-queues like any in-flight one and completes losslessly."""
+    cfg, m, params, eng, mp = served
+    srv = MedusaServer(eng, params, mp, batch_slots=2, max_len=256,
+                       max_retries=2, sched=SchedulerParams(chunk_size=16))
+    inj = FailingEngine(srv, "_suffix_jit", srv,
+                        lambda n, s, a: n == 2)   # second chunk call
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (120, 7)]
+    rids = [srv.submit(p, max_new=8) for p in prompts]
+    srv.run()
+    assert inj.fired
+    for rid, p in zip(rids, prompts):
+        req = srv.result(rid)
+        assert req.status == "done"
+        assert req.output == _ar(cfg, m, params, p, 8)
+
+
+def test_recovery_after_post_preemption_step(ngram_paged, served, rng):
+    """Injected failure on the first decode step after a preemption: the
+    survivor, the preempted request and the queue all recover to
+    AR-identical completions."""
+    pcfg, pm, params, peng = ngram_paged
+    cfg, m, _, _, _ = served
+    srv = SpecServer(peng, params, None, batch_slots=2, max_len=64,
+                     n_blocks=9, max_retries=2,
+                     sched=SchedulerParams(preemption=True))
+    inj = FailingEngine(srv, "_step_jit", srv,
+                        lambda n, s, a: s.stats["preemptions"] >= 1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+               for _ in range(2)]
+    rids = [srv.submit(p, max_new=24) for p in prompts]
+    srv.run()
+    assert inj.fired and srv.stats["preemptions"] >= 1
+    for rid, p in zip(rids, prompts):
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 24
+        assert req.output == _ar(cfg, m, params, p, 24)
+
+
+def test_recovery_during_victim_block_release(ngram_paged, served, rng):
+    """Injected failure inside the preemption itself — after the victim's
+    blocks went back to the pool but before its requeue completes a step.
+    ``_recover`` rebuilds pool + tables wholesale, so no block is leaked
+    or double-owned and every request still completes AR-identically."""
+    pcfg, pm, params, peng = ngram_paged
+    cfg, m, _, _, _ = served
+    srv = SpecServer(peng, params, None, batch_slots=2, max_len=64,
+                     n_blocks=9, max_retries=2,
+                     sched=SchedulerParams(preemption=True))
+    # the first non-empty release is the victim's: in this scenario the
+    # pool-exhaustion preemption happens before any request completes
+    inj = FailingEngine(srv.pool, "free", srv,
+                        lambda n, s, a: len(a[0]) > 0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+               for _ in range(2)]
+    rids = [srv.submit(p, max_new=24) for p in prompts]
+    srv.run()
+    assert inj.fired
+    assert srv.pool.in_use == 0              # fresh pool, fully reclaimed
+    for rid, p in zip(rids, prompts):
+        req = srv.result(rid)
+        assert req.status == "done" and len(req.output) == 24
+        assert req.output == _ar(cfg, m, params, p, 24)
