@@ -102,6 +102,8 @@ def run():
              f"{eq2:.3f}~={speedup:.3f}"),
         ]
     rows += tpu_projection()
+    from benchmarks.common import write_bench_json
+    write_bench_json("fig34", rows)
     return rows
 
 

@@ -88,6 +88,9 @@ def run():
     assert drift < 0.05, f"accepted-length drift {drift:.3f} >= 5% gate"
     rows.append(("kv_quant/token_identical_int8_vs_fp", 0.0,
                  f"{bool((toks[''] == toks['int8']).all())}"))
+    from benchmarks.common import write_bench_json
+    write_bench_json("kv_quant", rows,
+                     extra={"accepted_len_drift": float(drift)})
     return rows
 
 

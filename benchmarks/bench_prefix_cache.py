@@ -115,6 +115,10 @@ def run(smoke: bool = False):
     rows.append(("prefix_cache/effective_slot_gain", 0.0, f"{gain:.2f}x"))
     assert gain >= GAIN_GATE, \
         f"effective-slot gain {gain:.2f}x < {GAIN_GATE}x gate"
+    from benchmarks.common import write_bench_json
+    write_bench_json("prefix_cache", rows, smoke=smoke,
+                     extra={"effective_slot_gain": float(gain),
+                            "peak_blocks_shared": int(peak)})
     return rows
 
 

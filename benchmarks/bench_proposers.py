@@ -137,6 +137,10 @@ def run(smoke: bool = False):
                  f"{ratio:.2f}>={NO_SLOWDOWN}"))
     assert ratio >= NO_SLOWDOWN, \
         f"ngram {ratio:.2f}x AR on the random trace (gate {NO_SLOWDOWN})"
+    from benchmarks.common import write_bench_json
+    write_bench_json("proposers", rows, smoke=smoke,
+                     extra={"accepted_len": {f"{p}/{t}": float(a)
+                                             for (p, t), a in acc.items()}})
     return rows
 
 

@@ -118,6 +118,9 @@ def run(smoke: bool = False):
                                   cfg.vocab_size)
     rows.append((f"sampling/tvd_chain_vs_ar/T{temp}", 0.0, f"{tvd_chain:.4f}"))
     assert tvd_chain <= tol, f"chain TVD {tvd_chain:.4f} > gate {tol:.4f}"
+    from benchmarks.common import write_bench_json
+    write_bench_json("sampling", rows, smoke=smoke,
+                     extra={"tvd_chain_vs_ar": float(tvd_chain)})
     return rows
 
 

@@ -2,7 +2,7 @@
 an SLO-grade overload comparison of the §14 scheduler against the PR-5
 worst-case-reserving scheduler.
 
-Three measurements:
+Four measurements:
 
 * **Admission phase** (full mode only) — 16 queued requests admitted into
   16 free slots.  Serial mode issues one [1, bucket] prefill call plus a
@@ -21,6 +21,11 @@ Three measurements:
   and goodput gates are machine-independent and CI-stable, unlike
   wall-clock on a shared runner.  Gates: the §14 scheduler must improve
   both p99 latency and goodput on the same trace.
+* **Verify-fusion decode step** (DESIGN.md §15) — fused vs unfused decode
+  steps on the shared Poisson-trace prompts at vocab=4096: completions
+  must be token-identical, and the modeled tokens/s ratio (per-step HBM
+  bytes over the roofline bandwidth — deterministic, like the §14 virtual
+  clock) must clear the 1.15x acceptance gate.
 * **Losslessness** — every request completed by either server (including
   preempted-and-resumed ones) is asserted token-identical to greedy
   autoregressive decoding of its prompt.  Speculation, chunking and
@@ -34,7 +39,6 @@ preemption count) so CI can persist the perf trajectory per PR.
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
 
 import jax
@@ -233,6 +237,97 @@ def _overload(smoke: bool):
     return rows, payload
 
 
+# ---- verify-fusion decode-step gate (DESIGN.md §15) ----------------------
+# The fusion win is an HBM-traffic win, so the gate is a deterministic
+# bytes model (like the §14 virtual clock), not wall-clock: at the CI
+# model's vocab=256 the [B, T, V] logits round-trip is noise, so the gate
+# runs a vocab=4096 variant (V/d = 64, the regime the paper targets) where
+# the modeled ratio honestly clears 1.15x.  Token identity is absolute.
+FU_VOCAB = 4096
+FU_B = 8
+FU_MAX_NEW = 16
+FU_GAMMA = 4
+HBM_BW = 819e9         # bytes/s per chip (benchmarks/roofline.py)
+
+
+def _fusion_step_bytes(cfg, params, cache, T: int) -> dict:
+    """Modeled HBM bytes per decode step, fused vs unfused.
+
+    Common terms (weights once, one cache sweep) from the live arrays;
+    the delta terms are the §15 fusion targets: the [B, T, V] logits
+    round-trip vs the [B, T(T+3)] verify-stats round-trip, and the
+    q/k/v intermediate + separate-commit traffic vs in-kernel commit."""
+    B, V, f4 = FU_B, cfg.vocab_size, 4
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    L = cfg.num_attn_layers
+    w = sum(x.nbytes for x in jax.tree_util.tree_leaves(params))
+    c = sum(v.nbytes for e in cache.values()
+            for k, v in e.items() if k in ("k", "v"))
+    logits_rt = 2 * B * T * V * f4
+    stats_rt = 2 * (3 * B * T + B * T * T) * f4
+    qkv_unfused = L * (2 * B * T * (hq + 2 * hkv) * hd * f4   # q/k/v round-trip
+                       + 2 * 2 * B * T * hkv * hd * f4)       # separate commit
+    qkv_fused = L * (2 * B * T * hq * hd * f4                 # q round-trip
+                     + 2 * B * T * hkv * hd * f4)             # k/v write once
+    return {"unfused": w + c + logits_rt + qkv_unfused,
+            "fused": w + c + stats_rt + qkv_fused}
+
+
+def _fusion_gate(smoke: bool):
+    """Fused vs unfused decode steps on the shared Poisson trace prompts:
+    token-identical outputs, modeled tokens/s ratio >= 1.15x."""
+    from benchmarks.common import timeit
+    cfg = dataclasses.replace(get_config("qwen1.5-0.5b", reduced=True),
+                              vocab_size=FU_VOCAB)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    trace = poisson_trace(seed=11, n_req=FU_B, rate_hz=4.0, vocab=FU_VOCAB,
+                          short=(4, 40), long=(40, 56), long_frac=0.2,
+                          max_new=FU_MAX_NEW)
+    plens = [len(r["prompt"]) for r in trace]
+    toks = np.zeros((FU_B, max(plens)), np.int32)
+    for i, r in enumerate(trace):
+        toks[i, :plens[i]] = r["prompt"]
+    lengths = jax.numpy.asarray(plens, jax.numpy.int32)
+    s_max = max(plens) + FU_MAX_NEW + FU_GAMMA + 8
+
+    outs, n_outs, steps, wall = {}, {}, {}, {}
+    for mode, vf in (("unfused", False), ("fused", True)):
+        eng = build_engine(cfg, "ngram", gamma=FU_GAMMA, verify_fusion=vf)
+        gen = lambda e=eng: e.generate(params, None, jax.numpy.asarray(toks),
+                                       lengths, init_cache(cfg, FU_B, s_max),
+                                       FU_MAX_NEW)
+        o, n, st = gen()
+        outs[mode], n_outs[mode] = np.asarray(o), np.asarray(n)
+        steps[mode] = int(st.steps)
+        if not smoke:     # wall-clock is advisory; CI gates on the model
+            wall[mode] = timeit(gen, iters=3, warmup=1)
+    np.testing.assert_array_equal(
+        outs["unfused"], outs["fused"],
+        err_msg="verify_fusion changed the completion tokens")
+    np.testing.assert_array_equal(n_outs["unfused"], n_outs["fused"])
+    assert steps["unfused"] == steps["fused"]
+
+    by = _fusion_step_bytes(cfg, params, init_cache(cfg, FU_B, s_max),
+                            FU_GAMMA + 1)
+    tokens = int(n_outs["fused"].sum())
+    tok_s = {m: tokens / (steps[m] * by[m] / HBM_BW) for m in by}
+    ratio = tok_s["fused"] / tok_s["unfused"]
+    rows = [(f"serving/fusion/{m}/tokens_per_s", 0.0, f"{tok_s[m]:.0f}tok_s")
+            for m in ("unfused", "fused")]
+    rows.append(("serving/fusion/tokens_per_s_ratio", 0.0, f"{ratio:.2f}x"))
+    if wall:
+        rows.append(("serving/fusion/wallclock_speedup",
+                     wall["fused"] * 1e6,
+                     f'{wall["unfused"] / wall["fused"]:.2f}x'))
+    assert ratio >= 1.15, \
+        f"fused decode step {ratio:.2f}x unfused tokens/s < 1.15x gate"
+    payload = {"tokens_per_s_ratio": float(ratio), "tokens": tokens,
+               "steps": steps["fused"], "vocab": FU_VOCAB,
+               "step_bytes": {m: float(b) for m, b in by.items()}}
+    return rows, payload
+
+
 def _replay_trace(srv: MedusaServer, cfg, rng, n_req: int = 24,
                   rate_hz: float = 4.0, max_new: int = 8):
     """Replay a Poisson arrival trace; returns (total_s, tokens, latencies)."""
@@ -308,11 +403,15 @@ def run(smoke: bool = False):
              f"{np.percentile(lat, 99) * 1e3:.0f}ms"),
         ]
 
+    fu_rows, fu_payload = _fusion_gate(smoke)
+    rows += fu_rows
+    payload["fusion"] = fu_payload
+
     ov_rows, ov_payload = _overload(smoke)
     rows += ov_rows
     payload["overload"] = ov_payload
-    with open("BENCH_serving.json", "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
+    from benchmarks.common import write_bench_json
+    write_bench_json("serving", rows, smoke=smoke, extra=payload)
     return rows
 
 

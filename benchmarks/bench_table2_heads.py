@@ -76,6 +76,10 @@ def run():
                >= accs["B_distill_strip_special"][0]
                >= accs["A_public_only"][0])
     rows.append(("table2/ordering_C>=B>=A", 0.0, str(bool(ordered))))
+    from benchmarks.common import write_bench_json
+    write_bench_json("table2", rows,
+                     extra={"head_top1": {k: [float(x) for x in v]
+                                          for k, v in accs.items()}})
     return rows
 
 

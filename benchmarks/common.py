@@ -96,6 +96,34 @@ def max_marginal_tvd(a, b, vocab: int) -> float:
     return max(tvds)
 
 
+def write_bench_json(name: str, rows, extra: dict | None = None,
+                     smoke: bool | None = None) -> str:
+    """Persist a bench run as ``BENCH_<name>.json`` in the cwd.
+
+    The root-level files are gitignored scratch output; the committed
+    previous-PR baselines live in ``benchmarks/baselines/`` and
+    ``tools/check_bench_regress.py`` diffs the two (DESIGN.md §15).
+    ``rows`` is the bench's ``(name, us_per_call, derived)`` list —
+    us_per_call entries are wall-clock and therefore advisory in the
+    regression gate; deterministic metrics (virtual-time latencies,
+    modeled ratios, counters) go in ``extra`` where they gate hard."""
+    import json
+    payload = {
+        "bench": name,
+        "rows": {str(r[0]): {"us_per_call": float(r[1]), "derived": str(r[2])}
+                 for r in rows},
+    }
+    if smoke is not None:
+        payload["smoke"] = bool(smoke)
+    if extra:
+        payload.update(extra)
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def timeit(fn, *args, iters: int = 20, warmup: int = 3):
     """Median wall time per call (seconds); blocks on device results."""
     for _ in range(warmup):

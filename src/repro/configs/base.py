@@ -124,6 +124,9 @@ class ModelConfig:
                                    # block tables (DESIGN.md §12)
     page_size: int = 64            # paged layout: logical rows per block
                                    # (TPU kernel wants a multiple of 8)
+    verify_fusion: bool = False    # fold unembed + acceptance into the
+                                   # decode kernel epilogue — no [B, T, V]
+                                   # logits round-trip (DESIGN.md §15)
     max_position: int = 1 << 20    # rope table upper bound (lazy — computed per call)
     # --- attention flavour ---
     full_attention: bool = True    # False for ssm; hybrid is "not full" (sub-quadratic)

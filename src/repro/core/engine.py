@@ -73,12 +73,19 @@ class SpecEngine:
                  use_kernel: bool = False, accept: str = "greedy",
                  temperature: float = 0.7, deferred: bool = False,
                  sampling: Optional[SamplingParams] = None,
-                 proposer: Optional[Proposer] = None):
+                 proposer: Optional[Proposer] = None,
+                 verify_fusion: Optional[bool] = None):
         if accept not in ("greedy", "typical", "sample"):
             raise ValueError(f"unknown accept mode {accept!r}")
         if proposer is not None and tb is not None:
             raise ValueError("pass either tb (legacy Medusa tree) or "
                              "proposer, not both")
+        # resolve the fusion knob into the config itself: the model's decode
+        # path gates the fused write side on ``cfg.verify_fusion``
+        # (DESIGN.md §15), so an engine-level override must be visible there
+        vf = cfg.verify_fusion if verify_fusion is None else verify_fusion
+        if vf != cfg.verify_fusion:
+            cfg = dataclasses.replace(cfg, verify_fusion=vf)
         self.cfg = cfg
         self.model = get_model(cfg)
         self.proposer = proposer if proposer is not None \
@@ -95,6 +102,20 @@ class SpecEngine:
         self.temperature = temperature
         self.sampling = sampling if sampling is not None else \
             SamplingParams(temperature=temperature)
+        self.verify_fusion = vf
+        if self.verify_fusion:
+            # the fused epilogue carries Verdict-sized statistics only
+            # (DESIGN.md §15): typical acceptance needs full-row entropies,
+            # and top-k/top-p warps need the sorted row — neither survives
+            # the [B, T, V]-free contract, so they stay unfused.
+            if self.accept == "typical":
+                raise ValueError("verify_fusion does not support "
+                                 "accept='typical' (DESIGN.md §15)")
+            sp = self.sampling
+            if self.accept == "sample" and (sp.top_k or sp.top_p != 1.0):
+                raise ValueError(
+                    "verify_fusion + accept='sample' requires top_k=0 and "
+                    "top_p=1.0 (DESIGN.md §15)")
 
     def _sampling_args(self, temperature=None, top_p=None):
         """(temperature, top_k, top_p) with engine defaults, per-call (or
@@ -233,6 +254,42 @@ class SpecEngine:
                                         top_k=top_k, top_p=top_p)
         return V.greedy_verify(cand, logits, dt)
 
+    def _verify_fused(self, params, cand, hidden, q, key, temperature,
+                      top_k, top_p, dtree=None):
+        """Fused-epilogue acceptance (DESIGN.md §15): the kernel streams the
+        lm-head matmul over vocab blocks and hands back Verdict-sized
+        statistics — the [B, T, V] logits tensor never reaches HBM.  The
+        residual/bonus distribution is rebuilt from ONE [B, V] row unembed
+        at the stopping node; dispatch mirrors ``_verify`` exactly, and the
+        verdicts are token-identical (gated by tests/test_verify_fusion.py).
+        """
+        from repro.kernels import ops as KO
+        dt = self.dtree if dtree is None else dtree
+        B = cand.shape[0]
+        w = params.get("lm_head")
+        if w is None:
+            w = params["embed"].T
+        if self.accept == "sample":
+            t_arr = jnp.broadcast_to(
+                jnp.asarray(temperature, jnp.float32), (B,))
+            tmax = jnp.maximum(t_arr, 1e-6)
+        else:
+            tmax = jnp.ones((B,), jnp.float32)   # greedy: raw-logit argmax
+        stats = V.VerifyStats(*KO.verify_stats(hidden, w, cand, tmax))
+        rows = jnp.arange(B)
+
+        def row_fn(idx):
+            return self.model.unembed(params, self.cfg, hidden[rows, idx])
+
+        if self.accept == "sample":
+            if self.proposer.q_kind == "logits":
+                return V.sample_verify_chain_stats(
+                    cand, stats, q, dt, key, row_fn,
+                    temperature=temperature, top_k=top_k, top_p=top_p)
+            return V.sample_verify_tree_stats(cand, stats, q, dt, key,
+                                              row_fn, temperature=temperature)
+        return V.greedy_verify_stats(cand, stats, dt)
+
     def step_dtrees(self, levels=()):
         """The adaptive-speculation graph family (DESIGN.md §14): a small,
         static list of ``(gamma, DeviceTree)`` step topologies, ascending,
@@ -295,8 +352,12 @@ class SpecEngine:
             params, self.cfg, cache, cand, lengths,
             jnp.asarray(dt.mask), jnp.asarray(dt.depths),
             use_kernel=self.use_kernel, **kw)
-        logits = self.model.unembed(params, self.cfg, hidden)         # [B, T, V]
-        verdict = self._verify(cand, logits, q, k_ver, t, k, p, dtree=dt)
+        if self.verify_fusion:
+            verdict = self._verify_fused(params, cand, hidden, q, k_ver,
+                                         t, k, p, dtree=dt)
+        else:
+            logits = self.model.unembed(params, self.cfg, hidden)     # [B, T, V]
+            verdict = self._verify(cand, logits, q, k_ver, t, k, p, dtree=dt)
         cache, lengths = self.model.commit(
             self.cfg, spec_cache, lengths, verdict.path_slots, verdict.acc,
             active=active)
@@ -381,7 +442,8 @@ def build_engine(cfg: ModelConfig, proposer: str = "medusa", *,
                  draft_layers: int = 2, gamma: int = 4, max_n: int = 3,
                  min_n: int = 1, use_kernel: bool = False,
                  accept: str = "greedy",
-                 sampling: Optional[SamplingParams] = None) -> SpecEngine:
+                 sampling: Optional[SamplingParams] = None,
+                 verify_fusion: Optional[bool] = None) -> SpecEngine:
     """One-stop engine construction shared by the launcher, the benchmarks
     and the tests (DESIGN.md §13).
 
@@ -398,7 +460,8 @@ def build_engine(cfg: ModelConfig, proposer: str = "medusa", *,
     p = make_proposer(proposer, cfg, tb=tb, draft_cfg=draft_cfg, gamma=gamma,
                       max_n=max_n, min_n=min_n)
     return SpecEngine(cfg, use_kernel=use_kernel, accept=accept,
-                      sampling=sampling, proposer=p)
+                      sampling=sampling, proposer=p,
+                      verify_fusion=verify_fusion)
 
 
 def ar_generate(cfg: ModelConfig, params, tokens, prompt_lengths, cache,

@@ -278,3 +278,197 @@ def sample_verify_tree(candidates, logits, mprob, dtree: DeviceTree, key,
 
     next_token = S.categorical_from_probs(kr, r)
     return Verdict(acc, path_slots, path_tokens, next_token, cur)
+
+
+# ---------------------------------------------------------------------------
+# fused-stats acceptance (DESIGN.md §15): the same rules, fed by the kernel
+# epilogue's Verdict-sized statistics instead of the [B, T, V] logits tensor
+# ---------------------------------------------------------------------------
+
+class VerifyStats(NamedTuple):
+    """Output of ``kernels.ops.verify_stats`` — everything acceptance needs.
+
+    ``exp(cand_w[b, t, j] - m[b, t]) / l[b, t]`` is the warped target
+    probability of candidate token j under node t's row; ``argm`` is the
+    per-row first-wins argmax (greedy match and the temp<=0 one-hot warp).
+    """
+    argm: jnp.ndarray            # [B, T] int32
+    m: jnp.ndarray               # [B, T] f32
+    l: jnp.ndarray               # [B, T] f32
+    cand_w: jnp.ndarray          # [B, T, T] f32
+
+
+def greedy_verify_stats(candidates, stats: VerifyStats,
+                        dtree: DeviceTree) -> Verdict:
+    """``greedy_verify`` from fused statistics: identical post-argmax ops,
+    so the Verdict is bit-identical to the unfused path (the kernel's
+    cross-block strict-greater merge preserves first-wins argmax)."""
+    cand_paths = candidates[:, dtree.retrieve]                 # [B, P, K+1]
+    pred_paths = stats.argm[:, dtree.retrieve]
+    match = (cand_paths[:, :, 1:] == pred_paths[:, :, :-1]) & dtree.retrieve_valid[None, :, 1:]
+    acc_per_path = 1 + jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=-1), axis=-1)
+    return _select(acc_per_path, cand_paths, pred_paths, dtree)
+
+
+def _stats_node_probs(stats: VerifyStats, candidates, cur, t_zero):
+    """Warped target probability of every candidate slot under node ``cur``'s
+    row: [B, T] = exp(cand_w - m)/l, with the temp<=0 rows overridden by the
+    exact one-hot warp (candidate == argmax), mirroring ``warp_logits``."""
+    rows = jnp.arange(candidates.shape[0])
+    cw = stats.cand_w[rows, cur]                               # [B, T]
+    p = jnp.exp(cw - stats.m[rows, cur, None]) / stats.l[rows, cur, None]
+    hard = (candidates == stats.argm[rows, cur, None]).astype(p.dtype)
+    return jnp.where(t_zero[:, None], hard, p)
+
+
+def _stats_row_dist(row_logits, m_sel, l_sel, tmax, t_zero, argm_sel):
+    """Reconstruct the full warped target distribution of one node row from
+    its raw logits plus the kernel's m/l stats — elementwise the same ops as
+    ``softmax(warp_logits(row))``, so it matches the unfused row bitwise."""
+    V = row_logits.shape[-1]
+    wv = row_logits.astype(jnp.float32) / tmax[:, None]
+    p = jnp.exp(wv - m_sel[:, None]) / l_sel[:, None]
+    hard = (jnp.arange(V)[None, :] == argm_sel[:, None]).astype(p.dtype)
+    return jnp.where(t_zero[:, None], hard, p)
+
+
+def sample_verify_tree_stats(candidates, stats: VerifyStats, mprob,
+                             dtree: DeviceTree, key, row_logits_fn,
+                             temperature=1.0) -> Verdict:
+    """``sample_verify_tree`` fed by fused statistics (DESIGN.md §15).
+
+    The multi-round residual-mass walk survives fusion because each round's
+    residual is the node's warped target distribution with this round's
+    rejected tokens removed — a state fully described by (node, rejected
+    tokens, removed mass), never requiring the [B, V] row until the final
+    sample.  Decisions use the scalar form r(x) = p(x)·[x not rejected] /
+    (1 - sum of removed mass); the first sibling of every round divides by
+    exactly 1.0, so it is bit-identical to the unfused walk, and later
+    siblings agree to ~1 ulp (the unfused path renormalises the full row by
+    its float sum; token-identity is gated by the differential suite).  The
+    final residual is rebuilt from ONE row unembed (``row_logits_fn(cur)``
+    -> [B, V] raw logits at the stopping node) by replaying this round's
+    rejections with the same zero+renorm op sequence, then sampled with the
+    same split key — so draws match the unfused path.  Requires top_k=0 and
+    top_p=1.0 (enforced at engine construction).
+    """
+    B, T = candidates.shape
+    rows = jnp.arange(B)
+    t_arr = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    t_zero = t_arr <= 0.0
+    tmax = jnp.maximum(t_arr, 1e-6)
+    if T > 1:
+        qnode = mprob[:, dtree.node_head, dtree.node_choice]   # [B, T-1]
+        qnode = jnp.concatenate(
+            [jnp.ones((B, 1), qnode.dtype), qnode], axis=1)    # [B, T]
+    else:
+        qnode = jnp.ones((B, 1), jnp.float32)
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, max(dtree.K, 1), dtree.Cmax))
+
+    cur = jnp.zeros((B,), jnp.int32)
+    stopped = jnp.zeros((B,), bool)
+    denom = jnp.ones((B,), jnp.float32)          # residual mass, p-units
+    rej = jnp.full((B, dtree.Cmax), -1, jnp.int32)  # this round's removals
+    acc = jnp.ones((B,), jnp.int32)
+    K1 = dtree.K + 1
+    path_slots = jnp.zeros((B, K1), jnp.int32)
+    path_tokens = jnp.zeros((B, K1), jnp.int32).at[:, 0].set(candidates[:, 0])
+
+    for d in range(1, K1):
+        tab = dtree.children[cur]                              # [B, Cmax]
+        qkids = jnp.where(tab >= 0,
+                          qnode[rows[:, None], jnp.maximum(tab, 0)], -1.0)
+        order = jnp.argsort(-qkids, axis=1)          # valid first, q desc
+        tab = jnp.take_along_axis(tab, order, axis=1)
+        pnode = _stats_node_probs(stats, candidates, cur, t_zero)  # [B, T]
+
+        def sibling(carry, xs):
+            denom, rej, accepted, chosen = carry
+            ch, uj, j = xs                                     # [B], [B], []
+            valid = (ch >= 0) & ~stopped & ~accepted
+            chc = jnp.maximum(ch, 0)
+            x = candidates[rows, chc]
+            # a token zeroed earlier this round has no residual mass left
+            already = jnp.any(rej == x[:, None], axis=1)
+            pm = jnp.where(already, 0.0, pnode[rows, chc])
+            px = pm / denom
+            take = valid & (uj < px)
+            rejected = valid & ~take
+            # mirror the unfused fallback: if removing x leaves ~no mass,
+            # keep the residual (and x's mass) unchanged
+            do_remove = rejected & ((denom - pm) / denom > 1e-9)
+            denom = jnp.where(do_remove, denom - pm, denom)
+            rej = rej.at[:, j].set(jnp.where(do_remove, x, rej[:, j]))
+            chosen = jnp.where(take, ch, chosen)
+            return (denom, rej, accepted | take, chosen), None
+
+        (denom, rej, accepted, chosen), _ = jax.lax.scan(
+            sibling, (denom, rej, jnp.zeros((B,), bool), cur),
+            (tab.T, u[:, d - 1].T, jnp.arange(dtree.Cmax)))
+        # accepted rows descend: residual resets to the new node's target
+        denom = jnp.where(accepted, 1.0, denom)
+        rej = jnp.where(accepted[:, None], -1, rej)
+        acc = acc + accepted.astype(jnp.int32)
+        path_slots = path_slots.at[:, d].set(chosen)
+        path_tokens = path_tokens.at[:, d].set(candidates[rows, chosen])
+        stopped = stopped | ~accepted
+        cur = chosen
+
+    # one [B, V] row rebuild + rejection replay, then the shared sample key
+    r = _stats_row_dist(row_logits_fn(cur), stats.m[rows, cur],
+                        stats.l[rows, cur], tmax, t_zero, stats.argm[rows, cur])
+    for j in range(dtree.Cmax):
+        x = rej[:, j]
+        has = x >= 0
+        removed = r.at[rows, jnp.maximum(x, 0)].set(0.0)
+        s = jnp.sum(removed, axis=-1, keepdims=True)
+        removed = jnp.where(s > 1e-9, removed / jnp.maximum(s, 1e-38), r)
+        r = jnp.where(has[:, None], removed, r)
+    next_token = S.categorical_from_probs(kr, r)
+    return Verdict(acc, path_slots, path_tokens, next_token, cur)
+
+
+def sample_verify_chain_stats(candidates, stats: VerifyStats, draft_logits,
+                              dtree: DeviceTree, key, row_logits_fn,
+                              temperature=1.0, top_k: int = 0,
+                              top_p=1.0) -> Verdict:
+    """``sample_verify_chain`` fed by fused statistics (DESIGN.md §15).
+
+    The chain accept test u·q(x) < p(x) needs only p at the drafted tokens
+    — ``exp(cand_w - m)/l`` along the diagonal band — and one full row
+    (``row_logits_fn(last)``) for the residual/bonus distribution.  The
+    draft side q stays as-is: the draft engine materialises its own (much
+    smaller) logits regardless.  Requires top_k=0 / top_p=1.0 on the target
+    warp (enforced at engine construction); q uses the same warp for the
+    division-free test, exactly as the unfused rule."""
+    B, T = candidates.shape
+    gamma = T - 1
+    rows = jnp.arange(B)
+    t_arr = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    t_zero = t_arr <= 0.0
+    tmax = jnp.maximum(t_arr, 1e-6)
+    q = S.warp_probs(draft_logits, temperature, top_k, top_p)      # [B,g,V]
+    x = candidates[:, 1:]                                          # [B,g]
+    node = jnp.arange(gamma)
+    cw = stats.cand_w[:, node, node + 1]                           # [B,g]
+    px = jnp.exp(cw - stats.m[:, :gamma]) / stats.l[:, :gamma]
+    hard = (x == stats.argm[:, :gamma]).astype(px.dtype)
+    px = jnp.where(t_zero[:, None], hard, px)
+    qx = jnp.take_along_axis(q, x[..., None], axis=-1)[..., 0]
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, gamma))
+    accept = u * qx < px
+    acc = 1 + jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1), axis=-1)
+    last = acc - 1                                                 # [B]
+    p_last = _stats_row_dist(row_logits_fn(last), stats.m[rows, last],
+                             stats.l[rows, last], tmax, t_zero,
+                             stats.argm[rows, last])
+    q_last = jnp.take_along_axis(
+        q, jnp.minimum(last, gamma - 1)[:, None, None], axis=1)[:, 0]
+    full = (acc == T)[:, None]
+    next_dist = jnp.where(full, p_last, S.residual_dist(p_last, q_last))
+    next_token = S.categorical_from_probs(kr, next_dist)
+    path_slots = jnp.broadcast_to(dtree.retrieve[0], (B, dtree.K + 1))
+    return Verdict(acc.astype(jnp.int32), path_slots.astype(jnp.int32),
+                   candidates, next_token, last.astype(jnp.int32))

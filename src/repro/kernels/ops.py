@@ -14,7 +14,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import quant as Q
-from repro.kernels.tree_attention import flash_decode
+from repro.kernels.tree_attention import flash_decode, unembed_verify_stats
+
+
+def verify_stats(hidden, w, candidates, tmax, *, block_v=None,
+                 interpret: bool | None = None):
+    """Fused unembed + verify-statistics epilogue (DESIGN.md §15).
+
+    hidden [B, T, d]; w [d, V] lm-head weight (cast to hidden.dtype like
+    ``models.transformer.unembed``); candidates [B, T] int32; tmax [B] f32
+    pre-clamped warp temperatures.  Returns (argm, m, l, cand_w) — see
+    ``kernels.tree_attention.unembed_verify_stats``.  On non-TPU backends
+    the kernel runs in interpret mode (tests)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return unembed_verify_stats(hidden, w, candidates, tmax,
+                                block_v=block_v, interpret=interpret)
 
 
 def _pick_block(S: int):

@@ -58,6 +58,25 @@ def tree_attention_ref_int8(q, k, v, k_scale, v_scale, tree_mask, lengths,
                               tree_mask, lengths, scale)
 
 
+def verify_stats_ref(hidden, w, candidates, tmax):
+    """Pure-jnp oracle for the fused verify epilogue (DESIGN.md §15).
+
+    Materializes the full warped logits [B, T, V] (exactly what fusion
+    avoids) and reduces them to the same statistics the kernel emits:
+    argm [B, T] int32 first-wins argmax, m/l [B, T] f32 softmax stats of
+    the warped row, cand_w [B, T, T] f32 warped logits gathered at the
+    candidate tokens.  ``exp(cand_w - m[..., None]) / l[..., None]`` is the
+    warped target probability of candidate j under node t's row."""
+    logits = jnp.einsum("btd,dv->btv", hidden,
+                        w.astype(hidden.dtype)).astype(jnp.float32)
+    wv = logits / tmax[:, None, None]
+    argm = jnp.argmax(wv, axis=-1).astype(jnp.int32)
+    m = jnp.max(wv, axis=-1)
+    l = jnp.sum(jnp.exp(wv - m[..., None]), axis=-1)
+    cand_w = jnp.take_along_axis(wv, candidates[:, None, :], axis=-1)
+    return argm, m, l, cand_w
+
+
 def tree_attention_ref_paged(q, k, v, block_tables, tree_mask, lengths,
                              scale, k_scale=None, v_scale=None):
     """Paged-cache oracle (DESIGN.md §12): k/v are pool-form

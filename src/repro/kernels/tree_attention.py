@@ -226,3 +226,142 @@ def flash_decode(q, k, v, lengths, *, k_scale=None, v_scale=None,
     if paged:
         return fn(lengths, block_tables.astype(jnp.int32), *inputs)
     return fn(lengths, *inputs)
+
+
+# ---------------------------------------------------------------------------
+# fused verify epilogue: unembed + acceptance statistics (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def _verify_stats_kernel(tmax_ref, cand_ref,   # scalar prefetch [B] f32, [B,T] i32
+                         h_ref, w_ref,         # VMEM blocks [1,T,d], [d,BV]
+                         argm_ref, m_ref, l_ref, cl_ref,
+                         wmax_scr, lsum_scr, amax_scr, cl_scr,
+                         *, block_v: int, n_v: int, V: int, T: int):
+    """One (b, j) grid step of the vocab sweep.
+
+    Streams the lm-head matmul over vocab blocks and keeps only the
+    Verdict-sized acceptance statistics in VMEM: per-node argmax (first-wins
+    across blocks via a strict-greater merge), warped-logit max ``m`` and
+    sum-exp ``l`` (online softmax carry), and the [T, T] candidate-logit
+    table extracted by a one-hot matmul — exact, because each output element
+    is one ``x * 1`` plus exact zeros.  The full [T, BV] logits block dies
+    in VMEM; nothing [*, V]-shaped reaches HBM.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        wmax_scr[...] = jnp.full_like(wmax_scr, NEG_INF)
+        lsum_scr[...] = jnp.zeros_like(lsum_scr)
+        amax_scr[...] = jnp.zeros_like(amax_scr)
+        cl_scr[...] = jnp.zeros_like(cl_scr)
+
+    h = h_ref[0]                                   # [T, d]
+    z = jax.lax.dot_general(
+        h, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # [T, BV]
+    # round through the activation dtype (bf16 configs) so the stats match
+    # the unfused ``unembed`` einsum, then warp exactly as
+    # ``sampling.warp_logits``: true division by the clamped temperature
+    # (monotonic, so argmax is shared with raw logits)
+    z = z.astype(h.dtype).astype(jnp.float32)
+    wv = z / tmax_ref[b]
+    col = j * block_v + jax.lax.broadcasted_iota(jnp.int32, wv.shape, 1)
+    wv = jnp.where(col < V, wv, NEG_INF)           # pad columns: exact no-ops
+
+    bm = jnp.max(wv, axis=1, keepdims=True)        # [T, 1]
+    bi = jnp.argmax(wv, axis=1)[:, None].astype(jnp.int32) + j * block_v
+    m_prev = wmax_scr[...]
+    amax_scr[...] = jnp.where(bm > m_prev, bi, amax_scr[...])
+    m_new = jnp.maximum(m_prev, bm)
+    alpha = jnp.exp(m_prev - m_new)
+    lsum_scr[...] = lsum_scr[...] * alpha + jnp.sum(
+        jnp.exp(wv - m_new), axis=1, keepdims=True)
+    wmax_scr[...] = m_new
+
+    rel = cand_ref[b][None, :] - j * block_v       # [1, T]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (block_v, T), 0)
+              == rel).astype(jnp.float32)          # [BV, T]
+    cl_scr[...] += jax.lax.dot_general(
+        wv, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # [T, T]
+
+    @pl.when(j == n_v - 1)
+    def _emit():
+        argm_ref[0] = amax_scr[...][:, 0]
+        m_ref[0] = wmax_scr[...][:, 0]
+        l_ref[0] = lsum_scr[...][:, 0]
+        cl_ref[0] = cl_scr[...]
+
+
+def unembed_verify_stats(hidden, w, candidates, tmax, *, block_v=None,
+                         interpret: bool = False):
+    """Fused unembed + verify statistics (DESIGN.md §15).
+
+    hidden [B, T, d]; w [d, V] lm-head weight; candidates [B, T] int32;
+    tmax [B] f32 pre-clamped warp temperatures (``max(t, 1e-6)``, so the
+    kernel's division matches ``sampling.warp_logits`` bit-for-bit).
+
+    Returns (argm [B, T] int32, m [B, T] f32, l [B, T] f32,
+    cand_w [B, T, T] f32) where ``cand_w[b, t, j]`` is the warped logit of
+    candidate token ``j`` under node ``t``'s row — everything the greedy
+    match and the residual-mass walk need, at O(T^2) instead of O(T*V)
+    HBM traffic.
+
+    When the vocab fits one block (the default for V <= 4096) the online
+    carry degenerates to a single pass and ``exp(cand_w - m) / l`` is
+    bitwise ``softmax(warped)`` gathered at the candidates; with multiple
+    vocab blocks ``l`` picks up online-rescale rounding (~1 ulp) — the
+    differential suite gates token-identity either way.
+    """
+    B, T, d = hidden.shape
+    V = w.shape[1]
+    T_pad = -T % 8
+    if T_pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, T_pad), (0, 0)))
+        candidates = jnp.pad(candidates, ((0, 0), (0, T_pad)))
+    Tp = T + T_pad
+    if block_v is None:
+        block_v = V if V <= 4096 else 1024
+    block_v = max(-(-block_v // 128) * 128, 128)
+    pad_v = (-V) % block_v
+    if pad_v:
+        w = jnp.pad(w, ((0, 0), (0, pad_v)))
+    n_v = (V + pad_v) // block_v
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_v),
+        in_specs=[
+            pl.BlockSpec((1, Tp, d), lambda b, j, tm, cd: (b, 0, 0)),
+            pl.BlockSpec((d, block_v), lambda b, j, tm, cd: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Tp), lambda b, j, tm, cd: (b, 0)),
+            pl.BlockSpec((1, Tp), lambda b, j, tm, cd: (b, 0)),
+            pl.BlockSpec((1, Tp), lambda b, j, tm, cd: (b, 0)),
+            pl.BlockSpec((1, Tp, Tp), lambda b, j, tm, cd: (b, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Tp, 1), jnp.float32),
+            pltpu.VMEM((Tp, 1), jnp.float32),
+            pltpu.VMEM((Tp, 1), jnp.int32),
+            pltpu.VMEM((Tp, Tp), jnp.float32),
+        ],
+    )
+    out_shapes = [
+        jax.ShapeDtypeStruct((B, Tp), jnp.int32),
+        jax.ShapeDtypeStruct((B, Tp), jnp.float32),
+        jax.ShapeDtypeStruct((B, Tp), jnp.float32),
+        jax.ShapeDtypeStruct((B, Tp, Tp), jnp.float32),
+    ]
+    argm, m, l, cl = pl.pallas_call(
+        functools.partial(_verify_stats_kernel, block_v=block_v, n_v=n_v,
+                          V=V, T=Tp),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(tmax.astype(jnp.float32), candidates.astype(jnp.int32),
+      hidden, w.astype(hidden.dtype))
+    return argm[:, :T], m[:, :T], l[:, :T], cl[:, :T, :T]

@@ -73,14 +73,20 @@ def main():
                          "0 is exact greedy)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="per-request nucleus truncation (accept=sample)")
+    ap.add_argument("--verify-fusion", action="store_true",
+                    help="fold unembed + acceptance into the decode kernel "
+                         "epilogue — no [B, T, V] logits round-trip; "
+                         "requires top-p 1.0 under accept=sample "
+                         "(DESIGN.md §15)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
-    if args.cache_dtype or args.cache_layout != "dense":
+    if args.cache_dtype or args.cache_layout != "dense" or args.verify_fusion:
         import dataclasses
         cfg = dataclasses.replace(cfg, cache_dtype=args.cache_dtype,
                                   cache_layout=args.cache_layout,
-                                  page_size=args.page_size)
+                                  page_size=args.page_size,
+                                  verify_fusion=args.verify_fusion)
     model = get_model(cfg)
     params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
     eng = build_engine(cfg, args.proposer, gamma=args.gamma,

@@ -471,14 +471,37 @@ def attention_decode_batched(p, x, cfg, entry, lengths, masks, tree_mask,
     import math as _m
     B, T, _ = x.shape
     hd = cfg.resolved_head_dim
+    scale = 1.0 / _m.sqrt(hd)
+    quantized = "k_scale" in entry
+    # fused write side (DESIGN.md §15): qkv projection + rope + tree-row
+    # cache write in one kernel launch.  fp caches only — the int8 hop
+    # needs the scale cache and keeps the unfused projection; deferred mode
+    # skips the tree-row write entirely, so there is nothing to fuse.
+    fused = (use_kernel and cfg.verify_fusion and not deferred
+             and not quantized)
+    if fused:
+        from repro.kernels import cache_update as CU
+        cos = sin = None
+        if cfg.use_rope:
+            positions = lengths[:, None] + depths[None, :]
+            cos, sin = L.rope_cos_sin(positions, hd, cfg.rope_theta)
+        q, k, v, new_k, new_v = CU.fused_qkv_rope_commit(
+            x, p, lengths, entry["k"], entry["v"], cos=cos, sin=sin,
+            table=table)
+        new_entry = dict(entry)
+        new_entry["k"], new_entry["v"] = new_k, new_v
+        from repro.kernels.ops import tree_attention
+        out = tree_attention(q, new_k, new_v, tree_mask, lengths, scale,
+                             k_tree=k, v_tree=v, block_tables=table)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        new_entry["k_new"], new_entry["v_new"] = k, v
+        return y, new_entry
     q, k, v = L._project_qkv(p, x, cfg)
     if cfg.use_rope:
         positions = lengths[:, None] + depths[None, :]
         cos, sin = L.rope_cos_sin(positions, hd, cfg.rope_theta)
         q = L.apply_rope(q, cos[:, :, None, :], sin[:, :, None, :])
         k = L.apply_rope(k, cos[:, :, None, :], sin[:, :, None, :])
-    scale = 1.0 / _m.sqrt(hd)
-    quantized = "k_scale" in entry
     if quantized:
         kq, ks = Q.quantize_rows(k)
         vq, vs = Q.quantize_rows(v)

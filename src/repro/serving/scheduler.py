@@ -391,6 +391,12 @@ class SpecServer:
         to the engine's ``SamplingParams``, and temperature 0.0 reproduces
         greedy output exactly.  Greedy/typical engines ignore them."""
         sp = self.engine.sampling
+        if (getattr(self.engine, "verify_fusion", False)
+                and self.engine.accept == "sample"
+                and top_p is not None and top_p != 1.0):
+            # the fused epilogue keeps only Verdict-sized statistics; a
+            # top-p warp needs the sorted full row (DESIGN.md §15)
+            raise ValueError("verify_fusion rejects per-request top_p != 1.0")
         self._rid += 1
         self.queue.append(Request(
             self._rid, np.asarray(prompt, np.int32), max_new, eos_id,

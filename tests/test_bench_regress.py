@@ -1,0 +1,116 @@
+"""Unit tests for ``tools/check_bench_regress.py`` (DESIGN.md §15): the
+per-PR bench gate that diffs this run's ``BENCH_*.json`` against the
+committed ``benchmarks/baselines/`` with per-metric thresholds.  The CI
+step runs the same checker standalone after the smoke benches."""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _checker():
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import check_bench_regress
+    finally:
+        sys.path.pop(0)
+    return check_bench_regress
+
+
+def _write(d: pathlib.Path, payload: dict, name="BENCH_serving.json"):
+    d.mkdir(parents=True, exist_ok=True)
+    (d / name).write_text(json.dumps(payload))
+
+
+def _serving(ratio=1.36, p99=20.0, goodput=3.0, admit_us=900.0, smoke=True):
+    return {
+        "bench": "serving", "smoke": smoke,
+        "rows": {"serving/admit16/batched": {"us_per_call": admit_us,
+                                             "derived": "x"}},
+        "fusion": {"tokens_per_s_ratio": ratio},
+        "overload": {"chunked_preemptive": {"p99_latency_vt": p99,
+                                            "goodput_tok_per_vt": goodput}},
+    }
+
+
+def _run(tmp_path, baseline, current):
+    cb = _checker()
+    _write(tmp_path / "base", baseline)
+    _write(tmp_path / "cur", current)
+    return cb.main(["--current-dir", str(tmp_path / "cur"),
+                    "--baseline-dir", str(tmp_path / "base")])
+
+
+def test_flatten_numeric_leaves():
+    cb = _checker()
+    flat = cb.flatten({"a": {"b": 1, "c": [2.5, {"d": 3}]},
+                       "s": "text", "t": True})
+    assert flat == {"a.b": 1.0, "a.c.0": 2.5, "a.c.1.d": 3.0}
+
+
+def test_identical_run_passes(tmp_path):
+    assert _run(tmp_path, _serving(), _serving()) == 0
+
+
+def test_gated_regression_fails(tmp_path):
+    # p99 virtual-time latency up 50% >> the 10% gate
+    assert _run(tmp_path, _serving(p99=20.0), _serving(p99=30.0)) == 1
+    # fusion tokens/s ratio collapsing below baseline fails too
+    assert _run(tmp_path, _serving(ratio=1.36), _serving(ratio=1.10)) == 1
+
+
+def test_improvement_and_small_drift_pass(tmp_path):
+    assert _run(tmp_path, _serving(p99=20.0, goodput=3.0),
+                _serving(p99=15.0, goodput=3.4)) == 0
+    assert _run(tmp_path, _serving(p99=20.0), _serving(p99=21.0)) == 0
+
+
+def test_wallclock_rows_are_advisory(tmp_path):
+    # a 10x wall-clock admission blowup is noise on a shared runner
+    assert _run(tmp_path, _serving(admit_us=900.0),
+                _serving(admit_us=9000.0)) == 0
+
+
+def test_gated_metric_missing_from_current_fails(tmp_path):
+    cur = _serving()
+    del cur["fusion"]
+    assert _run(tmp_path, _serving(), cur) == 1
+
+
+def test_smoke_mismatch_skips(tmp_path):
+    # full local baseline vs CI smoke run measure different traces
+    assert _run(tmp_path, _serving(p99=20.0, smoke=False),
+                _serving(p99=99.0, smoke=True)) == 0
+
+
+def test_missing_baseline_is_a_note_not_a_failure(tmp_path):
+    cb = _checker()
+    _write(tmp_path / "cur", _serving())
+    (tmp_path / "base").mkdir()
+    assert cb.main(["--current-dir", str(tmp_path / "cur"),
+                    "--baseline-dir", str(tmp_path / "base")]) == 0
+
+
+def test_update_baselines_copies(tmp_path):
+    cb = _checker()
+    _write(tmp_path / "cur", _serving())
+    assert cb.main(["--current-dir", str(tmp_path / "cur"),
+                    "--baseline-dir", str(tmp_path / "base"),
+                    "--update-baselines"]) == 0
+    copied = json.loads((tmp_path / "base" / "BENCH_serving.json").read_text())
+    assert copied["fusion"]["tokens_per_s_ratio"] == 1.36
+
+
+def test_roofline_fraction_gate(tmp_path):
+    roof = lambda frac: {"bench": "roofline",
+                         "measured": {"fused_verify_stats":
+                                      {"achieved_fraction": frac}}}
+    cb = _checker()
+    _write(tmp_path / "base", roof(0.37), "BENCH_roofline.json")
+    _write(tmp_path / "cur", roof(0.20), "BENCH_roofline.json")
+    assert cb.main(["--current-dir", str(tmp_path / "cur"),
+                    "--baseline-dir", str(tmp_path / "base")]) == 1
+    _write(tmp_path / "cur", roof(0.36), "BENCH_roofline.json")
+    assert cb.main(["--current-dir", str(tmp_path / "cur"),
+                    "--baseline-dir", str(tmp_path / "base")]) == 0

@@ -1,0 +1,165 @@
+#!/usr/bin/env python
+"""Per-PR bench regression gate, run standalone in CI and from
+``tests/test_bench_regress.py`` (DESIGN.md §15).
+
+Every bench writes a ``BENCH_<name>.json`` next to the cwd
+(``benchmarks.common.write_bench_json``).  The previous PR's results are
+committed under ``benchmarks/baselines/``; this tool diffs current vs
+baseline with per-metric thresholds so a perf regression fails CI the
+same way a broken test does.
+
+Two metric classes:
+
+* **gated** — deterministic quantities (virtual-time latencies, goodput,
+  modeled byte ratios, roofline achieved fractions).  Regressing past the
+  per-pattern relative threshold in the worse direction exits non-zero.
+  A gated metric present in the baseline but missing from the current run
+  also fails: coverage must not silently shrink.
+* **advisory** — everything else, notably wall-clock ``us_per_call`` rows
+  (shared CI runners make those unstable).  Drift is printed, never fatal.
+
+Comparisons are skipped (with a note) when the ``smoke`` flags disagree —
+a full local run and a CI smoke run measure different trace sizes — and
+when no baseline file exists yet (a new bench: commit one with
+``--update-baselines``).
+
+Run from anywhere:
+
+  python tools/check_bench_regress.py [--update-baselines]
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import pathlib
+import shutil
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE_DIR = ROOT / "benchmarks" / "baselines"
+
+# (bench, flattened-key glob, direction, relative threshold).  Direction is
+# which way is WORSE: "lower" = lower current value is worse (throughput-
+# like), "higher" = higher is worse (latency-like).
+GATES = [
+    ("serving", "overload.*.p99_latency_vt", "higher", 0.10),
+    ("serving", "overload.*.p50_latency_vt", "higher", 0.10),
+    ("serving", "overload.*.goodput_tok_per_vt", "lower", 0.10),
+    ("serving", "fusion.tokens_per_s_ratio", "lower", 0.02),
+    ("roofline", "measured.*.achieved_fraction", "lower", 0.05),
+    ("roofline", "measured.*.floor_bytes", "higher", 0.0),
+    ("sampling", "tvd_chain_vs_ar", "higher", 0.50),
+    ("prefix_cache", "effective_slot_gain", "lower", 0.05),
+    ("proposers", "accepted_len.*", "lower", 0.10),
+    ("kv_quant", "accepted_len_drift", "higher", 0.50),
+]
+ADVISORY_DRIFT = 0.25     # print advisory metrics drifting past this
+
+
+def flatten(obj, prefix="", out=None):
+    """Numeric leaves of a nested dict/list as {dot.path: float}."""
+    out = {} if out is None else out
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            flatten(v, f"{prefix}{k}.", out)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            flatten(v, f"{prefix}{i}.", out)
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def gate_for(bench: str, key: str):
+    for b, pat, direction, tol in GATES:
+        if b == bench and fnmatch.fnmatch(key, pat):
+            return direction, tol
+    return None
+
+
+def _regressed(direction: str, base: float, cur: float, tol: float) -> bool:
+    if base == 0.0:
+        return (cur > tol) if direction == "higher" else (cur < -tol)
+    rel = (cur - base) / abs(base)
+    return rel > tol if direction == "higher" else rel < -tol
+
+
+def check_bench(bench: str, baseline: dict, current: dict):
+    """-> (failures, notes) comparing one bench's payloads."""
+    failures, notes = [], []
+    if baseline.get("smoke") != current.get("smoke"):
+        notes.append(f"{bench}: smoke={current.get('smoke')} vs baseline "
+                     f"smoke={baseline.get('smoke')} — skipped (different "
+                     f"trace sizes)")
+        return failures, notes
+    b, c = flatten(baseline), flatten(current)
+    for key, bv in sorted(b.items()):
+        gate = gate_for(bench, key)
+        if key not in c:
+            if gate:
+                failures.append(f"{bench}.{key}: gated metric missing from "
+                                f"the current run (baseline {bv:g})")
+            continue
+        cv = c[key]
+        if gate:
+            direction, tol = gate
+            if _regressed(direction, bv, cv, tol):
+                failures.append(
+                    f"{bench}.{key}: {bv:g} -> {cv:g} regressed past the "
+                    f"{tol:.0%} gate ({'higher' if direction == 'higher' else 'lower'} is worse)")
+        elif bv and abs(cv - bv) / abs(bv) > ADVISORY_DRIFT:
+            notes.append(f"{bench}.{key}: {bv:g} -> {cv:g} "
+                         f"(advisory, wall-clock class)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current-dir", default=".",
+                    help="directory holding the BENCH_*.json of this run")
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy this run's BENCH_*.json over the baselines")
+    args = ap.parse_args(argv)
+    cur_dir = pathlib.Path(args.current_dir)
+    base_dir = pathlib.Path(args.baseline_dir)
+
+    current = sorted(cur_dir.glob("BENCH_*.json"))
+    if not current:
+        print(f"check_bench_regress: no BENCH_*.json in {cur_dir} — "
+              f"nothing to compare")
+        return 0
+    if args.update_baselines:
+        base_dir.mkdir(parents=True, exist_ok=True)
+        for f in current:
+            shutil.copy(f, base_dir / f.name)
+            print(f"baseline updated: {base_dir / f.name}")
+        return 0
+
+    failures, notes = [], []
+    for f in current:
+        bench = f.stem[len("BENCH_"):]
+        bf = base_dir / f.name
+        if not bf.exists():
+            notes.append(f"{bench}: no committed baseline ({bf}) — run with "
+                         f"--update-baselines to add one")
+            continue
+        fa, na = check_bench(bench, json.loads(bf.read_text()),
+                             json.loads(f.read_text()))
+        failures += fa
+        notes += na
+    for n in notes:
+        print(f"note: {n}")
+    for f in failures:
+        print(f"REGRESSION: {f}")
+    if failures:
+        return 1
+    print(f"check_bench_regress: {len(current)} bench file(s) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
