@@ -70,6 +70,13 @@ class Proposer:
     consumes_key: bool = False
     q_kind: str = "mprob"
     supports_prefix: bool = True
+    # the proposer can rebuild a row's state from token ids alone (no
+    # hidden state, no extra forward pass).  The scheduler uses this after
+    # a prefix-cache suffix admission (DESIGN.md §12): the target never
+    # re-reads cached prompt rows, so ``prime`` only saw the suffix, but
+    # the host still knows the full prompt — a token-only re-prime gives
+    # lookup proposers their history back for free.
+    primes_from_tokens: bool = False
 
     def init_state(self, batch: int, capacity: int):
         """Allocate the proposer's device state for ``batch`` rows.
@@ -83,6 +90,13 @@ class Proposer:
         """Pytree of ints (same structure as ``state``): the batch axis of
         each leaf, for the scheduler's admission gather/merge."""
         return jax.tree.map(lambda _: 0, state)
+
+    def prime_tokens(self, state, tokens, tok_lens, base, mask):
+        """Re-prime the ``mask`` [B] rows of ``state`` from token ids alone
+        (tokens [B, W] right-padded, tok_lens [B] true counts, base [B] the
+        current base token).  Only meaningful when the subclass declares
+        ``primes_from_tokens``; the default keeps the state unchanged."""
+        return state
 
     def prime(self, pp, state, tokens, lengths, tok_lens, hidden, base,
               extra_embeds=None):
@@ -319,6 +333,7 @@ class NgramProposer(Proposer):
     consumes_key = False
     q_kind = "mprob"
     supports_prefix = True
+    primes_from_tokens = True
 
     def __init__(self, cfg: ModelConfig, gamma: int = 4, max_n: int = 3,
                  min_n: int = 1):
@@ -345,6 +360,22 @@ class NgramProposer(Proposer):
         pos = jnp.clip(tok_lens, 0, H - 1)
         hist = hist.at[rows, pos].set(base)
         return {"hist": hist, "hlen": jnp.clip(tok_lens + 1, 0, H)}
+
+    def prime_tokens(self, state, tokens, tok_lens, base, mask):
+        """History IS the state, so token ids alone rebuild it: re-run
+        ``prime`` with the full prompt and merge the ``mask`` rows along
+        each leaf's declared batch axis.  This is what turns a prefix-
+        cache suffix admission's cold history into lookup hits from token
+        0 (DESIGN.md §12/§13)."""
+        primed = self.prime(None, state, tokens, None, tok_lens, None, base)
+        axes = self.state_axes(state)
+
+        def sel(new, old, ax):
+            shp = [1] * new.ndim
+            shp[ax] = -1
+            return jnp.where(mask.reshape(shp), new, old)
+
+        return jax.tree.map(sel, primed, state, axes)
 
     def propose(self, pp, state, base, key, temperature, top_k, top_p,
                 stochastic, dtree=None):

@@ -90,7 +90,9 @@ def spec_for(axes: tuple, rules: dict, shape=None, mesh=None) -> P:
             if any(a in used for a in ax_t):
                 ax = None
             elif shape is not None and mesh is not None:
-                size = int(np.prod([mesh.shape[a] for a in ax_t]))
+                # mesh.shape values are host Python ints (device metadata,
+                # never tracers), so this int() cannot sync
+                size = int(np.prod([mesh.shape[a] for a in ax_t]))  # speclint: disable=trace-safety
                 if shape[i] % size != 0:
                     ax = None
             if ax is not None:

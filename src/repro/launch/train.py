@@ -52,7 +52,8 @@ def main():
         opt = O.adamw_init(params)
         state = {"params": params, "opt": opt}
         step_fn = jax.jit(lambda p, o, x, y: ST.lm_train_step(
-            p, o, cfg, x, y, lr=args.lr), donate_argnums=(0, 1))
+            p, o, cfg, x, y, lr=args.lr),
+            donate_argnums=(0, 1))  # speclint: donates=p,o
     else:
         mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg, args.heads,
                                            base_lm_head=params.get("lm_head")))
@@ -60,7 +61,8 @@ def main():
         state = {"params": mp, "opt": opt}
         step_fn = jax.jit(lambda p, o, t: ST.medusa_train_step(
             p, o, params, cfg, t, args.heads, lr=args.lr,
-            pad_id=D.special_id(cfg.vocab_size, D.PAD)), donate_argnums=(0, 1))
+            pad_id=D.special_id(cfg.vocab_size, D.PAD)),
+            donate_argnums=(0, 1))  # speclint: donates=p,o
 
     start = 0
     if args.resume:

@@ -348,29 +348,36 @@ class SpecServer:
         # after each call, so XLA aliases them instead of holding 2x cache.
         self._admit_jit = jax.jit(
             self._admit_paged_impl if self.paged else self._admit_bucket_impl,
-            donate_argnums=(7, 8, 9, 10, 11))
+            donate_argnums=(7, 8, 9, 10, 11))  # speclint: donates=cache,lengths,base,pstate,n_out
         self._prefill_jit = jax.jit(
             lambda p, pp, t, l, c, key, temp, topp, st: self.engine.prefill(
                 p, pp, t, l, c, key=key, temperature=temp, top_p=topp,
                 state=st))
         self._step_jit = jax.jit(self._serve_step_impl,
-                                 donate_argnums=(2, 3, 4, 5, 6))
+                                 donate_argnums=(2, 3, 4, 5, 6))  # speclint: donates=cache,lengths,base,pstate,n_out
         # per-level step graphs (the full-tree level deliberately does NOT
         # alias self._step_jit: tests monkeypatch _step_jit to inject
         # failures, and that must keep working for the default path)
         self._step_jits = [
             jax.jit((lambda _dt: lambda *a: self._serve_step_impl(
-                *a, dtree=_dt))(dt), donate_argnums=(2, 3, 4, 5, 6))
+                *a, dtree=_dt))(dt),
+                donate_argnums=(2, 3, 4, 5, 6))  # speclint: donates=cache,lengths,base,pstate,n_out
             for _, dt in self._levels]
         self._trim_jit = jax.jit(
             lambda st, keep: self.engine.proposer.reset_rows(st, keep),
-            donate_argnums=(0,))
+            donate_argnums=(0,))  # speclint: donates=st
         if self.paged or self.chunk:
             self._suffix_jit = jax.jit(self._suffix_impl,
-                                       donate_argnums=(6, 7, 8, 9, 10))
+                                       donate_argnums=(6, 7, 8, 9, 10))  # speclint: donates=cache,lengths,base,pstate,n_out
         if self.paged:
             self._copy_jit = jax.jit(self._copy_blocks_impl,
-                                     donate_argnums=(0,))
+                                     donate_argnums=(0,))  # speclint: donates=cache
+        if getattr(self.engine.proposer, "primes_from_tokens", False):
+            self._prime_tokens_jit = jax.jit(
+                lambda st, toks, tl, base, mask:
+                    self.engine.proposer.prime_tokens(st, toks, tl, base,
+                                                      mask),
+                donate_argnums=(0,))  # speclint: donates=st
 
     def _fresh_stats(self) -> dict:
         return {"prefill_calls": 0, "admitted": 0, "steps": 0,
@@ -512,7 +519,11 @@ class SpecServer:
             params, proposer_params, toks, plens, cache_n,
             key=key, temperature=gtemp, top_p=gtopp, state=st_n)
         srcc = jnp.clip(src, 0, n - 1)
-        cache = jax.tree.map(
+        # safe per-slot merge: this impl is selected only when the cache is
+        # dense ([units, B, S, ...] leaves, slot axis 1 everywhere); the
+        # paged layout admits through _admit_paged_impl, which splits pool
+        # leaves before merging
+        cache = jax.tree.map(  # speclint: disable=pytree-axis
             lambda b, s: _merge_rows(b, s, srcc, mask, 1), cache, cache_n)
         pstate = jax.tree.map(
             lambda b, s, ax: _merge_rows(b, s, srcc, mask, ax),
@@ -889,7 +900,34 @@ class SpecServer:
             self.lengths, self.base, self.pstate, self.n_out,
             jnp.asarray(smask), jnp.asarray(self._temp),
             jnp.asarray(self._topp))
+        if getattr(self.engine.proposer, "primes_from_tokens", False):
+            self._prime_full_history(slot_idx, p_ext)
         self.stats["prefill_calls"] += 1
+
+    def _prime_full_history(self, slot_idx: int, p_ext: np.ndarray):
+        """Re-prime a token-lookup proposer with the FULL prompt after a
+        prefix-cache suffix admission.
+
+        ``_suffix_impl`` primes the proposer from the un-cached suffix
+        only (the target never re-reads cached prompt rows), which leaves
+        an n-gram history cold exactly where prefix sharing makes repeats
+        most likely.  The host still knows the complete token ids, so
+        proposers declaring ``primes_from_tokens`` get one extra jitted
+        pass rebuilding this slot's history — bucketed like admission, and
+        prompts past the largest bucket keep their most recent window.
+        Identity-safe: proposals only ever change speculation hit rate,
+        never the verified output (DESIGN.md §12/§13)."""
+        W = self._bucket(min(len(p_ext), self.buckets[-1]))
+        window = p_ext[-W:] if len(p_ext) > W else p_ext
+        ptoks = np.zeros((self.B, W), np.int32)
+        ptoks[slot_idx, : len(window)] = window
+        tl = np.ones((self.B,), np.int32)
+        tl[slot_idx] = len(window)
+        pmask = np.zeros((self.B,), bool)
+        pmask[slot_idx] = True
+        self.pstate = self._prime_tokens_jit(
+            self.pstate, jnp.asarray(ptoks), jnp.asarray(tl), self.base,
+            jnp.asarray(pmask))
 
     def _admit_batched(self, pairs):
         """Group the admitted requests by prompt bucket and prefill each
@@ -955,7 +993,10 @@ class SpecServer:
             idx[axis] = slot_idx
             return jax.lax.dynamic_update_slice(big, one.astype(big.dtype),
                                                 tuple(idx))
-        self.cache = jax.tree.map(lambda b, o: insert(b, o, 1),
+        # safe per-slot insert: v1 serial admission only ever runs on the
+        # dense layout (paged serial admission routes through
+        # _admit_batched), so every cache leaf has slot axis 1
+        self.cache = jax.tree.map(lambda b, o: insert(b, o, 1),  # speclint: disable=pytree-axis
                                   self.cache, cache1)
         self.pstate = jax.tree.map(insert, self.pstate, st1, self._sax)
         self.lengths = self.lengths.at[slot_idx].set(lengths1[0])
@@ -1156,9 +1197,11 @@ class SpecServer:
             maxnew, temp, topp)
         self.stats["steps"] += 1
         self.stats["gamma_steps"][gamma] += 1
-        acc = np.asarray(sync.acc)
-        toks = np.asarray(sync.tokens)
-        spec_acc = np.asarray(sync.spec_acc)
+        # one transfer for the whole SlotSync (speclint trace-safety: the
+        # old per-field np.asarray calls cost four device round-trips per
+        # decode step)
+        sync = jax.device_get(sync)
+        acc, toks, spec_acc = sync.acc, sync.tokens, sync.spec_acc
         self._done_now = np.array(sync.done)   # copy: host-mutated at reap
         # committed-length mirror + acceptance EMA (§14): spec_acc is the
         # raw verifier acceptance = exactly what commit advanced by

@@ -1,0 +1,16 @@
+"""Seeded donation violations (speclint fixture; parsed, never run)."""
+import jax
+
+
+def step(params, cache, lengths):
+    return cache, lengths
+
+
+# index 5 does not exist in step's signature, and no annotation pins it
+bad_range = jax.jit(step, donate_argnums=(5,))
+
+# index 1 donates `cache`, but the annotation claims `lengths`
+drifted = jax.jit(step, donate_argnums=(1,))  # speclint: donates=lengths
+
+# no annotation at all: index drift would be silent
+unpinned = jax.jit(step, donate_argnums=(1, 2))

@@ -1,0 +1,10 @@
+"""Clean donation fixture: annotated and in range."""
+import jax
+
+
+def step(params, cache, lengths):
+    return cache, lengths
+
+
+ok = jax.jit(step, donate_argnums=(1, 2))  # speclint: donates=cache,lengths
+plain = jax.jit(step)                      # no donation, nothing to pin

@@ -1,0 +1,19 @@
+"""Seeded kernel static-shape violations (speclint fixture)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x, lens):
+    bs = jnp.maximum(8, lens[0])          # traced block size
+    return pl.pallas_call(
+        kernel,
+        grid=(x.shape[0], jnp.sum(lens)),  # traced grid extent
+        in_specs=[pl.BlockSpec((1, bs), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,25 @@
+"""Clean kernel static-shape fixture: config constant + static shapes;
+index maps may use jnp (on-chip scalar logic is exempt)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def launch(x):
+    n = x.shape[0] // BLOCK
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec(
+            (BLOCK, x.shape[1]),
+            lambda i: (jnp.minimum(i, n - 1), 0))],
+        out_specs=pl.BlockSpec((BLOCK, x.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        input_output_aliases={0: 0},
+    )(x)

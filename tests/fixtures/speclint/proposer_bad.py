@@ -1,0 +1,26 @@
+"""Seeded proposer-protocol violations (speclint fixture)."""
+
+
+class Proposer:
+    """Stand-in for repro.core.proposers.Proposer."""
+
+
+class BadProposer(Proposer):
+    consumes_key = False
+    q_kind = "probs"               # not a verifier form
+    # supports_prefix missing
+
+    def init_state(self, batch, capacity):
+        return {"hist": None, "hlen": None}
+
+    def state_axes(self, state):
+        return {"hist": 1}         # hlen missing: admission merge breaks
+
+    # prime missing
+
+    def propose(self, pp, state, base, key, temperature, top_k, top_p,
+                stochastic, dtree=None):
+        return None
+
+    def observe(self, pp, state, verdict, hidden, lengths):
+        return state

@@ -1,0 +1,28 @@
+"""Clean proposer-protocol fixture."""
+
+
+class Proposer:
+    """Stand-in for repro.core.proposers.Proposer."""
+
+
+class GoodProposer(Proposer):
+    consumes_key = True
+    q_kind = "logits"
+    supports_prefix = False
+
+    def init_state(self, batch, capacity):
+        return {"cache": None, "len": None}
+
+    def state_axes(self, state):
+        return {"cache": 1, "len": 0}
+
+    def prime(self, pp, state, tokens, lengths, tok_lens, hidden, base,
+              extra_embeds=None):
+        return state
+
+    def propose(self, pp, state, base, key, temperature, top_k, top_p,
+                stochastic, dtree=None):
+        return None
+
+    def observe(self, pp, state, verdict, hidden, lengths):
+        return state

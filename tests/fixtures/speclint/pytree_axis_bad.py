@@ -1,0 +1,11 @@
+"""Seeded pytree-axis violation (speclint fixture): blanket per-slot
+merge over a cache pytree that may hold pool-form leaves."""
+import jax
+
+
+def merge_rows(big, small, axis):
+    return big
+
+
+def admit(cache, cache_new):
+    return jax.tree.map(lambda b, s: merge_rows(b, s, 1), cache, cache_new)

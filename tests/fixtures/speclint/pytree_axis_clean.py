@@ -1,0 +1,17 @@
+"""Clean pytree-axis fixture: the pool-form leaves are split off before
+the per-slot merge touches anything."""
+import jax
+
+PAGES_KEY = "_pages"
+
+
+def merge_rows(big, small, axis):
+    return big
+
+
+def admit(cache, cache_new):
+    dense = {k: v for k, v in cache.items() if k != PAGES_KEY}
+    merged = jax.tree.map(lambda b, s: merge_rows(b, s, 1),
+                          dense, cache_new)
+    merged[PAGES_KEY] = cache[PAGES_KEY]
+    return merged

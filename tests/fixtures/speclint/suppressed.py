@@ -1,0 +1,10 @@
+"""Suppression-honored fixture: a real violation, acknowledged inline."""
+import jax
+
+
+def hot(x):
+    # a deliberate sync, reviewed and accepted for this fixture
+    return x.item()  # speclint: disable=trace-safety
+
+
+wrapped = jax.jit(hot)

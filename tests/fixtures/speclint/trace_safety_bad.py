@@ -1,0 +1,22 @@
+"""Seeded trace-safety violations (speclint fixture; parsed, never run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hot_step(x, lengths):
+    n = int(lengths[0])            # int() on a traced value
+    if jnp.any(x > 0):             # data-dependent Python branch
+        x = x + 1
+    y = np.asarray(x)              # host conversion under trace
+    return x.item() + y.sum() + n  # .item() syncs
+
+
+step = jax.jit(hot_step)
+
+
+def apply_sync(sync):
+    # host-side, but two per-field transfers of one device struct
+    acc = np.asarray(sync.acc)
+    toks = np.asarray(sync.tokens)
+    return acc, toks

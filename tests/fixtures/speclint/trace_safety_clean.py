@@ -1,0 +1,18 @@
+"""Clean trace-safety fixture: host code syncs freely, jitted code uses
+only static quantities."""
+import jax
+import numpy as np
+
+
+def host_apply(sync):
+    return np.asarray(sync.acc)    # single transfer: fine
+
+
+def hot_step(x, cfg):
+    n = int(x.shape[0])            # static shape: fine under trace
+    if n > 4:                      # static Python branch: fine
+        x = x + cfg.bias
+    return x
+
+
+step = jax.jit(hot_step, static_argnums=(1,))

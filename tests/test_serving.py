@@ -469,3 +469,40 @@ def test_recovery_during_victim_block_release(ngram_paged, served, rng):
         req = srv.result(rid)
         assert req.status == "done" and len(req.output) == 24
         assert req.output == _ar(cfg, m, params, p, 24)
+
+
+def test_prefix_admission_primes_ngram_history(ngram_paged, served, rng):
+    """Prefix-cache suffix admission re-primes the n-gram history with the
+    FULL prompt token ids (``Proposer.prime_tokens`` via
+    ``_prime_full_history``, DESIGN.md §16), not just the un-cached
+    suffix.  White-box: after a shared-prefix request admits through the
+    cached path, its hist row holds the whole prompt.  Black-box: outputs
+    stay AR-identical and the step count equals a no-prefix-cache server's
+    — whose full prefill always primes the complete history — so a cold
+    (suffix-only) history could only show up as a step-count divergence."""
+    pcfg, pm, params, peng = ngram_paged
+    cfg, m, _, _, _ = served
+    unit = rng.integers(0, pcfg.vocab_size, size=6).astype(np.int32)
+    prefix = np.tile(unit, 5)                    # 30 shared, repetitive
+    pA = np.concatenate([prefix, unit[:2]])      # donor registers blocks
+    pB = np.concatenate([prefix, unit[2:5]])     # follower: 3-block match
+    outs, steps = {}, {}
+    for pc in (False, True):
+        srv = SpecServer(peng, params, None, batch_slots=2, max_len=64,
+                         n_blocks=20, prefix_cache=pc)
+        ra = srv.submit(pA, max_new=6)
+        srv.run()
+        rb = srv.submit(pB, max_new=6)
+        if pc:
+            srv.step_once(it=0)                  # admits rb via cached path
+            assert srv.stats["cached_tokens"] > 0
+            hist = np.asarray(srv.pstate["hist"])
+            assert any((hist[s, : len(pB)] == pB).all()
+                       for s in range(hist.shape[0]))
+        srv.run()
+        assert srv.result(ra).status == srv.result(rb).status == "done"
+        outs[pc] = [srv.result(ra).output, srv.result(rb).output]
+        steps[pc] = srv.stats["steps"]
+    assert outs[True] == outs[False]
+    assert steps[True] == steps[False]
+    assert outs[True][1] == _ar(pcfg, pm, params, pB, 6, max_len=64)

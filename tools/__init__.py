@@ -1,0 +1,3 @@
+"""Repo checker tooling: ``python -m tools.checks`` is the single gating
+entrypoint (DESIGN.md §16); the standalone scripts in this directory stay
+runnable on their own for local iteration."""

@@ -23,9 +23,13 @@ a full local run and a CI smoke run measure different trace sizes — and
 when no baseline file exists yet (a new bench: commit one with
 ``--update-baselines``).
 
+``collect_findings`` returns the failures in the structured schema all
+repo checkers share (DESIGN.md §16), which ``--json`` emits and
+``python -m tools.checks`` aggregates.
+
 Run from anywhere:
 
-  python tools/check_bench_regress.py [--update-baselines]
+  python tools/check_bench_regress.py [--update-baselines] [--json]
 """
 from __future__ import annotations
 
@@ -116,6 +120,31 @@ def check_bench(bench: str, baseline: dict, current: dict):
     return failures, notes
 
 
+def collect_findings(cur_dir: pathlib.Path, base_dir: pathlib.Path):
+    """-> (findings, notes): gate failures in the shared checker schema
+    (DESIGN.md §16) plus advisory notes.  No BENCH files is not a failure
+    (the gate only applies after the benches ran)."""
+    findings, notes = [], []
+    current = sorted(pathlib.Path(cur_dir).glob("BENCH_*.json"))
+    if not current:
+        notes.append(f"no BENCH_*.json in {cur_dir} — nothing to compare")
+        return findings, notes
+    for f in current:
+        bench = f.stem[len("BENCH_"):]
+        bf = pathlib.Path(base_dir) / f.name
+        if not bf.exists():
+            notes.append(f"{bench}: no committed baseline ({bf}) — run with "
+                         f"--update-baselines to add one")
+            continue
+        fa, na = check_bench(bench, json.loads(bf.read_text()),
+                             json.loads(f.read_text()))
+        findings += [{"tool": "bench-regress", "rule": "regression",
+                      "file": f.name, "line": 0, "col": 0, "message": m}
+                     for m in fa]
+        notes += na
+    return findings, notes
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current-dir", default=".",
@@ -123,39 +152,33 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
     ap.add_argument("--update-baselines", action="store_true",
                     help="copy this run's BENCH_*.json over the baselines")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the shared checker findings schema")
     args = ap.parse_args(argv)
     cur_dir = pathlib.Path(args.current_dir)
     base_dir = pathlib.Path(args.baseline_dir)
 
     current = sorted(cur_dir.glob("BENCH_*.json"))
-    if not current:
-        print(f"check_bench_regress: no BENCH_*.json in {cur_dir} — "
-              f"nothing to compare")
-        return 0
     if args.update_baselines:
+        if not current:
+            print(f"check_bench_regress: no BENCH_*.json in {cur_dir}")
+            return 0
         base_dir.mkdir(parents=True, exist_ok=True)
         for f in current:
             shutil.copy(f, base_dir / f.name)
             print(f"baseline updated: {base_dir / f.name}")
         return 0
 
-    failures, notes = [], []
-    for f in current:
-        bench = f.stem[len("BENCH_"):]
-        bf = base_dir / f.name
-        if not bf.exists():
-            notes.append(f"{bench}: no committed baseline ({bf}) — run with "
-                         f"--update-baselines to add one")
-            continue
-        fa, na = check_bench(bench, json.loads(bf.read_text()),
-                             json.loads(f.read_text()))
-        failures += fa
-        notes += na
+    findings, notes = collect_findings(cur_dir, base_dir)
+    if args.as_json:
+        print(json.dumps({"tool": "bench-regress", "ok": not findings,
+                          "findings": findings, "notes": notes}, indent=2))
+        return 1 if findings else 0
     for n in notes:
         print(f"note: {n}")
-    for f in failures:
-        print(f"REGRESSION: {f}")
-    if failures:
+    for f in findings:
+        print(f"REGRESSION: {f['message']}")
+    if findings:
         return 1
     print(f"check_bench_regress: {len(current)} bench file(s) OK")
     return 0

@@ -11,12 +11,18 @@
    ship undocumented and the guide cannot advertise a flag that was
    renamed or removed.
 
+``collect_findings`` returns the same results in the structured schema all
+repo checkers share (DESIGN.md §16), which ``--json`` emits and
+``python -m tools.checks`` aggregates.
+
 Run from anywhere:
 
-  python tools/check_docs_refs.py
+  python tools/check_docs_refs.py [--json]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import pathlib
 import re
 import sys
@@ -31,9 +37,12 @@ FLAGS_BEGIN = "<!-- serve-flags -->"
 FLAGS_END = "<!-- /serve-flags -->"
 
 
-def find_stale_refs(root: pathlib.Path) -> list[str]:
-    """Return ``path:line: DESIGN.md §N (missing)`` entries for citations of
-    sections absent from ``root/DESIGN.md``."""
+def _finding(rule: str, file: str, line: int, message: str) -> dict:
+    return {"tool": "docs-refs", "rule": rule, "file": file, "line": line,
+            "col": 0, "message": message}
+
+
+def _stale_ref_findings(root: pathlib.Path) -> list[dict]:
     sections = set(HEADER.findall((root / "DESIGN.md").read_text()))
     bad = []
     for d in SCAN_DIRS:
@@ -43,9 +52,45 @@ def find_stale_refs(root: pathlib.Path) -> list[str]:
             for ln, line in enumerate(path.read_text().splitlines(), 1):
                 for num in CITE.findall(line):
                     if num not in sections:
-                        bad.append(f"{path.relative_to(root)}:{ln}: "
-                                   f"DESIGN.md §{num} (missing)")
+                        bad.append(_finding(
+                            "stale-design-ref",
+                            str(path.relative_to(root)), ln,
+                            f"DESIGN.md §{num} (missing)"))
     return bad
+
+
+def _flag_drift_findings(root: pathlib.Path) -> list[dict]:
+    serve = (root / "src" / "repro" / "launch" / "serve.py").read_text()
+    defined = set(ARGPARSE_FLAG.findall(serve))
+    readme = (root / "README.md").read_text()
+    begin, end = readme.find(FLAGS_BEGIN), readme.find(FLAGS_END)
+    if begin < 0 or end < begin:
+        return [_finding("flag-drift", "README.md", 0,
+                         f"serving-flags table markers {FLAGS_BEGIN} ... "
+                         f"{FLAGS_END} not found")]
+    documented = set(README_FLAG.findall(readme[begin:end]))
+    bad = []
+    for f in sorted(defined - documented):
+        bad.append(_finding("flag-drift", "README.md", 0,
+                            f"launcher flag {f} missing from the "
+                            f"serving-flags table"))
+    for f in sorted(documented - defined):
+        bad.append(_finding("flag-drift", "README.md", 0,
+                            f"documented flag {f} does not exist in "
+                            f"repro/launch/serve.py"))
+    return bad
+
+
+def collect_findings(root: pathlib.Path) -> list[dict]:
+    """All docs-consistency findings in the shared checker schema."""
+    return _stale_ref_findings(root) + _flag_drift_findings(root)
+
+
+def find_stale_refs(root: pathlib.Path) -> list[str]:
+    """Return ``path:line: DESIGN.md §N (missing)`` entries for citations of
+    sections absent from ``root/DESIGN.md``."""
+    return [f"{f['file']}:{f['line']}: {f['message']}"
+            for f in _stale_ref_findings(root)]
 
 
 def find_flag_drift(root: pathlib.Path) -> list[str]:
@@ -55,37 +100,25 @@ def find_flag_drift(root: pathlib.Path) -> list[str]:
     Returns human-readable drift entries: flags the launcher defines but
     the table omits, flags the table documents but the launcher lacks, or
     a missing/malformed marker region."""
-    serve = (root / "src" / "repro" / "launch" / "serve.py").read_text()
-    defined = set(ARGPARSE_FLAG.findall(serve))
-    readme = (root / "README.md").read_text()
-    begin, end = readme.find(FLAGS_BEGIN), readme.find(FLAGS_END)
-    if begin < 0 or end < begin:
-        return [f"README.md: serving-flags table markers "
-                f"{FLAGS_BEGIN} ... {FLAGS_END} not found"]
-    documented = set(README_FLAG.findall(readme[begin:end]))
-    bad = []
-    for f in sorted(defined - documented):
-        bad.append(f"README.md: launcher flag {f} missing from the "
-                   f"serving-flags table")
-    for f in sorted(documented - defined):
-        bad.append(f"README.md: documented flag {f} does not exist in "
-                   f"repro/launch/serve.py")
-    return bad
+    return [f"{f['file']}: {f['message']}"
+            for f in _flag_drift_findings(root)]
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the shared checker findings schema")
+    args = ap.parse_args(argv)
     root = pathlib.Path(__file__).resolve().parents[1]
-    bad = find_stale_refs(root)
-    if bad:
-        print("stale DESIGN.md § citations:")
-        for b in bad:
-            print(" ", b)
-        return 1
-    drift = find_flag_drift(root)
-    if drift:
-        print("README serving-flags drift:")
-        for b in drift:
-            print(" ", b)
+    findings = collect_findings(root)
+    if args.as_json:
+        print(json.dumps({"tool": "docs-refs", "ok": not findings,
+                          "findings": findings}, indent=2))
+        return 1 if findings else 0
+    if findings:
+        print("docs-consistency findings:")
+        for f in findings:
+            print(f"  {f['file']}:{f['line']}: {f['message']}")
         return 1
     print("docs-consistency: all DESIGN.md § citations resolve; README "
           "serving flags match repro/launch/serve.py")

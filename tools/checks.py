@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""One gating entrypoint for every repo checker (DESIGN.md §16):
+
+  python -m tools.checks [paths...] [--json]
+
+Runs, in order:
+
+1. **speclint** (``tools/speclint``) over ``src/`` — or over the given
+   paths, which also narrows the run to speclint alone (the docs/bench
+   checks are repo-global and make no sense against a path subset);
+2. **docs-consistency** (``check_docs_refs``): DESIGN.md § citations and
+   the README serving-flags table;
+3. **bench regression gate** (``check_bench_regress``) against the
+   committed baselines; a cwd without ``BENCH_*.json`` is a note, not a
+   failure, so the entrypoint gates identically before and after the
+   benches ran.
+
+Exit status is non-zero iff any checker reports a finding; ``--json``
+emits one uniform findings array across all three tools.  CI runs exactly
+this once, replacing the three separate checker steps.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+TOOLS_DIR = pathlib.Path(__file__).resolve().parent
+ROOT = TOOLS_DIR.parent
+if str(TOOLS_DIR) not in sys.path:
+    sys.path.insert(0, str(TOOLS_DIR))
+
+import check_bench_regress  # noqa: E402
+import check_docs_refs  # noqa: E402
+from speclint.core import run_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.checks",
+        description="unified repo checks: speclint + docs consistency + "
+                    "bench regression (DESIGN.md §16)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs for speclint (default: src/; giving "
+                         "paths skips the repo-global docs/bench checks)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the shared checker findings schema")
+    args = ap.parse_args(argv)
+
+    findings = [f.to_json() for f in run_paths(args.paths or None)]
+    notes = []
+    if not args.paths:
+        findings += check_docs_refs.collect_findings(ROOT)
+        bf, bn = check_bench_regress.collect_findings(
+            pathlib.Path("."), check_bench_regress.BASELINE_DIR)
+        findings += bf
+        notes += bn
+
+    if args.as_json:
+        print(json.dumps({"ok": not findings, "findings": findings,
+                          "notes": notes}, indent=2))
+    else:
+        for n in notes:
+            print(f"note: {n}")
+        for f in findings:
+            print(f"{f['file']}:{f['line']}:{f['col']}: "
+                  f"[{f['tool']}/{f['rule']}] {f['message']}")
+        print(f"tools.checks: {len(findings)} finding(s)"
+              if findings else "tools.checks: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

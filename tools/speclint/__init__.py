@@ -1,0 +1,8 @@
+"""speclint: AST-based static invariant checks for the jit/Pallas/scheduler
+discipline this codebase lives by (DESIGN.md §16).
+
+Relative imports only, so the package resolves both as ``tools.speclint``
+(repo root on ``sys.path``; the ``python -m tools.checks`` route) and as
+plain ``speclint`` (``tools/`` on ``sys.path``; the test-suite route the
+other checkers already use)."""
+from .core import RULES, Finding, run_paths  # noqa: F401

@@ -1,0 +1,48 @@
+"""CLI: ``python -m tools.speclint [paths...] [--json]`` (DESIGN.md §16).
+
+Exit status 1 iff any finding survives suppression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .core import RULES, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="speclint",
+        description="static invariant checks for jit/Pallas/scheduler "
+                    "discipline (DESIGN.md §16)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: src/)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the shared checker findings schema")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    from . import rules as _rules  # noqa: F401  (populates RULES)
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(f"{name:22s} {RULES[name].doc}")
+        return 0
+
+    findings = run_paths(args.paths or None, rules=args.rule)
+    if args.as_json:
+        print(json.dumps({"tool": "speclint", "ok": not findings,
+                          "findings": [f.to_json() for f in findings]},
+                         indent=2))
+    else:
+        for f in findings:
+            print(f)
+        print(f"speclint: {len(findings)} finding(s)"
+              if findings else "speclint: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,150 @@
+"""speclint framework: findings, suppressions, the rule registry and the
+``run_paths`` driver (DESIGN.md §16).
+
+A rule is a class with a ``name``, a one-line ``doc`` and a
+``check(ctx) -> list[Finding]`` method; it registers itself with
+``@register`` at import time (importing ``rules`` populates the registry).
+Findings carry ``file:line:col`` and serialise to the JSON schema every
+repo checker shares::
+
+    {"tool": ..., "rule": ..., "file": ..., "line": ..., "col": ...,
+     "message": ...}
+
+Suppressions are inline comments on the *finding's* line::
+
+    x = y.item()  # speclint: disable=trace-safety   <- why it is safe
+
+and are deliberately per-line, per-rule: a suppression is a reviewed claim
+about one statement, not a file-wide waiver.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+# Default scan: the serving library. benchmarks/ and tests/ intentionally
+# sit outside the gate — they run host-side by construction and lean on
+# exactly the sync idioms rule 1 exists to keep out of src/.
+DEFAULT_PATHS = ("src",)
+
+SUPPRESS = re.compile(r"#\s*speclint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    file: str
+    line: int
+    col: int
+    message: str
+
+    def to_json(self) -> dict:
+        return {"tool": "speclint", "rule": self.rule, "file": self.file,
+                "line": self.line, "col": self.col, "message": self.message}
+
+    def __str__(self) -> str:
+        return (f"{self.file}:{self.line}:{self.col}: "
+                f"[{self.rule}] {self.message}")
+
+
+class SourceFile:
+    """One parsed file: text, lines, AST and its suppression map."""
+
+    def __init__(self, path: pathlib.Path, root: pathlib.Path):
+        self.path = path
+        try:
+            self.rel = path.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            self.rel = path.as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+        self._suppress: Dict[int, set] = {}
+        for ln, line in enumerate(self.lines, 1):
+            m = SUPPRESS.search(line)
+            if m:
+                self._suppress[ln] = {
+                    r.strip() for r in m.group(1).split(",") if r.strip()}
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        rules = self._suppress.get(line, ())
+        return rule in rules or "all" in rules
+
+    def segment(self, node: ast.AST) -> str:
+        """Raw source lines spanned by ``node`` (text-level guards)."""
+        return "\n".join(self.lines[node.lineno - 1:node.end_lineno])
+
+
+RULES: Dict[str, type] = {}
+
+
+class Rule:
+    name: str = ""
+    doc: str = ""
+
+    def check(self, ctx: "LintContext") -> List[Finding]:
+        raise NotImplementedError
+
+
+def register(cls):
+    assert cls.name and cls.name not in RULES, cls
+    RULES[cls.name] = cls
+    return cls
+
+
+class LintContext:
+    def __init__(self, files: List[SourceFile], root: pathlib.Path):
+        self.files = files
+        self.root = root
+        self.by_rel = {f.rel: f for f in files}
+        self._reach = None
+
+    @property
+    def reach(self):
+        """Lazily-built jit-reachability result (callgraph.analyze)."""
+        if self._reach is None:
+            from . import callgraph
+            self._reach = callgraph.analyze(self.files)
+        return self._reach
+
+
+def _collect_py(paths: Iterable[pathlib.Path]) -> List[pathlib.Path]:
+    py: List[pathlib.Path] = []
+    for p in paths:
+        if p.is_dir():
+            py.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            py.append(p)
+    return py
+
+
+def run_paths(paths=None, root=None,
+              rules: Optional[List[str]] = None) -> List[Finding]:
+    """Lint ``paths`` (files or directories; default ``src/`` under the
+    repo root) and return the surviving findings, sorted and deduped.
+    Suppressed findings are dropped here, after every rule ran."""
+    root = pathlib.Path(root) if root else ROOT
+    targets = ([pathlib.Path(p) for p in paths] if paths
+               else [root / p for p in DEFAULT_PATHS])
+    findings: List[Finding] = []
+    files: List[SourceFile] = []
+    for p in _collect_py(targets):
+        try:
+            files.append(SourceFile(p, root))
+        except SyntaxError as e:
+            findings.append(Finding("parse-error", str(p), e.lineno or 0,
+                                    e.offset or 0, str(e.msg)))
+    ctx = LintContext(files, root)
+    from . import rules as _rules  # noqa: F401  (populates RULES)
+    for name in (rules if rules is not None else sorted(RULES)):
+        for f in RULES[name]().check(ctx):
+            src = ctx.by_rel.get(f.file)
+            if src is not None and src.suppressed(f.line, f.rule):
+                continue
+            findings.append(f)
+    return sorted(set(findings),
+                  key=lambda f: (f.file, f.line, f.col, f.rule, f.message))

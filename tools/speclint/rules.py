@@ -1,0 +1,596 @@
+"""The five speclint rules (DESIGN.md §16).
+
+Each rule encodes one invariant this repo has already paid for by hand —
+the rule docstrings name the CHANGES.md incident class they gate.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List
+
+from .callgraph import calls_in, func_targets, last_name, root_name
+from .core import Finding, Rule, register
+
+DONATES = re.compile(r"#\s*speclint:\s*donates=([A-Za-z0-9_,\* ]+)")
+
+
+def walk_no_nested(root_node):
+    """Walk a function body without descending into nested ``def``s (each
+    reachable nested def is visited on its own); lambdas are traced inline
+    with their enclosing function, so they ARE descended into."""
+    stack = list(ast.iter_child_nodes(root_node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def numpy_aliases(src) -> set:
+    out = set()
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    out.add(a.asname or "numpy")
+    return out
+
+
+def attr_chain_names(node) -> set:
+    """All dotted-path components of ``a.b.c`` -> {a, b, c}."""
+    names = set()
+    while isinstance(node, ast.Attribute):
+        names.add(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        names.add(node.id)
+    return names
+
+
+# --------------------------------------------------------------------------
+# rule 1: trace-safety
+# --------------------------------------------------------------------------
+
+def _static_safe(e) -> bool:
+    """Conservative "this expression cannot be a traced array value":
+    literals, bare names (config ints threaded as arguments), attribute
+    reads (``self.page_size``/``cfg.vocab``), ``x.shape[...]``, ``len``
+    and ``math.*`` calls, and arithmetic over those."""
+    if isinstance(e, (ast.Constant, ast.Name, ast.Attribute)):
+        return True
+    if isinstance(e, ast.Subscript):
+        return (isinstance(e.value, ast.Attribute)
+                and e.value.attr == "shape")
+    if isinstance(e, ast.Call):
+        return (last_name(e.func) == "len"
+                or root_name(e.func) == "math"
+                or (last_name(e.func) in ("min", "max")
+                    and all(_static_safe(a) for a in e.args)))
+    if isinstance(e, ast.BinOp):
+        return _static_safe(e.left) and _static_safe(e.right)
+    if isinstance(e, ast.UnaryOp):
+        return _static_safe(e.operand)
+    return False
+
+
+def _traced_test(test) -> bool:
+    """Does an if/while test force a device value to a Python bool?"""
+    for n in ast.walk(test):
+        if not isinstance(n, ast.Call):
+            continue
+        chain = attr_chain_names(n.func)
+        if "jnp" in chain or "lax" in chain:
+            return True
+        # x.any() / x.all(): the scalar-bool reduction idiom
+        if (isinstance(n.func, ast.Attribute)
+                and n.func.attr in ("any", "all") and not n.args):
+            return True
+    return False
+
+
+@register
+class TraceSafety(Rule):
+    name = "trace-safety"
+    doc = ("no host syncs or data-dependent Python control flow in "
+           "jit-reachable code; batch per-field device->host reads")
+
+    def check(self, ctx) -> List[Finding]:
+        out: List[Finding] = []
+        for fi in ctx.reach.functions:
+            out += self._scan(fi.src, fi.node, fi.name)
+        for src, lam in ctx.reach.lambdas:
+            out += self._scan(src, lam, "<lambda>")
+        for src in ctx.files:
+            for node in ast.walk(src.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out += self._multi_sync(src, node)
+        return out
+
+    def _scan(self, src, fn, name) -> List[Finding]:
+        np_names = numpy_aliases(src)
+        out = []
+
+        def flag(node, msg):
+            out.append(Finding(self.name, src.rel, node.lineno,
+                               node.col_offset, f"in jit-reachable "
+                               f"`{name}`: {msg}"))
+
+        for n in walk_no_nested(fn):
+            if isinstance(n, ast.Call):
+                if (isinstance(n.func, ast.Attribute)
+                        and n.func.attr == "item" and not n.args):
+                    flag(n, "`.item()` blocks on a device->host transfer "
+                            "inside a traced function")
+                elif (isinstance(n.func, ast.Name)
+                        and n.func.id in ("int", "float", "bool")
+                        and n.args and not _static_safe(n.args[0])):
+                    flag(n, f"`{n.func.id}(...)` on a value that may be a "
+                            f"tracer forces a host sync (or a trace "
+                            f"error); keep it as a device scalar")
+                elif (isinstance(n.func, ast.Attribute)
+                        and n.func.attr in ("asarray", "array")
+                        and root_name(n.func) in np_names
+                        and n.args
+                        and not isinstance(n.args[0], (ast.Constant,
+                                                       ast.List,
+                                                       ast.Tuple))):
+                    flag(n, f"`{root_name(n.func)}.{n.func.attr}` converts "
+                            f"a traced value to numpy (host sync under "
+                            f"trace); use jnp")
+            elif isinstance(n, (ast.If, ast.While)) and _traced_test(n.test):
+                flag(n, "data-dependent Python `if`/`while` on a traced "
+                        "value; branch with jnp.where / lax.cond")
+        return out
+
+    def _multi_sync(self, src, fn) -> List[Finding]:
+        """Even host-side, fetching N fields of one device struct as N
+        ``np.asarray(x.field)`` calls costs N transfers; ``jax.device_get``
+        moves the struct once (the scheduler decode-loop class of bug)."""
+        np_names = numpy_aliases(src)
+        groups = {}
+        for n in walk_no_nested(fn):
+            if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+                    and n.func.attr in ("asarray", "array")
+                    and root_name(n.func) in np_names and n.args
+                    and isinstance(n.args[0], ast.Attribute)
+                    and isinstance(n.args[0].value, ast.Name)):
+                groups.setdefault(n.args[0].value.id, []).append(
+                    (n, n.args[0].attr))
+        out = []
+        for base, uses in groups.items():
+            attrs = sorted({a for _, a in uses})
+            if len(attrs) >= 2:
+                node = min((n for n, _ in uses),
+                           key=lambda n: (n.lineno, n.col_offset))
+                out.append(Finding(
+                    self.name, src.rel, node.lineno, node.col_offset,
+                    f"{len(uses)} separate device->host transfers of "
+                    f"`{base}.{{{', '.join(attrs)}}}`; fetch the struct "
+                    f"once with `jax.device_get({base})`"))
+        return out
+
+
+# --------------------------------------------------------------------------
+# rule 2: donation
+# --------------------------------------------------------------------------
+
+@register
+class Donation(Rule):
+    name = "donation"
+    doc = ("every jax.jit donate_argnums site carries a `# speclint: "
+           "donates=<names>` annotation matching the resolved signature; "
+           "pallas input_output_aliases literals are range-checked")
+
+    def check(self, ctx) -> List[Finding]:
+        out: List[Finding] = []
+        for src in ctx.files:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.Call):
+                    if last_name(node.func) == "jit":
+                        out += self._check_jit(ctx, src, node)
+                    elif last_name(node.func) == "pallas_call":
+                        out += self._check_aliases(src, node)
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    out += self._check_decorators(ctx, src, node)
+        return out
+
+    # -- helpers ----------------------------------------------------------
+
+    @staticmethod
+    def _const_indices(node):
+        """donate_argnums literal -> tuple of ints, or None if dynamic."""
+        elts = (node.elts if isinstance(node, (ast.Tuple, ast.List))
+                else [node])
+        idxs = []
+        for e in elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                idxs.append(e.value)
+            else:
+                return None
+        return tuple(idxs)
+
+    @staticmethod
+    def _annotation(src, node):
+        for line in src.lines[node.lineno - 1:node.end_lineno]:
+            m = DONATES.search(line)
+            if m:
+                return [x.strip() for x in m.group(1).split(",")
+                        if x.strip()]
+        return None
+
+    @staticmethod
+    def _signatures(ctx, target):
+        """Positional parameter-name lists a jit target may resolve to
+        (``self``/``cls`` dropped for bound methods); None per entry when
+        the target takes ``*args``."""
+        sigs = []
+        if isinstance(target, ast.Lambda):
+            cands = [target.args]
+        else:
+            nm = last_name(target)
+            cands = [fi.node.args for fi in ctx.reach.by_name.get(nm, ())]
+        for a in cands:
+            if a.vararg is not None:
+                sigs.append(None)
+                continue
+            names = [p.arg for p in a.posonlyargs + a.args]
+            if names and names[0] in ("self", "cls"):
+                names = names[1:]
+            sigs.append(names)
+        return sigs
+
+    def _verify(self, ctx, src, call, donate_node, targets):
+        idxs = self._const_indices(donate_node)
+        if idxs is None:          # dynamic donate tuple: nothing to pin
+            return []
+        annot = self._annotation(src, call)
+        line, col = call.lineno, call.col_offset
+        sigs = [s for t in targets for s in self._signatures(ctx, t)]
+        if not sigs:
+            if annot is None:
+                return [Finding(
+                    self.name, src.rel, line, col,
+                    f"donate_argnums={idxs} on a target speclint cannot "
+                    f"resolve; pin the donated parameter names with "
+                    f"`# speclint: donates=<name,...>` on the call")]
+            return []
+        if annot is None:
+            return [Finding(
+                self.name, src.rel, line, col,
+                f"donate_argnums={idxs} has no `# speclint: "
+                f"donates=<name,...>` annotation; donation indices drift "
+                f"silently when the signature changes")]
+        out = []
+        matched = False
+        for names in sigs:
+            if names is None:     # *args target: the annotation is the pin
+                matched = True
+                continue
+            if any(i >= len(names) for i in idxs):
+                out.append(Finding(
+                    self.name, src.rel, line, col,
+                    f"donate index {max(idxs)} out of range for "
+                    f"positional signature ({', '.join(names)})"))
+                continue
+            if [names[i] for i in idxs] == annot:
+                matched = True
+        if not matched and not out:
+            donated = " or ".join(
+                "(" + ", ".join(names[i] for i in idxs
+                                if i < len(names)) + ")"
+                for names in sigs if names is not None)
+            out.append(Finding(
+                self.name, src.rel, line, col,
+                f"donation annotation drift: donate_argnums={idxs} "
+                f"donates {donated} but the annotation says "
+                f"({', '.join(annot)})"))
+        return out
+
+    # -- jit call sites ---------------------------------------------------
+
+    def _check_jit(self, ctx, src, call):
+        donate = next((kw.value for kw in call.keywords
+                       if kw.arg == "donate_argnums"), None)
+        if donate is None:
+            return []
+        targets = func_targets(call.args[0]) if call.args else []
+        return self._verify(ctx, src, call, donate, targets)
+
+    def _check_decorators(self, ctx, src, fn):
+        """``@partial(jax.jit, donate_argnums=...)`` / ``@jax.jit(...)``
+        decorators donate the decorated def's own parameters."""
+        out = []
+        for dec in fn.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            names = {last_name(x) for x in ast.walk(dec.func)
+                     if isinstance(x, (ast.Name, ast.Attribute))}
+            names |= {last_name(a) for a in dec.args
+                      if isinstance(a, (ast.Name, ast.Attribute))}
+            if "jit" not in names:
+                continue
+            donate = next((kw.value for kw in dec.keywords
+                           if kw.arg == "donate_argnums"), None)
+            if donate is not None:
+                out += self._verify(ctx, src, dec, donate,
+                                    [ast.Name(id=fn.name)])
+        return out
+
+    # -- pallas aliasing --------------------------------------------------
+
+    def _check_aliases(self, src, call):
+        alias = next((kw.value for kw in call.keywords
+                      if kw.arg == "input_output_aliases"), None)
+        if not isinstance(alias, ast.Dict):
+            return []
+        pairs = []
+        for k, v in zip(alias.keys, alias.values):
+            if (isinstance(k, ast.Constant) and isinstance(k.value, int)
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, int)):
+                pairs.append((k.value, v.value))
+            else:
+                return []         # computed indices: not statically checkable
+        out = []
+        line, col = call.lineno, call.col_offset
+        outs = [v for _, v in pairs]
+        if len(set(outs)) != len(outs):
+            out.append(Finding(
+                self.name, src.rel, line, col,
+                f"input_output_aliases maps two inputs onto one output "
+                f"buffer ({sorted(outs)}); aliases must be one-to-one"))
+        n_out = None
+        shape = next((kw.value for kw in call.keywords
+                      if kw.arg == "out_shape"), None)
+        if isinstance(shape, (ast.Tuple, ast.List)):
+            n_out = len(shape.elts)
+        elif isinstance(shape, ast.Call):
+            n_out = 1
+        for i, o in pairs:
+            if i < 0 or o < 0 or (n_out is not None and o >= n_out):
+                out.append(Finding(
+                    self.name, src.rel, line, col,
+                    f"input_output_aliases entry {{{i}: {o}}} is out of "
+                    f"range for {n_out} output(s)"))
+        return out
+
+
+# --------------------------------------------------------------------------
+# rule 3: proposer-protocol
+# --------------------------------------------------------------------------
+
+@register
+class ProposerProtocol(Rule):
+    name = "proposer-protocol"
+    doc = ("Proposer subclasses declare consumes_key/q_kind/"
+           "supports_prefix, implement the protocol methods, and keep "
+           "state_axes structurally aligned with init_state")
+
+    REQUIRED_ATTRS = ("consumes_key", "q_kind", "supports_prefix")
+    REQUIRED_METHODS = ("init_state", "prime", "propose", "observe")
+    Q_KINDS = {"mprob", "logits"}
+
+    def check(self, ctx) -> List[Finding]:
+        out: List[Finding] = []
+        for src in ctx.files:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.ClassDef) and any(
+                        last_name(b) == "Proposer" for b in node.bases):
+                    out += self._check_class(src, node)
+        return out
+
+    @staticmethod
+    def _dict_return_keys(fn):
+        """Key sets of every ``return { literal }`` in ``fn`` (nested defs
+        excluded); dicts with computed keys are skipped."""
+        keysets = []
+        for n in walk_no_nested(fn):
+            if isinstance(n, ast.Return) and isinstance(n.value, ast.Dict):
+                keys = [k.value for k in n.value.keys
+                        if isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)]
+                if len(keys) == len(n.value.keys):
+                    keysets.append(frozenset(keys))
+        return keysets
+
+    def _check_class(self, src, cls) -> List[Finding]:
+        out = []
+        attrs, methods = {}, {}
+        for stmt in cls.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        attrs[t.id] = stmt
+            elif isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                attrs[stmt.target.id] = stmt
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                methods[stmt.name] = stmt
+
+        def flag(node, msg):
+            out.append(Finding(self.name, src.rel, node.lineno,
+                               node.col_offset, f"{cls.name}: {msg}"))
+
+        for a in self.REQUIRED_ATTRS:
+            if a not in attrs:
+                flag(cls, f"must declare `{a}` in the class body — the "
+                          f"engine reads it to pick key-splitting and "
+                          f"verification paths")
+        qk = attrs.get("q_kind")
+        if (isinstance(qk, ast.Assign)
+                and isinstance(qk.value, ast.Constant)
+                and qk.value.value not in self.Q_KINDS):
+            flag(qk, f"q_kind={qk.value.value!r} is not a verifier form "
+                     f"(expected one of {sorted(self.Q_KINDS)})")
+        for m in self.REQUIRED_METHODS:
+            if m not in methods:
+                flag(cls, f"missing protocol method `{m}`")
+        if "init_state" in methods and "state_axes" in methods:
+            init_keys = self._dict_return_keys(methods["init_state"])
+            axes_keys = self._dict_return_keys(methods["state_axes"])
+            if init_keys and axes_keys and not any(
+                    i == a for i in init_keys for a in axes_keys):
+                flag(methods["state_axes"],
+                     f"state_axes keys {sorted(map(sorted, axes_keys))} do "
+                     f"not match init_state keys "
+                     f"{sorted(map(sorted, init_keys))}; the scheduler "
+                     f"merges admission state by these declared axes")
+        return out
+
+
+# --------------------------------------------------------------------------
+# rule 4: pytree-axis
+# --------------------------------------------------------------------------
+
+def _lambda_has_slot_axis_op(lam) -> bool:
+    for n in ast.walk(lam.body):
+        if isinstance(n, ast.Call):
+            if n.args:
+                tail = n.args[-1]
+                if (isinstance(tail, ast.Constant)
+                        and tail.value == 1
+                        and not isinstance(tail.value, bool)):
+                    return True
+            for kw in n.keywords:
+                if (kw.arg == "axis" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value == 1):
+                    return True
+        if isinstance(n, ast.Subscript) and isinstance(n.slice, ast.Tuple):
+            elts = n.slice.elts
+            if (len(elts) >= 2 and isinstance(elts[0], ast.Slice)
+                    and elts[0].lower is None and elts[0].upper is None):
+                return True
+    return False
+
+
+def _is_tree_map(func) -> bool:
+    if last_name(func) == "tree_map":
+        return True
+    return (isinstance(func, ast.Attribute) and func.attr == "map"
+            and bool({"tree", "tree_util"} & attr_chain_names(func.value)))
+
+
+@register
+class PytreeAxis(Rule):
+    name = "pytree-axis"
+    doc = ("no blanket per-slot (axis 1) tree.map over a cache pytree "
+           "without first splitting off pool-form `_pages` leaves")
+
+    GUARDS = ("PAGES_KEY", "_pages", "split_pages", '"k" in', "'k' in")
+
+    def check(self, ctx) -> List[Finding]:
+        out: List[Finding] = []
+        for src in ctx.files:
+            for fn in ast.walk(src.tree):
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                seg = src.segment(fn)
+                if any(g in seg for g in self.GUARDS):
+                    continue      # the function discriminates leaf layouts
+                for n in walk_no_nested(fn):
+                    if not (isinstance(n, ast.Call)
+                            and _is_tree_map(n.func) and len(n.args) >= 2):
+                        continue
+                    names = [last_name(a) or "" for a in n.args[1:]]
+                    if not any("cache" in nm.lower() for nm in names):
+                        continue
+                    if (isinstance(n.args[0], ast.Lambda)
+                            and _lambda_has_slot_axis_op(n.args[0])):
+                        out.append(Finding(
+                            self.name, src.rel, n.lineno, n.col_offset,
+                            f"axis-1 (per-slot) tree.map over cache pytree "
+                            f"`{next(nm for nm in names if 'cache' in nm.lower())}` "
+                            f"with no pool-form guard; paged `_pages` "
+                            f"leaves are [units, n_blocks, ...] pool form "
+                            f"with NO slot axis — split them off first "
+                            f"(the PR-4/PR-5 cache_pspecs / draft-paged "
+                            f"bug class)"))
+        return out
+
+
+# --------------------------------------------------------------------------
+# rule 5: kernel-static-shape
+# --------------------------------------------------------------------------
+
+def _has_traced_call(e, tainted) -> bool:
+    for n in ast.walk(e):
+        if isinstance(n, ast.Call):
+            chain = attr_chain_names(n.func)
+            if {"jnp", "lax"} & chain or "astype" in chain:
+                return True
+        elif isinstance(n, ast.Name) and n.id in tainted:
+            return True
+    return False
+
+
+def _tainted_names(fn) -> set:
+    """Names assigned (in source order) from expressions touching jnp/lax
+    — a single forward pass; good enough for straight-line launcher code."""
+    tainted: set = set()
+    assigns = sorted(
+        (n for n in ast.walk(fn)
+         if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign))),
+        key=lambda n: (n.lineno, n.col_offset))
+    for st in assigns:
+        if st.value is None or not _has_traced_call(st.value, tainted):
+            continue
+        targets = st.targets if isinstance(st, ast.Assign) else [st.target]
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    tainted.add(n.id)
+    return tainted
+
+
+@register
+class KernelStaticShape(Rule):
+    name = "kernel-static-shape"
+    doc = ("BlockSpec block shapes and grid extents come from config "
+           "constants and static shapes, never traced values")
+
+    GRID_OWNERS = {"pallas_call", "GridSpec", "PrefetchScalarGridSpec"}
+
+    def check(self, ctx) -> List[Finding]:
+        out: List[Finding] = []
+        for src in ctx.files:
+            if "pallas" not in src.text:
+                continue
+            for fn in ast.walk(src.tree):
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out += self._check_fn(src, fn)
+        return out
+
+    def _check_fn(self, src, fn) -> List[Finding]:
+        tainted = _tainted_names(fn)
+        out = []
+        for n in walk_no_nested(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            nm = last_name(n.func)
+            if nm == "BlockSpec" and n.args and \
+                    isinstance(n.args[0], (ast.Tuple, ast.List)):
+                for el in n.args[0].elts:
+                    if _has_traced_call(el, tainted):
+                        out.append(Finding(
+                            self.name, src.rel, el.lineno, el.col_offset,
+                            "BlockSpec block shape element is built from "
+                            "a traced value; block shapes must be static "
+                            "(config constants / x.shape), the §2 one-"
+                            "compiled-graph constraint"))
+            if nm in self.GRID_OWNERS:
+                grid = next((kw.value for kw in n.keywords
+                             if kw.arg == "grid"), None)
+                elts = (grid.elts if isinstance(grid, (ast.Tuple, ast.List))
+                        else [grid] if grid is not None else [])
+                for el in elts:
+                    if _has_traced_call(el, tainted):
+                        out.append(Finding(
+                            self.name, src.rel, el.lineno, el.col_offset,
+                            "grid extent is built from a traced value; "
+                            "grids must be static so the kernel keeps one "
+                            "compiled graph (§2)"))
+        return out
