@@ -15,9 +15,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (bench_fig34_speedup, bench_kv_quant,
-                            bench_prefix_cache, bench_proposers,
-                            bench_sampling, bench_serving,
+    from benchmarks import (bench_families, bench_fig34_speedup,
+                            bench_kv_quant, bench_prefix_cache,
+                            bench_proposers, bench_sampling, bench_serving,
                             bench_table2_heads, roofline)
     suites = [
         ("table2", bench_table2_heads.run),
@@ -27,6 +27,7 @@ def main() -> None:
         ("sampling", bench_sampling.run),
         ("prefix_cache", bench_prefix_cache.run),
         ("proposers", bench_proposers.run),
+        ("families", bench_families.run),
         ("roofline", roofline.run),
     ]
     print("name,us_per_call,derived")

@@ -46,7 +46,9 @@ class SchedulerParams:
       pieces prefilled through ``SpecEngine.suffix_prefill`` and
       interleaved with decode steps, so per-step latency stays bounded by
       ``B * chunk_size`` whatever the prompt length (0 disables; requires
-      a ``supports_prefix`` proposer and an attention-only family).
+      a ``supports_prefix`` proposer; any family except encdec — SSM
+      state survives interleaving via the checkpointed rollback of
+      DESIGN.md §17).
     * ``preemption`` — paged layout only: admission allocates blocks
       optimistically (prompt + one step of slack, not the worst case),
       decode grows a slot's table on demand, and pool exhaustion preempts

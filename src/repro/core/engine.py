@@ -546,9 +546,12 @@ def _squeeze_spec(model, cfg, spec_cache, lengths):
     Attn entries drop only the in-flight ``*_new`` rows; persistent leaves
     (k/v and, under the int8 cache layout, k_scale/v_scale — DESIGN.md §10)
     pass through untouched, as does the paged layout's ``_pages`` block-
-    table state (DESIGN.md §12).
+    table state (DESIGN.md §12).  SSM entries additionally drop the
+    speculation-root checkpoint leaves (DESIGN.md §17): a T=1 AR step
+    always accepts its single token, so the checkpoint is dead here and
+    the persistent cache never holds it.
     """
-    from repro.models.transformer import PAGES_KEY
+    from repro.models.transformer import PAGES_KEY, SSM_CKPT
 
     def keep(entry):
         return {n: x for n, x in entry.items() if not n.endswith("_new")}
@@ -556,8 +559,12 @@ def _squeeze_spec(model, cfg, spec_cache, lengths):
     def fix_entry(entry):
         if "k" in entry:
             return keep(entry)
-        return {k: v[:, :, 0] for k, v in entry.items()}
+        return {k: v[:, :, 0] for k, v in entry.items()
+                if not k.endswith(SSM_CKPT)}
     if cfg.family == "encdec":
-        return {"self": keep(spec_cache["self"]), "cross": spec_cache["cross"]}
+        out = {"self": keep(spec_cache["self"]), "cross": spec_cache["cross"]}
+        if PAGES_KEY in spec_cache:
+            out[PAGES_KEY] = spec_cache[PAGES_KEY]
+        return out
     return {k: (v if k == PAGES_KEY else fix_entry(v))
             for k, v in spec_cache.items()}

@@ -18,7 +18,22 @@ from repro.core import medusa as M
 from repro.core.engine import build_engine
 from repro.distributed.sharding import split_params
 from repro.models.api import get_model
-from repro.serving.scheduler import SpecServer
+from repro.models.frontends import frontend_embeds
+from repro.serving.scheduler import FamilySpecServer, SpecServer
+
+
+def proposer_params(kind: str, cfg, model, eng):
+    """Proposer-side weights for ``kind``: Medusa heads, draft-model
+    weights, or nothing (the train-free n-gram lookup)."""
+    if kind == "medusa":
+        pp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg,
+                                           eng.tb.K))
+    elif kind == "draft":
+        pp, _ = split_params(model.init_params(jax.random.PRNGKey(1),
+                                               eng.proposer.dc))
+    else:
+        pp = None
+    return pp
 
 
 def main():
@@ -36,6 +51,13 @@ def main():
     ap.add_argument("--gamma", type=int, default=4,
                     help="chain length for the draft/ngram proposers "
                          "(medusa uses its static tree)")
+    ap.add_argument("--families", default="",
+                    help="comma-separated proposer kinds (e.g. "
+                         "'medusa,ngram,draft'): serve through one "
+                         "FamilySpecServer with a slot-group lane per kind "
+                         "— each lane owns its proposer and compiled step "
+                         "graphs; requests round-robin across lanes and "
+                         "--proposer is ignored (DESIGN.md §17)")
     ap.add_argument("--admission", default="batched",
                     choices=("batched", "serial"),
                     help="scheduler v2 batched bucketed prefill (default) "
@@ -89,39 +111,52 @@ def main():
                                   verify_fusion=args.verify_fusion)
     model = get_model(cfg)
     params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
-    eng = build_engine(cfg, args.proposer, gamma=args.gamma,
-                       accept=args.accept,
-                       sampling=SamplingParams(temperature=args.temperature,
-                                               top_p=args.top_p))
-    # proposer params: Medusa heads, draft-model weights, or nothing (ngram)
-    if args.proposer == "medusa":
-        pp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), cfg,
-                                           eng.tb.K))
-    elif args.proposer == "draft":
-        pp, _ = split_params(model.init_params(jax.random.PRNGKey(1),
-                                               eng.proposer.dc))
-    else:
-        pp = None
-
+    sampling = SamplingParams(temperature=args.temperature, top_p=args.top_p)
     sched = SchedulerParams(chunk_size=args.chunk_size,
                             preemption=args.preemption,
                             adaptive_gamma=args.adaptive_gamma)
-    srv = SpecServer(eng, params, pp, batch_slots=args.slots,
-                     max_len=args.max_len, admission=args.admission,
-                     prefix_cache=args.prefix_cache, sched=sched)
+
+    def make_server(kind):
+        eng = build_engine(cfg, kind, gamma=args.gamma, accept=args.accept,
+                           sampling=sampling)
+        pp = proposer_params(kind, cfg, model, eng)
+        return SpecServer(eng, params, pp, batch_slots=args.slots,
+                          max_len=args.max_len, admission=args.admission,
+                          prefix_cache=args.prefix_cache, sched=sched)
+
+    kinds = [k.strip() for k in args.families.split(",") if k.strip()]
+    if kinds:
+        # one façade, one slot-group lane per proposer kind (DESIGN.md §17)
+        srv = FamilySpecServer({k: make_server(k) for k in kinds})
+    else:
+        srv = make_server(args.proposer)
     rng = np.random.default_rng(0)
     t0 = time.time()
-    rids = [srv.submit(rng.integers(0, cfg.vocab_size,
-                                    size=int(rng.integers(4, 48))).astype(np.int32),
-                       max_new=args.max_new, temperature=args.temperature,
-                       top_p=args.top_p)
-            for _ in range(args.requests)]
+    rids = []
+    for r in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(4, 48))).astype(np.int32)
+        kw = dict(max_new=args.max_new, temperature=args.temperature,
+                  top_p=args.top_p)
+        if cfg.family == "encdec":
+            kw["extra_embeds"] = np.asarray(
+                frontend_embeds(cfg, 1, key=jax.random.PRNGKey(r))[0],
+                np.float32)
+        if kinds:
+            kw["group"] = kinds[r % len(kinds)]   # round-robin across lanes
+        rids.append(srv.submit(prompt, **kw))
     iters = srv.run()
     dt = time.time() - t0
     done = [srv.result(r) for r in rids]
     toks = sum(len(r.output) for r in done if r.status == "done")
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({iters} scheduler iterations, {toks/dt:.1f} tok/s on CPU)")
+    if kinds:
+        for k in kinds:
+            st = srv.stats[k]
+            print(f"lane {k}: {st['admitted']} admissions, {st['steps']} "
+                  f"decode steps in {st['prefill_calls']} prefill calls")
+        return
     print(f"proposer={args.proposer} admission={args.admission}: "
           f"{srv.stats['admitted']} slot admissions (incl. retries) in "
           f"{srv.stats['prefill_calls']} prefill calls")

@@ -11,10 +11,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import paging as P
 from repro.kernels import quant as Q
 from repro.models import layers as L
-from repro.models.transformer import (_commit_attn_entry, _read_cache,
-                                      _update_rows, _write_prefix, tree_stack)
+from repro.models.transformer import (PAGES_KEY, _commit_attn_entry,
+                                      _read_cache, _update_rows, _write_prefix,
+                                      split_pages, tree_stack)
 from repro.distributed.sharding import Param, logical
 
 
@@ -127,37 +129,48 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None,
     — it is written once per request and O(frontend_len), not swept per
     step, so quantizing it saves nothing on the memory model's traffic term.
 
-    The paged layout (DESIGN.md §12) is decoder-only-transformer scoped:
-    the enc-dec family keeps dense caches.
+    Under ``cfg.paged`` (DESIGN.md §12/§17) only the *self*-attn entry is
+    pool-form — k/v [nu, n_blocks, page_size, Hkv, D] plus the shared
+    ``"_pages"`` block table [B, max_blocks] — because only the self cache
+    grows with decode length.  The cross cache stays per-slot dense: it is
+    frontend_len rows written once at admission, so block-pooling it buys
+    no reuse and would cost a gather every step.
     """
-    if cfg.paged:
-        raise NotImplementedError(
-            f"{cfg.name}: cache_layout='paged' is not supported for the "
-            "encdec (whisper-style) family — the cross-attention cache is "
-            "written once per request and read every step, so block-pooling "
-            "it saves nothing, and the self-attn paged write path is "
-            "decoder-only-transformer scoped (DESIGN.md §12).  Use "
-            "cache_layout='dense' (optionally with cache_dtype='int8' for "
-            "the self-attn cache, DESIGN.md §10).")
     dt = jnp.dtype(dtype or cfg.resolved_cache_dtype)
     xdt = jnp.dtype(cfg.dtype)
     nu, hd = cfg.num_layers, cfg.resolved_head_dim
     mk = (jax.ShapeDtypeStruct if abstract else (lambda s, d: jnp.zeros(s, d)))
-    self_entry = {"k": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt),
-                  "v": mk((nu, batch, max_len, cfg.num_kv_heads, hd), dt)}
+    out = {}
+    if cfg.paged:
+        ps = cfg.page_size
+        mb = P.blocks_for(max_len, ps)
+        nb = (1 + batch * mb) if n_blocks is None else int(n_blocks)
+        kv_shape = (nu, nb, ps, cfg.num_kv_heads, hd)
+        sc_shape = (nu, nb, ps, cfg.num_kv_heads, 1)
+        if abstract:
+            table = jax.ShapeDtypeStruct((batch, mb), jnp.int32)
+        elif n_blocks is None:
+            table = P.identity_table(batch, mb)
+        else:
+            table = jnp.zeros((batch, mb), jnp.int32)
+        out[PAGES_KEY] = {"table": table}
+    else:
+        kv_shape = (nu, batch, max_len, cfg.num_kv_heads, hd)
+        sc_shape = (nu, batch, max_len, cfg.num_kv_heads, 1)
+    self_entry = {"k": mk(kv_shape, dt), "v": mk(kv_shape, dt)}
     if Q.is_quantized(dt):
-        self_entry["k_scale"] = mk((nu, batch, max_len, cfg.num_kv_heads, 1),
-                                   jnp.float32)
-        self_entry["v_scale"] = mk((nu, batch, max_len, cfg.num_kv_heads, 1),
-                                   jnp.float32)
-    return {
-        "self": self_entry,
-        "cross": {"k": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), xdt),
-                  "v": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), xdt)},
-    }
+        self_entry["k_scale"] = mk(sc_shape, jnp.float32)
+        self_entry["v_scale"] = mk(sc_shape, jnp.float32)
+    out["self"] = self_entry
+    out["cross"] = {
+        "k": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), xdt),
+        "v": mk((nu, batch, cfg.frontend_len, cfg.num_kv_heads, hd), xdt)}
+    return out
 
 
 def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None):
+    cache, pages = split_pages(cache)
+    table = None if pages is None else pages["table"]
     B, Sp = tokens.shape
     enc_out = encode(params, cfg, extra_embeds)
     x = _dec_embed(params, cfg, tokens, jnp.arange(Sp)[None, :])
@@ -166,7 +179,8 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
         unit_p, cache_u = xs
         hh = L.apply_norm(unit_p["norm1"], h, cfg)
         y, (k, v) = L.attention_full(unit_p["self_attn"], hh, cfg, return_kv=True)
-        self_entry = _write_prefix(cache_u["self"], k, v)
+        self_entry = _write_prefix(cache_u["self"], k, v, table=table,
+                                   page_size=cfg.page_size)
         h = h + y
         hh = L.apply_norm(unit_p["norm_x"], h, cfg)
         xk, xv = L.cross_kv(unit_p["cross_attn"], enc_out, cfg)
@@ -179,6 +193,8 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, extra_embeds=None)
         return h, new_cache
 
     x, new_cache = jax.lax.scan(body, x, (params["dec_units"], cache))
+    if pages is not None:
+        new_cache[PAGES_KEY] = pages
     x = L.apply_norm(params["final_norm"], x, cfg)
     last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)[:, 0]
     return last, new_cache
@@ -188,13 +204,23 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
            use_kernel: bool = False, deferred: bool = False):
     del deferred  # enc-dec keeps the write-then-attend path (tiny caches)
     B, T = tokens.shape
-    S_max = cache["self"]["k"].shape[2]
+    cache, pages = split_pages(cache)
+    table = None if pages is None else pages["table"]
+    # dense: the S axis; paged: the table's reach (DESIGN.md §12)
+    S_max = (table.shape[1] * cfg.page_size if table is not None
+             else cache["self"]["k"].shape[2])
     positions = lengths[:, None] + depths[None, :]
     x = _dec_embed(params, cfg, tokens, positions)
     masks = None
     if not use_kernel:
         masks = jax.vmap(lambda l: L.decode_mask(tree_mask, l, T, S_max))(lengths)
     scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    if table is not None:
+        def upd(c, rows):
+            return P.scatter_rows(c, table, rows, lengths, cfg.page_size)
+    else:
+        def upd(c, rows):
+            return _update_rows(c, rows, lengths)
 
     def body(h, xs):
         unit_p, cache_u = xs
@@ -210,22 +236,22 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
             vq, vs = Q.quantize_rows(v)
             k = Q.dequantize(kq, ks, k.dtype)
             v = Q.dequantize(vq, vs, v.dtype)
-            new_entry["k"] = _update_rows(entry["k"], kq, lengths)
-            new_entry["v"] = _update_rows(entry["v"], vq, lengths)
-            new_entry["k_scale"] = _update_rows(entry["k_scale"], ks, lengths)
-            new_entry["v_scale"] = _update_rows(entry["v_scale"], vs, lengths)
+            new_entry["k"] = upd(entry["k"], kq)
+            new_entry["v"] = upd(entry["v"], vq)
+            new_entry["k_scale"] = upd(entry["k_scale"], ks)
+            new_entry["v_scale"] = upd(entry["v_scale"], vs)
         else:
-            new_entry["k"] = _update_rows(entry["k"], k, lengths)
-            new_entry["v"] = _update_rows(entry["v"], v, lengths)
+            new_entry["k"] = upd(entry["k"], k)
+            new_entry["v"] = upd(entry["v"], v)
         if use_kernel:
             from repro.kernels.ops import tree_attention
             out = tree_attention(q, new_entry["k"], new_entry["v"], tree_mask,
                                  lengths, scale,
                                  k_scale=new_entry.get("k_scale"),
                                  v_scale=new_entry.get("v_scale"),
-                                 k_tree=k, v_tree=v)
+                                 k_tree=k, v_tree=v, block_tables=table)
         else:
-            ck, cv = _read_cache(new_entry, q.dtype)
+            ck, cv = _read_cache(new_entry, q.dtype, table=table)
             out = L._gqa_scores_to_out(q, ck, cv, masks, scale)
         h = h + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(h.dtype))
         hh = L.apply_norm(unit_p["norm_x"], h, cfg)
@@ -238,13 +264,21 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
         return h, {"self": new_entry, "cross": cache_u["cross"]}
 
     x, spec_cache = jax.lax.scan(body, x, (params["dec_units"], cache))
+    if pages is not None:
+        spec_cache[PAGES_KEY] = pages
     x = L.apply_norm(params["final_norm"], x, cfg)
     return x, spec_cache
 
 
 def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
-    new_cache = {"self": _commit_attn_entry(spec_cache["self"], lengths, path_slots),
+    spec_cache, pages = split_pages(spec_cache)
+    table = None if pages is None else pages["table"]
+    new_cache = {"self": _commit_attn_entry(spec_cache["self"], lengths,
+                                            path_slots, table=table,
+                                            page_size=cfg.page_size),
                  "cross": spec_cache["cross"]}
+    if pages is not None:
+        new_cache[PAGES_KEY] = pages
     adv = acc if active is None else jnp.where(active, acc, 0)
     return new_cache, lengths + adv
 

@@ -31,6 +31,15 @@ from repro.models import ssm as S
 # it off first (DESIGN.md §12)
 PAGES_KEY = "_pages"
 
+# suffix marking the speculation-root SSM checkpoint inside a spec cache
+# (DESIGN.md §17): ``decode`` stashes the pre-chain recurrent state under
+# ``<name> + SSM_CKPT`` and ``commit`` selects it (over the advanced
+# per-prefix states) for rows whose effective accepted length is zero, so
+# masked/inactive serving slots never absorb the chain's dead recurrence
+# writes.  Checkpoint keys exist only in the transient spec cache between
+# ``decode`` and ``commit`` — never in the persistent cache.
+SSM_CKPT = "_ckpt"
+
 
 def split_pages(cache):
     """(layer_entries, pages_or_None).  ``pages`` is ``{"table":
@@ -430,10 +439,18 @@ def decode(params, cfg: ModelConfig, cache, tokens, lengths, tree_mask, depths,
                     p["attn"], hh, cfg, cache_u[f"pos{i}"], lengths, masks,
                     tree_mask, depths, use_kernel, deferred, table=table)
             else:
+                ent = cache_u[f"pos{i}"]
                 y, (cxs, cbcs, ssts) = S.mamba2_decode(
-                    p["ssm"], hh, cfg, cache_u[f"pos{i}"]["conv_x"],
-                    cache_u[f"pos{i}"]["conv_bc"], cache_u[f"pos{i}"]["ssm"])
-                new_cache[f"pos{i}"] = {"conv_x": cxs, "conv_bc": cbcs, "ssm": ssts}
+                    p["ssm"], hh, cfg, ent["conv_x"], ent["conv_bc"],
+                    ent["ssm"])
+                # per-prefix advanced states + the speculation-root
+                # checkpoint: commit's rollback select (DESIGN.md §17)
+                new_cache[f"pos{i}"] = {
+                    "conv_x": cxs, "conv_bc": cbcs, "ssm": ssts,
+                    "conv_x" + SSM_CKPT: ent["conv_x"],
+                    "conv_bc" + SSM_CKPT: ent["conv_bc"],
+                    "ssm" + SSM_CKPT: ent["ssm"],
+                }
             h = h + y
             if ffn != "none":
                 hh = L.apply_norm(p["norm2"], h, cfg)
@@ -598,15 +615,21 @@ def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
     path_slots [B, K+1]: tree-node slots of the best path (0..T-1);
     acc [B] in [1, K+1].  Attn: gather best-path KV rows and write them back
     at [len, len+K+1) (rows past ``acc`` are dead and will be overwritten).
-    SSM: select the state after ``acc`` tokens of the chain.
+    SSM: select the state after ``acc`` tokens of the chain, from the
+    per-prefix scan states plus the speculation-root checkpoint stashed by
+    ``decode`` (DESIGN.md §17).
 
     ``active`` [B] bool (optional) is the serving scheduler's masked-commit
     path (DESIGN.md §9): rows whose slot is empty/finished do not advance
     ``lengths``, so idle slots stay frozen inside the shared static step.
-    Their (dead) row writes still happen — under the dense layout admission
-    replaces the whole slot row, and under the paged layout an idle slot's
-    zeroed table sinks them into the reserved trash block (DESIGN.md §12) —
-    so nothing stale is ever read.
+    Their (dead) attention row writes still happen — under the dense layout
+    admission replaces the whole slot row, and under the paged layout an
+    idle slot's zeroed table sinks them into the reserved trash block
+    (DESIGN.md §12) — so nothing stale is ever read.  SSM recurrent state
+    has no dead-write sink, so inactive rows instead *restore* the
+    speculation-root checkpoint (effective acc = 0), which is what lets
+    SSM/hybrid families share the step with chunked prefill and idle slots
+    (DESIGN.md §17).
     Returns (cache, new_lengths).
     """
     spec_cache, pages = split_pages(spec_cache)
@@ -618,11 +641,21 @@ def commit(cfg: ModelConfig, spec_cache, lengths, path_slots, acc, active=None):
                                                 table=table,
                                                 page_size=cfg.page_size)
         else:
-            def sel(st):  # [nu, B, T, ...] -> [nu, B, ...]
-                idx = (acc - 1)[None, :, None]
+            # checkpointed SSM rollback (DESIGN.md §17): prepend the
+            # speculation-root snapshot at chain index 0 and select with the
+            # *effective* accepted length — rows masked out of this step
+            # (acc forced to 0) restore the root state bitwise instead of
+            # absorbing the chain's dead recurrence writes
+            eff = acc if active is None else jnp.where(active, acc, 0)
+
+            def sel(name, st):  # [nu, B, T, ...] -> [nu, B, ...]
+                root = entry[name + SSM_CKPT].astype(st.dtype)
+                full = jnp.concatenate([root[:, :, None], st], axis=2)
+                idx = eff[None, :, None]
                 idx = idx.reshape((1, -1, 1) + (1,) * (st.ndim - 3))
-                return jnp.take_along_axis(st, idx, axis=2)[:, :, 0]
-            new_cache[pos] = {k: sel(v) for k, v in entry.items()}
+                return jnp.take_along_axis(full, idx, axis=2)[:, :, 0]
+            new_cache[pos] = {k: sel(k, v) for k, v in entry.items()
+                              if not k.endswith(SSM_CKPT)}
     if pages is not None:
         new_cache[PAGES_KEY] = pages
     adv = acc if active is None else jnp.where(active, acc, 0)

@@ -181,6 +181,10 @@ class Request:
     # mixed batch of greedy and sampled requests shares one static step
     temperature: float = 0.0
     top_p: float = 1.0
+    # encdec only: precomputed frame embeddings [frontend_len, frontend_dim]
+    # (the stub encoder input).  Host-retained for the request's lifetime so
+    # preemption recovery can re-run the encoder pass (DESIGN.md §17)
+    frames: Optional[np.ndarray] = None
     submitted_at: float = field(default_factory=time.monotonic)
     output: List[int] = field(default_factory=list)
     steps: int = 0
@@ -281,8 +285,15 @@ class SpecServer:
             raise ValueError("prefix_cache requires cache_layout='paged'")
         if prefix_cache and (self.cfg.num_ssm_layers > 0
                              or self.cfg.family == "encdec"):
-            raise ValueError("prefix_cache shares KV blocks only; SSM/encdec "
-                             "state cannot be reconstructed from them")
+            # SSM/hybrid slots now decode and chunk-prefill safely under the
+            # checkpointed rollback (DESIGN.md §17), but prefix-cache
+            # admission *skips* prefill for matched tokens — a shared KV
+            # block carries no recurrent/cross state to restore from, so a
+            # cache hit would leave the slot's SSM (or encoder) state cold.
+            raise ValueError(
+                "prefix_cache shares KV blocks only; SSM/encdec state "
+                "cannot be reconstructed from them (DESIGN.md §17 — use "
+                "chunked prefill / preemption for these families)")
         if prefix_cache and not engine.proposer.supports_prefix:
             raise ValueError(
                 f"prefix_cache needs a proposer that can be primed from a "
@@ -298,13 +309,17 @@ class SpecServer:
                 f"chunked prefill rides the suffix_prefill path; "
                 f"{type(engine.proposer).__name__} cannot be primed from a "
                 "suffix (DESIGN.md §13)")
-        if self.chunk and (self.cfg.num_ssm_layers > 0
-                           or self.cfg.family == "encdec"):
+        if self.chunk and self.cfg.family == "encdec":
+            # SSM/hybrid families are chunk-safe since the checkpointed
+            # rollback (DESIGN.md §17): commit restores the speculation-root
+            # state on every masked row, so interleaving chunks with live
+            # decode slots can no longer corrupt recurrent state.  Encdec
+            # stays refused: its cross-attn cache comes from the encoder
+            # pass inside whole-prompt prefill, which cannot be chunked.
             raise ValueError(
-                "chunked prefill needs an attention-only family: the "
-                "commit inside suffix_prefill selects SSM state for ALL "
-                "rows, so interleaving chunks with live decode slots would "
-                "corrupt them (DESIGN.md §14)")
+                "chunked prefill cannot split an encoder-decoder prompt: "
+                "the cross-attention cache is built by the encoder pass "
+                "inside whole-prompt prefill (DESIGN.md §17)")
         self.preemption = bool(self.sched.preemption)
         if self.preemption and not self.paged:
             raise ValueError("preemption (optimistic block allocation) "
@@ -350,9 +365,10 @@ class SpecServer:
             self._admit_paged_impl if self.paged else self._admit_bucket_impl,
             donate_argnums=(7, 8, 9, 10, 11))  # speclint: donates=cache,lengths,base,pstate,n_out
         self._prefill_jit = jax.jit(
-            lambda p, pp, t, l, c, key, temp, topp, st: self.engine.prefill(
-                p, pp, t, l, c, key=key, temperature=temp, top_p=topp,
-                state=st))
+            lambda p, pp, t, l, c, key, temp, topp, st, fr=None:
+                self.engine.prefill(
+                    p, pp, t, l, c, extra_embeds=fr, key=key,
+                    temperature=temp, top_p=topp, state=st))
         self._step_jit = jax.jit(self._serve_step_impl,
                                  donate_argnums=(2, 3, 4, 5, 6))  # speclint: donates=cache,lengths,base,pstate,n_out
         # per-level step graphs (the full-tree level deliberately does NOT
@@ -386,18 +402,43 @@ class SpecServer:
                 # §14 overload counters
                 "chunk_calls": 0, "preemptions": 0, "resumed": 0,
                 "reclaimed_blocks": 0, "grown_blocks": 0,
-                "gamma_steps": {g: 0 for g, _ in self._levels}}
+                "gamma_steps": {g: 0 for g, _ in self._levels},
+                # §17 rollback counter: slot-steps whose SSM recurrent state
+                # was restored from the speculation-root checkpoint (masked
+                # rows of a step/chunk call; 0 for attention-only families)
+                "ssm_restores": 0}
 
     # ------------------------------------------------------------------ API
 
     def submit(self, prompt: np.ndarray, max_new: int, eos_id=None,
                deadline_s=None, max_steps=None, temperature: Optional[float] = None,
-               top_p: Optional[float] = None) -> int:
+               top_p: Optional[float] = None, extra_embeds=None) -> int:
         """``temperature``/``top_p`` take effect when the engine verifies
         with ``accept="sample"`` (DESIGN.md §11); omitted values fall back
         to the engine's ``SamplingParams``, and temperature 0.0 reproduces
-        greedy output exactly.  Greedy/typical engines ignore them."""
+        greedy output exactly.  Greedy/typical engines ignore them.
+
+        ``extra_embeds`` [frontend_len, frontend_dim] is required for the
+        encdec family (the stub encoder's frame embeddings, DESIGN.md §17)
+        and rejected for every other family — decoder-only frontends fold
+        their prefix at prefill and are not per-request state here."""
         sp = self.engine.sampling
+        if self.cfg.family == "encdec":
+            if extra_embeds is None:
+                raise ValueError(
+                    "encdec requests need extra_embeds [frontend_len, "
+                    "frontend_dim]: the encoder pass runs at admission "
+                    "(DESIGN.md §17)")
+            extra_embeds = np.asarray(extra_embeds, np.float32)
+            want = (self.cfg.frontend_len,
+                    self.cfg.frontend_dim or self.cfg.d_model)
+            if extra_embeds.shape != want:
+                raise ValueError(
+                    f"extra_embeds shape {extra_embeds.shape} != {want}")
+        elif extra_embeds is not None:
+            raise ValueError(
+                f"extra_embeds is encdec-only; {self.cfg.family!r} requests "
+                "carry tokens alone")
         if (getattr(self.engine, "verify_fusion", False)
                 and self.engine.accept == "sample"
                 and top_p is not None and top_p != 1.0):
@@ -409,7 +450,8 @@ class SpecServer:
             self._rid, np.asarray(prompt, np.int32), max_new, eos_id,
             deadline_s, max_steps or 4 * max_new,
             temperature=sp.temperature if temperature is None else temperature,
-            top_p=sp.top_p if top_p is None else top_p))
+            top_p=sp.top_p if top_p is None else top_p,
+            frames=extra_embeds))
         return self._rid
 
     def result(self, rid: int) -> Optional[Request]:
@@ -498,7 +540,7 @@ class SpecServer:
 
     def _admit_bucket_impl(self, params, proposer_params, toks, plens, gtemp,
                            gtopp, key, cache, lengths, base, pstate,
-                           n_out, src, mask):
+                           n_out, src, mask, frames=None):
         """Prefill one bucket group [n, bucket] and merge it into the B-slot
         state in the same compiled call.
 
@@ -517,7 +559,8 @@ class SpecServer:
         st_n = self.engine.init_proposer_state(n, self.max_len)
         cache_n, len_n, base_n, st_n = self.engine.prefill(
             params, proposer_params, toks, plens, cache_n,
-            key=key, temperature=gtemp, top_p=gtopp, state=st_n)
+            extra_embeds=frames, key=key, temperature=gtemp, top_p=gtopp,
+            state=st_n)
         srcc = jnp.clip(src, 0, n - 1)
         # safe per-slot merge: this impl is selected only when the cache is
         # dense ([units, B, S, ...] leaves, slot axis 1 everywhere); the
@@ -535,43 +578,48 @@ class SpecServer:
 
     def _admit_paged_impl(self, params, proposer_params, toks, plens, gtemp,
                           gtopp, key, cache, lengths, base, pstate,
-                          n_out, src, mask, gtable):
+                          n_out, src, mask, gtable, frames=None):
         """Paged variant of ``_admit_bucket_impl`` (DESIGN.md §12).
 
         Prefill writes land in the *global* pool through ``gtable``
         [n, max_blocks] (the admitted slots' table rows; padding rows are
         all-zero so their writes sink into the trash block), so the cache
-        merge disappears for pool leaves — only per-slot SSM leaves, the
-        [B]-sized step state and the proposer state still merge by
-        ``src``/``mask``.
+        merge disappears for pool leaves — only per-slot leaves (SSM
+        recurrent state; the encdec cross-attn cache, which has k/v but is
+        [nu, B, ...] dense — DESIGN.md §17), the [B]-sized step state and
+        the proposer state still merge by ``src``/``mask``.
         """
         n = toks.shape[0]
+
+        def per_slot(pos, entry):
+            return pos == "cross" or "k" not in entry
         view = {}
         for pos, entry in cache.items():
             if pos == PAGES_KEY:
                 continue
-            if "k" in entry:
-                view[pos] = entry               # global pool leaves, shared
-            else:                               # per-slot SSM state: fresh
+            if per_slot(pos, entry):            # per-slot state: fresh rows
                 view[pos] = {nm: jnp.zeros((x.shape[0], n) + x.shape[2:],
                                            x.dtype) for nm, x in entry.items()}
+            else:
+                view[pos] = entry               # global pool leaves, shared
         view[PAGES_KEY] = {"table": gtable}
         st_n = self.engine.init_proposer_state(n, self.max_len)
         view, len_n, base_n, st_n = self.engine.prefill(
             params, proposer_params, toks, plens, view,
-            key=key, temperature=gtemp, top_p=gtopp, state=st_n)
+            extra_embeds=frames, key=key, temperature=gtemp, top_p=gtopp,
+            state=st_n)
         srcc = jnp.clip(src, 0, n - 1)
 
         new_cache = {}
         for pos, entry in cache.items():
             if pos == PAGES_KEY:
                 new_cache[pos] = entry          # B-slot table: host-managed
-            elif "k" in entry:
-                new_cache[pos] = view[pos]      # pool updated in place
-            else:
+            elif per_slot(pos, entry):
                 new_cache[pos] = jax.tree.map(
                     lambda b, s: _merge_rows(b, s, srcc, mask, 1),
                     entry, view[pos])
+            else:
+                new_cache[pos] = view[pos]      # pool updated in place
         pstate = jax.tree.map(
             lambda b, s, ax: _merge_rows(b, s, srcc, mask, ax),
             pstate, st_n, self._sax)
@@ -623,12 +671,14 @@ class SpecServer:
         """Copy-on-write device op: pool rows of physical blocks ``src``
         [m] copy into blocks ``dst`` [m] across every attention pool leaf
         (values and int8 scales; one shared block id space — DESIGN.md
-        §12).  Padding pairs are (0, 0): a trash-to-trash no-op."""
+        §12).  Padding pairs are (0, 0): a trash-to-trash no-op.  The
+        encdec ``cross`` entry has k/v but is per-slot dense, not pool-form
+        — block ids never index it (DESIGN.md §17)."""
         def cp(x):
             return x.at[:, dst].set(x[:, src])
         new = {}
         for pos, entry in cache.items():
-            if pos != PAGES_KEY and "k" in entry:
+            if pos != PAGES_KEY and pos != "cross" and "k" in entry:
                 new[pos] = {nm: (cp(x) if nm in ("k", "v", "k_scale",
                                                  "v_scale") else x)
                             for nm, x in entry.items()}
@@ -949,6 +999,10 @@ class SpecServer:
             mask = np.zeros((self.B,), bool)
             gtable = (np.zeros((n, self.blocks_per_slot), np.int32)
                       if self.paged else None)
+            encdec = self.cfg.family == "encdec"
+            gframes = (np.zeros((n, self.cfg.frontend_len,
+                                 self.cfg.frontend_dim or self.cfg.d_model),
+                                np.float32) if encdec else None)
             for j, (i, req, p_ext) in enumerate(grp):
                 toks[j, : len(p_ext)] = p_ext[:bucket]
                 plens[j] = len(p_ext)
@@ -958,8 +1012,12 @@ class SpecServer:
                 mask[i] = True
                 if self.paged:
                     gtable[j] = self._table[i]
+                if encdec:
+                    gframes[j] = req.frames
             self._key, sub = jax.random.split(self._key)
             extra = (jnp.asarray(gtable),) if self.paged else ()
+            if encdec:
+                extra += (jnp.asarray(gframes),)
             (self.cache, self.lengths, self.base, self.pstate,
              self.n_out) = self._admit_jit(
                 self.params, self.proposer_params, jnp.asarray(toks),
@@ -980,10 +1038,12 @@ class SpecServer:
         st1 = self.engine.init_proposer_state(1, self.max_len)
         lengths1 = jnp.asarray([len(p_ext)], jnp.int32)
         self._key, sub = jax.random.split(self._key)
+        fr = (jnp.asarray(req.frames)[None] if req.frames is not None
+              else None)
         cache1, lengths1, base1, st1 = self._prefill_jit(
             self.params, self.proposer_params, jnp.asarray(toks), lengths1,
             cache1, sub, jnp.asarray([req.temperature], jnp.float32),
-            jnp.asarray([req.top_p], jnp.float32), st1)
+            jnp.asarray([req.top_p], jnp.float32), st1, fr)
         self.stats["prefill_calls"] += 1
 
         # scatter the single-row cache/state into this slot along each
@@ -1052,6 +1112,10 @@ class SpecServer:
             jnp.asarray(self._topp))
         self.stats["chunk_calls"] += 1
         self.stats["prefill_calls"] += 1
+        if self.cfg.num_ssm_layers:
+            # every non-chunking slot ran this call masked: its recurrent
+            # state came back from the §17 checkpoint restore
+            self.stats["ssm_restores"] += int(self.B - smask.sum())
         for i, cs in self._chunk_state.items():
             self._len_host[i] = cs["pos"]
             self.stats["prefill_tokens"] += int(nv[i])
@@ -1197,6 +1261,10 @@ class SpecServer:
             maxnew, temp, topp)
         self.stats["steps"] += 1
         self.stats["gamma_steps"][gamma] += 1
+        if self.cfg.num_ssm_layers:
+            # masked slots (empty / mid-chunk) restored their SSM state
+            # from the speculation-root checkpoint this step (§17)
+            self.stats["ssm_restores"] += int((~self._active).sum())
         # one transfer for the whole SlotSync (speclint trace-safety: the
         # old per-field np.asarray calls cost four device round-trips per
         # decode step)
@@ -1314,6 +1382,98 @@ class SpecServer:
         self.pstate = self.engine.init_proposer_state(self.B, self.max_len)
         self._sax = self.engine.proposer.state_axes(self.pstate)
         self.n_out = jnp.zeros((self.B,), jnp.int32)
+
+
+class FamilySpecServer:
+    """Per-request proposer choice behind one serving façade (DESIGN.md §17).
+
+    Slot-group partitioning: each named group is a full ``SpecServer`` lane
+    owning its engine (proposer + compiled step graphs, including the §14
+    adaptive-speculation graph family), its model params, its cache (dense
+    rows or a paged pool) and its slots — so one deployment mixes, say,
+    chat traffic through a Medusa lane, code traffic through the train-free
+    n-gram lane and transcription traffic through a draft-model or encdec
+    lane, and no lane's compiled step shape constrains another's.
+
+    ``submit(..., group=...)`` routes a request to its lane (default: the
+    first group); ``step_once`` advances every busy lane, so lanes
+    interleave at scheduler-iteration granularity.  Façade request ids are
+    lane-independent — results resolve here, never against a lane directly.
+
+    Groups over the same config may share one ``params`` pytree (the arrays
+    are read-only inside jitted calls); groups over different configs —
+    e.g. an encdec transcription lane beside decoder-only chat lanes — are
+    simply different lanes.
+    """
+
+    def __init__(self, groups: Dict[str, SpecServer],
+                 default: Optional[str] = None):
+        if not groups:
+            raise ValueError("FamilySpecServer needs at least one slot group")
+        self.groups: Dict[str, SpecServer] = dict(groups)
+        self.default = next(iter(self.groups)) if default is None else default
+        if self.default not in self.groups:
+            raise ValueError(f"default group {self.default!r} not in "
+                             f"{sorted(self.groups)}")
+        self._rid = 0
+        self._route: Dict[int, tuple] = {}
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               group: Optional[str] = None, **kw) -> int:
+        name = self.default if group is None else group
+        if name not in self.groups:
+            raise KeyError(f"unknown slot group {name!r}; have "
+                           f"{sorted(self.groups)}")
+        inner = self.groups[name].submit(prompt, max_new, **kw)
+        self._rid += 1
+        self._route[self._rid] = (name, inner)
+        return self._rid
+
+    def result(self, rid: int) -> Optional[Request]:
+        route = self._route.get(rid)
+        if route is None:
+            return None
+        name, inner = route
+        return self.groups[name].result(inner)
+
+    def group_of(self, rid: int) -> Optional[str]:
+        route = self._route.get(rid)
+        return None if route is None else route[0]
+
+    @property
+    def busy(self) -> bool:
+        return any(srv.busy for srv in self.groups.values())
+
+    def step_once(self, it: int = 0):
+        """One façade iteration: advance every lane with work in flight.
+        Idle lanes cost nothing — no jitted call is dispatched for them."""
+        for srv in self.groups.values():
+            if srv.busy:
+                srv.step_once(it=it)
+
+    def run(self, max_iters: int = 10_000) -> int:
+        it = 0
+        while self.busy and it < max_iters:
+            self.step_once(it)
+            it += 1
+        return it
+
+    def release_all(self):
+        for srv in self.groups.values():
+            srv.release_all()
+
+    def reset(self):
+        for srv in self.groups.values():
+            srv.reset()
+        self._route.clear()
+        self._rid = 0
+
+    @property
+    def stats(self) -> Dict[str, dict]:
+        """Per-lane stats keyed by group name (lanes are independent
+        servers; summing across heterogeneous lanes would hide which
+        proposer did the work)."""
+        return {name: srv.stats for name, srv in self.groups.items()}
 
 
 # Backwards-compatible name from before the pluggable-proposer refactor

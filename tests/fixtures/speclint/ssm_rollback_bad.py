@@ -1,0 +1,19 @@
+"""Seeded ssm-rollback violation (speclint fixture): a tree-decode step
+writes fresh SSM recurrent state into the spec cache with no
+speculation-root checkpoint — a rejected chain would keep poisoned
+state."""
+import jax
+
+
+def mixer(p, x, conv_st, ssm_st):
+    return x, conv_st, ssm_st
+
+
+def tree_decode(params, cache, tokens, tree_mask, depths):
+    ent = cache["pos0"]
+    y, cx, st = mixer(params, tokens, ent["conv_x"], ent["ssm"])
+    spec = {"conv_x": cx, "conv_bc": ent["conv_bc"], "ssm": st}
+    return y, {"pos0": spec}
+
+
+step = jax.jit(tree_decode)

@@ -1,0 +1,22 @@
+"""Clean ssm-rollback fixture: the same tree-decode state write, but the
+pre-chain state is stashed under the checkpoint suffix so commit can
+restore a rejected chain (DESIGN.md §17)."""
+import jax
+
+SSM_CKPT = "_ckpt"
+
+
+def mixer(p, x, conv_st, ssm_st):
+    return x, conv_st, ssm_st
+
+
+def tree_decode(params, cache, tokens, tree_mask, depths):
+    ent = cache["pos0"]
+    y, cx, st = mixer(params, tokens, ent["conv_x"], ent["ssm"])
+    spec = {"conv_x": cx, "conv_bc": ent["conv_bc"], "ssm": st,
+            "conv_x" + SSM_CKPT: ent["conv_x"],
+            "ssm" + SSM_CKPT: ent["ssm"]}
+    return y, {"pos0": spec}
+
+
+step = jax.jit(tree_decode)

@@ -1,0 +1,75 @@
+"""Regenerate ``tests/golden/encdec_goldens.npz`` — whisper-tiny token
+streams captured when the paged encoder-decoder self-attn cache first
+landed (DESIGN.md §17).
+
+The committed file holds the *dense*-layout outputs (greedy and sampled
+acceptance, fp and int8 self-attn caches) captured alongside the paged
+implementation; ``tests/test_families.py::test_encdec_golden_tokens``
+replays both layouts against it, so any later drift in either the dense
+baseline or the paged gather/scatter path trips the golden, not just the
+dense==paged cross-check.  Rerun only to extend coverage, never to paper
+over a divergence.
+
+  PYTHONPATH=src python tests/golden/capture_encdec_goldens.py
+"""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SamplingParams
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine
+from repro.core.tree import medusa_63
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model
+from repro.models.frontends import frontend_embeds
+
+B, SP, NEW = 2, 8, 16
+
+
+def main():
+    cfg = get_config("whisper-tiny", reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(1), cfg))
+    tb = medusa_63()
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(2), cfg, tb.K))
+    mp["w1"] = jax.random.normal(jax.random.PRNGKey(3), mp["w1"].shape,
+                                 mp["w1"].dtype) * 0.1
+
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0,
+                              cfg.vocab_size)
+    fe = frontend_embeds(cfg, B, key=jax.random.PRNGKey(5))
+    lens = jnp.full((B,), SP, jnp.int32)
+    smax = SP + NEW + tb.T + 8
+    key = jax.random.PRNGKey(7)
+    sp = SamplingParams(temperature=0.8)
+    out = {"prompt": np.asarray(toks), "frames": np.asarray(fe, np.float32)}
+
+    def variant(c, suffix):
+        m = get_model(c)
+        cache = lambda: m.init_cache(c, B, smax)
+        g, _, _ = SpecEngine(c, tb).generate(params, mp, toks, lens, cache(),
+                                             NEW, extra_embeds=fe, key=key)
+        out[f"greedy_{suffix}"] = np.asarray(g)
+        s, _, _ = SpecEngine(c, tb, accept="sample", sampling=sp).generate(
+            params, mp, toks, lens, cache(), NEW, extra_embeds=fe, key=key)
+        out[f"sample_{suffix}"] = np.asarray(s)
+
+    # goldens are captured from the DENSE layout only; the test replays the
+    # paged layout against the same arrays (dense==paged, DESIGN.md §12/§17)
+    variant(cfg, "fp")
+    variant(dataclasses.replace(cfg, cache_dtype="int8"), "int8")
+
+    path = pathlib.Path(__file__).parent / "encdec_goldens.npz"
+    np.savez_compressed(path, **out)
+    print(f"wrote {path} ({len(out)} arrays)")
+    for k in sorted(out):
+        print(" ", k, out[k].shape)
+
+
+if __name__ == "__main__":
+    main()

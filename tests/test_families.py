@@ -1,0 +1,379 @@
+"""Family-identity torture suite (DESIGN.md §17).
+
+Three tiers of protection for the checkpointed-SSM-rollback + paged-encdec
+work:
+
+* **white-box rollback property** — random chains of (gamma, accepted
+  length, active-mask) steps through ``decode``/``commit`` leave the SSM
+  recurrent state *bitwise* equal to a never-speculated AR run over the
+  same accepted tokens, and a masked-out row restores its speculation-root
+  checkpoint exactly (plus a negative control proving the restore select
+  is load-bearing — remove it and the assertions cannot pass);
+* **engine identity matrix** — mamba2 / jamba / whisper × dense / paged ×
+  greedy / sample@temp0 speculative decoding is token-identical to greedy
+  AR (extends the §13 losslessness matrix to the families PR-7 opened);
+* **serving + goldens** — mamba2 and jamba complete under a chunking,
+  preempting ``SpecServer`` with sampled acceptance, token-identical to AR
+  and with the §17 restore counter provably exercised; whisper serves
+  dense and paged token-identically, and both layouts replay the committed
+  golden streams (``tests/golden/encdec_goldens.npz``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.configs.base import SamplingParams, SchedulerParams
+from repro.configs.registry import get_config
+from repro.core import medusa as M
+from repro.core.engine import SpecEngine, ar_generate, build_engine
+from repro.core.tree import chain_tree, medusa_63
+from repro.distributed.sharding import split_params
+from repro.models.api import get_model, init_cache
+from repro.models.frontends import frontend_embeds
+from repro.models.transformer import SSM_CKPT
+from repro.serving.scheduler import SpecServer
+
+import pathlib
+
+B, SP, MAX_NEW, MAX_LEN = 2, 8, 6, 128
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "encdec_goldens.npz"
+
+_state: dict = {}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _free_compile_caches():
+    """This module compiles many per-(family, layout, accept) stacks; drop
+    the cached stacks and jitted executables at teardown so later modules
+    don't hit the process-wide XLA compile ceiling (CPU backend segfaults
+    once enough executables accumulate)."""
+    yield
+    _state.clear()
+    jax.clear_caches()
+
+
+def _ssm_stack():
+    """Module-cached mamba2 stack for the white-box rollback tests."""
+    if _state:
+        return _state
+    cfg = get_config("mamba2-2.7b", reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, SP), 0,
+                              cfg.vocab_size)
+    lens = jnp.full((B,), SP, jnp.int32)
+    decode = jax.jit(model.decode, static_argnums=(1,))
+    commit = jax.jit(model.commit, static_argnums=(0,))
+    _, cache0 = model.prefill(params, cfg, toks, lens,
+                              model.init_cache(cfg, B, MAX_LEN))
+    _state.update(cfg=cfg, model=model, params=params, toks=toks, lens=lens,
+                  decode=decode, commit=commit, cache0=cache0)
+    return _state
+
+
+def _chain(g: int):
+    tb = chain_tree(g)
+    return (jnp.asarray(tb.mask), jnp.asarray(tb.depths),
+            tb.T)  # T = g + 1 nodes on the single path
+
+
+def _ssm_leaves(cache):
+    """Flat list of (name, np.ndarray) for every SSM cache leaf."""
+    out = []
+    for pos in sorted(cache):
+        entry = cache[pos]
+        if isinstance(entry, dict) and "conv_x" in entry:
+            for nm in sorted(entry):
+                out.append((f"{pos}/{nm}", np.asarray(entry[nm])))
+    return out
+
+
+def _assert_ssm_equal(got, want, msg=""):
+    ga, wa = _ssm_leaves(got), _ssm_leaves(want)
+    assert [n for n, _ in ga] == [n for n, _ in wa]
+    for (nm, g), (_, w) in zip(ga, wa):
+        np.testing.assert_array_equal(g, w, err_msg=f"{msg}: {nm}")
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 4),      # gamma (chain length)
+                          st.integers(0, 6),      # raw accepted length
+                          st.integers(0, 3)),     # active-mask pattern
+                min_size=1, max_size=5))
+def test_ssm_rollback_bitwise_equals_ar(steps):
+    """Random speculation schedules: after any sequence of chain decode +
+    masked commit steps, each row's SSM recurrent state is bitwise equal to
+    a never-speculated AR run over exactly the tokens that row accepted —
+    the §17 invariant that makes chunked prefill / idle slots safe for
+    SSM/hybrid families."""
+    s = _ssm_stack()
+    cfg, model, params = s["cfg"], s["model"], s["params"]
+    cache = s["cache0"]
+    lens = s["lens"]
+    accepted = [[] for _ in range(B)]       # per-row accepted token ids
+    rng = np.random.default_rng(17)
+
+    for g, rawacc, actpat in steps:
+        mask, depths, T = _chain(g)
+        chain_toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)),
+                                 jnp.int32)
+        active = np.array([(actpat >> b) & 1 == 1 for b in range(B)])
+        if not active.any():
+            active[:] = True                # an all-idle step is a no-op
+        acc = np.full((B,), 1 + rawacc % T, np.int32)   # in [1, T]
+        _, spec = s["decode"](params, cfg, cache, chain_toks, lens, mask,
+                              depths)
+        # the transient spec cache must carry the speculation-root
+        # checkpoint (white-box: the §17 stash exists and equals the
+        # pre-chain state)
+        ent, pre = spec["pos0"], cache["pos0"]
+        for nm in ("conv_x", "conv_bc", "ssm"):
+            np.testing.assert_array_equal(np.asarray(ent[nm + SSM_CKPT]),
+                                          np.asarray(pre[nm]))
+        cache, lens = s["commit"](cfg, spec, lens,
+                                  jnp.tile(jnp.arange(T), (B, 1)),
+                                  jnp.asarray(acc), jnp.asarray(active))
+        for b in range(B):
+            if active[b]:
+                accepted[b].extend(int(t) for t in
+                                   np.asarray(chain_toks)[b, : acc[b]])
+
+    for b in range(B):
+        # never-speculated oracle: fresh prefill + one T=1 AR step per
+        # accepted token, single row
+        p = np.asarray(s["toks"])[b]
+        oc = model.init_cache(cfg, 1, MAX_LEN)
+        _, oc = model.prefill(params, cfg, jnp.asarray(p)[None],
+                              jnp.asarray([SP], jnp.int32), oc)
+        ol = jnp.asarray([SP], jnp.int32)
+        m1, d1, _ = _chain(0)
+        for t in accepted[b]:
+            _, ospec = s["decode"](params, cfg, oc,
+                                   jnp.asarray([[t]], jnp.int32), ol, m1, d1)
+            oc, ol = s["commit"](cfg, ospec, ol, jnp.zeros((1, 1), jnp.int32),
+                                 jnp.ones((1,), jnp.int32), None)
+        row = jax.tree.map(lambda x: x[:, b:b + 1], cache)
+        _assert_ssm_equal(row, oc, msg=f"row {b} ({len(accepted[b])} tokens)")
+        assert int(lens[b]) == SP + len(accepted[b])
+
+
+def test_ssm_rollback_select_is_load_bearing():
+    """Negative control: a masked-out commit restores the checkpoint
+    bitwise, AND the advanced state it discarded is genuinely different —
+    so deleting the §17 restore select (committing the chain's dead
+    recurrence writes) cannot pass this test."""
+    s = _ssm_stack()
+    cfg, params = s["cfg"], s["params"]
+    cache, lens = s["cache0"], s["lens"]
+    mask, depths, T = _chain(3)
+    chain_toks = jax.random.randint(jax.random.PRNGKey(9), (B, T), 0,
+                                    cfg.vocab_size)
+    _, spec = s["decode"](params, cfg, cache, chain_toks, lens, mask, depths)
+    slots = jnp.tile(jnp.arange(T), (B, 1))
+    acc = jnp.full((B,), 2, jnp.int32)
+    # all rows masked out -> every row restores the speculation root
+    restored, rlens = s["commit"](cfg, spec, lens, slots, acc,
+                                  jnp.zeros((B,), bool))
+    _assert_ssm_equal(restored, cache, msg="masked rows must restore")
+    np.testing.assert_array_equal(np.asarray(rlens), np.asarray(lens))
+    # unmasked commit of the same spec cache advances: the two outcomes
+    # differ, proving the select (not a no-op) produced the restore
+    advanced, _ = s["commit"](cfg, spec, lens, slots, acc, None)
+    diffs = sum(not np.array_equal(g, w) for (_, g), (_, w) in
+                zip(_ssm_leaves(advanced), _ssm_leaves(restored)))
+    assert diffs > 0, "advanced state indistinguishable from checkpoint"
+
+
+# ---------------------------------------------------------------------------
+# engine identity matrix: family x layout x accept == greedy AR
+# ---------------------------------------------------------------------------
+
+FAMILY_COMBOS = [("mamba2-2.7b", "ngram"), ("jamba-1.5-large-398b", "ngram"),
+                 ("whisper-tiny", "medusa")]
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.parametrize("arch,proposer", FAMILY_COMBOS)
+def test_family_identity_matrix(arch, proposer, layout):
+    """Greedy and sample@temp0 speculative decode == greedy AR for the
+    §17 families on both cache layouts (SSM rollback under sampled
+    acceptance; paged encdec self-attn)."""
+    cfg = get_config(arch, reduced=True)
+    if layout == "paged":
+        cfg = dataclasses.replace(cfg, cache_layout="paged", page_size=8)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(1), cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0,
+                              cfg.vocab_size)
+    lens = jnp.full((B,), SP, jnp.int32)
+    fe = frontend_embeds(cfg, B) if cfg.family == "encdec" else None
+    smax = SP + MAX_NEW + 72
+    ar, _ = ar_generate(cfg, params, toks, lens, init_cache(cfg, B, smax),
+                        MAX_NEW, extra_embeds=fe)
+    for accept in ("greedy", "sample"):
+        eng = build_engine(cfg, proposer, gamma=3, accept=accept,
+                           sampling=SamplingParams(temperature=0.0))
+        pp = None
+        if proposer == "medusa":
+            pp, _ = split_params(M.init_medusa(jax.random.PRNGKey(2), cfg,
+                                               eng.tb.K))
+        out, n_out, _ = eng.generate(params, pp, toks, lens,
+                                     init_cache(cfg, B, smax), MAX_NEW,
+                                     extra_embeds=fe,
+                                     key=jax.random.PRNGKey(3))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ar),
+                                      err_msg=f"{arch} {layout} {accept}")
+        assert (np.asarray(n_out) == MAX_NEW).all()
+
+
+# ---------------------------------------------------------------------------
+# serving: SSM/hybrid under scheduler v2, rollback provably exercised
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "jamba-1.5-large-398b"])
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_ssm_families_serve_token_identical(arch, layout):
+    """mamba2/jamba complete under a chunking (and, paged, preempting)
+    ``SpecServer`` with sampled acceptance, token-identical to AR — and the
+    §17 restore counter shows masked slots actually exercised the
+    checkpoint rollback."""
+    cfg = get_config(arch, reduced=True)
+    paged = layout == "paged"
+    if paged:
+        cfg = dataclasses.replace(cfg, cache_layout="paged", page_size=8)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    eng = build_engine(cfg, "ngram", gamma=3, accept="sample")
+    srv = SpecServer(eng, params, None, batch_slots=2, max_len=MAX_LEN,
+                     n_blocks=17 if paged else None,
+                     sched=SchedulerParams(chunk_size=16, adaptive_gamma=True,
+                                           preemption=paged))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(n)).astype(np.int32)
+               for n in rng.integers(4, 40, size=3)]
+    rids = [srv.submit(p, max_new=MAX_NEW, temperature=0.0, max_steps=200)
+            for p in prompts]
+    srv.run(max_iters=500)
+    assert not srv.busy
+    for rid, p in zip(rids, prompts):
+        req = srv.result(rid)
+        assert req is not None and req.status == "done"
+        ar, _ = ar_generate(cfg, params, jnp.asarray(p)[None],
+                            jnp.asarray([len(p)], jnp.int32),
+                            init_cache(cfg, 1, MAX_LEN), MAX_NEW)
+        assert req.output == np.asarray(ar)[0].tolist(), (arch, layout, rid)
+    assert srv.stats["ssm_restores"] > 0     # rollback provably exercised
+    if paged:
+        assert srv.pool.in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# encdec: golden tokens + paged serving
+# ---------------------------------------------------------------------------
+
+def _whisper_stack():
+    cfg = get_config("whisper-tiny", reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(1), cfg))
+    tb = medusa_63()
+    mp, _ = split_params(M.init_medusa(jax.random.PRNGKey(2), cfg, tb.K))
+    mp["w1"] = jax.random.normal(jax.random.PRNGKey(3), mp["w1"].shape,
+                                 mp["w1"].dtype) * 0.1
+    return cfg, model, params, tb, mp
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.parametrize("dtype", ["fp", "int8"])
+def test_encdec_golden_tokens(layout, dtype):
+    """Both self-attn cache layouts reproduce the committed whisper golden
+    streams (captured on the dense layout when the paged encdec cache
+    landed — DESIGN.md §17): dense drift and paged drift both trip this,
+    independently of each other."""
+    cfg, model, params, tb, mp = _whisper_stack()
+    g = np.load(GOLDEN)
+    over = {} if dtype == "fp" else {"cache_dtype": "int8"}
+    if layout == "paged":
+        over.update(cache_layout="paged", page_size=8)
+    c = dataclasses.replace(cfg, **over) if over else cfg
+    toks = jnp.asarray(g["prompt"])
+    fe = jnp.asarray(g["frames"])
+    lens = jnp.full((toks.shape[0],), toks.shape[1], jnp.int32)
+    smax = toks.shape[1] + 16 + tb.T + 8
+    key = jax.random.PRNGKey(7)
+    out, _, _ = SpecEngine(c, tb).generate(
+        params, mp, toks, lens, init_cache(c, toks.shape[0], smax), 16,
+        extra_embeds=fe, key=key)
+    np.testing.assert_array_equal(np.asarray(out), g[f"greedy_{dtype}"])
+    out, _, _ = SpecEngine(c, tb, accept="sample",
+                           sampling=SamplingParams(temperature=0.8)).generate(
+        params, mp, toks, lens, init_cache(c, toks.shape[0], smax), 16,
+        extra_embeds=fe, key=key)
+    np.testing.assert_array_equal(np.asarray(out), g[f"sample_{dtype}"])
+
+
+def test_encdec_serves_paged_token_identical():
+    """whisper-tiny serves under the paged ``SpecServer`` (per-request
+    frames, preemption on) token-identical to dense serving and to AR; the
+    pool drains to zero."""
+    cfg0, model, params, tb, mp = _whisper_stack()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg0.vocab_size,
+                            size=int(n)).astype(np.int32)
+               for n in rng.integers(4, 30, size=3)]
+    frames = [np.asarray(frontend_embeds(
+        cfg0, 1, key=jax.random.PRNGKey(60 + i))[0], np.float32)
+        for i in range(3)]
+    outs = {}
+    for layout in ("dense", "paged"):
+        cfg = (cfg0 if layout == "dense" else
+               dataclasses.replace(cfg0, cache_layout="paged", page_size=8))
+        paged = layout == "paged"
+        eng = build_engine(cfg, "medusa", accept="sample")
+        pp, _ = split_params(M.init_medusa(jax.random.PRNGKey(2), cfg,
+                                           eng.tb.K))
+        pp["w1"] = mp["w1"]
+        srv = SpecServer(eng, params, pp, batch_slots=2, max_len=MAX_LEN,
+                         n_blocks=25 if paged else None,
+                         sched=SchedulerParams(preemption=paged))
+        rids = [srv.submit(p, max_new=MAX_NEW, temperature=0.0,
+                           max_steps=200, extra_embeds=fr)
+                for p, fr in zip(prompts, frames)]
+        srv.run(max_iters=500)
+        assert not srv.busy
+        for rid, p, fr in zip(rids, prompts, frames):
+            req = srv.result(rid)
+            assert req is not None and req.status == "done", (layout, rid)
+            ar, _ = ar_generate(cfg, params, jnp.asarray(p)[None],
+                                jnp.asarray([len(p)], jnp.int32),
+                                init_cache(cfg, 1, MAX_LEN), MAX_NEW,
+                                extra_embeds=jnp.asarray(fr)[None])
+            assert req.output == np.asarray(ar)[0].tolist(), (layout, rid)
+        outs[layout] = [srv.result(r).output for r in rids]
+        if paged:
+            assert srv.pool.in_use == 0
+    assert outs["dense"] == outs["paged"]
+
+
+def test_encdec_submit_requires_frames():
+    """The serving contract is explicit at the edge: an encdec request
+    without frames is rejected at submit (not at some later jitted crash),
+    and a decoder-only server rejects frames."""
+    cfg, model, params, tb, mp = _whisper_stack()
+    eng = build_engine(cfg, "medusa")
+    pp, _ = split_params(M.init_medusa(jax.random.PRNGKey(2), cfg, eng.tb.K))
+    srv = SpecServer(eng, params, pp, batch_slots=2, max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="extra_embeds"):
+        srv.submit(np.arange(4, dtype=np.int32), max_new=2)
+    qcfg = get_config("qwen1.5-0.5b", reduced=True)
+    qmodel = get_model(qcfg)
+    qparams, _ = split_params(qmodel.init_params(jax.random.PRNGKey(0), qcfg))
+    qsrv = SpecServer(build_engine(qcfg, "ngram"), qparams, None,
+                      batch_slots=2, max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="encdec-only"):
+        qsrv.submit(np.arange(4, dtype=np.int32), max_new=2,
+                    extra_embeds=np.zeros((4, 4), np.float32))

@@ -117,22 +117,3 @@ def test_exact_arch_parameters():
     assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
             c.vocab_size, c.num_experts, c.experts_per_tok, c.hybrid_period) == \
         (72, 8192, 64, 8, 24576, 65536, 16, 2, 8)
-
-
-def test_encdec_paged_layout_raises_actionable_error():
-    """Regression: a whisper-style config with cache_layout='paged' must
-    fail at cache construction with an error that names the config, says
-    why paging is out of scope for the family, and points at the fix —
-    not an unexplained NotImplementedError (DESIGN.md §12)."""
-    import dataclasses
-
-    from repro.models.api import init_cache
-
-    cfg = dataclasses.replace(get_config("whisper-tiny", reduced=True),
-                              cache_layout="paged")
-    with pytest.raises(NotImplementedError) as exc:
-        init_cache(cfg, 2, 64)
-    msg = str(exc.value)
-    assert cfg.name in msg                      # which config
-    assert "encdec" in msg and "cross-attention" in msg   # why
-    assert "cache_layout='dense'" in msg        # the fix

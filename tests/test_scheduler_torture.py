@@ -25,7 +25,7 @@ from repro.core import medusa as M
 from repro.core.engine import ar_generate, build_engine
 from repro.distributed.sharding import split_params
 from repro.models.api import get_model
-from repro.serving.scheduler import SpecServer
+from repro.serving.scheduler import FamilySpecServer, SpecServer
 
 MAX_LEN = 128
 MAX_NEW = 6
@@ -34,6 +34,16 @@ COMBOS = (("medusa", "dense"), ("medusa", "paged"),
           ("ngram", "dense"), ("ngram", "paged"))
 
 _state: dict = {}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _free_compile_caches():
+    """Seven servers' worth of compiled step/admission graphs live in the
+    module cache; free them (and the global jit caches) at teardown so the
+    rest of the suite stays clear of the process-wide XLA compile ceiling."""
+    yield
+    _state.clear()
+    jax.clear_caches()
 
 
 def _stack():
@@ -120,6 +130,86 @@ def test_random_interleavings_lossless(ops):
     s = _stack()
     for combo in COMBOS:
         _torture(s["servers"][combo], s["prompts"], s["oracle"], ops)
+
+
+KINDS = ("medusa", "ngram", "draft")
+
+
+def _family_server():
+    """Module-cached FamilySpecServer: one slot-group lane per proposer
+    kind over the same target weights (DESIGN.md §17).  The ngram lane is
+    paged + preemptive so façade schedules also cross the pool-pressure
+    paths; the other lanes stay dense."""
+    if "family" in _state:
+        return _state["family"]
+    _stack()
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    lanes = {}
+    for kind in KINDS:
+        paged = kind == "ngram"
+        c = (dataclasses.replace(cfg, cache_layout="paged", page_size=8)
+             if paged else cfg)
+        eng = build_engine(c, kind)
+        if kind == "medusa":
+            pp, _ = split_params(M.init_medusa(jax.random.PRNGKey(1), c,
+                                               eng.tb.K))
+        elif kind == "draft":
+            pp, _ = split_params(model.init_params(jax.random.PRNGKey(1),
+                                                   eng.proposer.dc))
+        else:
+            pp = None
+        lanes[kind] = SpecServer(
+            eng, params, pp, batch_slots=2, max_len=MAX_LEN,
+            n_blocks=11 if paged else None,
+            # chunked prefill rides suffix_prefill, which cannot prime a
+            # draft-model proposer (DESIGN.md §13) — that lane admits whole
+            sched=SchedulerParams(chunk_size=0 if kind == "draft" else 16,
+                                  adaptive_gamma=True, preemption=paged))
+    _state["family"] = FamilySpecServer(lanes)
+    return _state["family"]
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7)),
+                min_size=1, max_size=10))
+def test_family_server_mixed_proposers_lossless(ops):
+    """One façade, three proposer lanes: random interleaved submissions
+    routed across medusa/ngram/draft slot groups (plus forced preemption
+    on the paged lane) complete token-identical to AR, every lane's step
+    graph is exercised, and the paged lane's pool drains to zero."""
+    s = _stack()
+    fam = _family_server()
+    fam.reset()
+    submitted = {}
+
+    def sub(kind, i):
+        p = s["prompts"][i % N_PROMPTS]
+        rid = fam.submit(p, max_new=MAX_NEW, max_steps=200, group=kind)
+        assert fam.group_of(rid) == kind
+        submitted[rid] = p
+
+    for k, kind in enumerate(KINDS):        # every lane sees traffic
+        sub(kind, k)
+    for code, arg in ops:
+        if code == 0:
+            sub(KINDS[arg % len(KINDS)], arg)
+        elif code == 1:
+            for it in range(1 + arg % 3):
+                fam.step_once(it=it)
+        else:                               # forced preempt, paged lane
+            fam.groups["ngram"]._preempt(arg % fam.groups["ngram"].B)
+    fam.run(max_iters=500)
+    assert not fam.busy
+    for rid, p in submitted.items():
+        req = fam.result(rid)
+        assert req.status == "done", (rid, req.status)
+        assert req.output == s["oracle"](p), \
+            f"rid={rid} (lane {fam.group_of(rid)}) diverged from AR"
+    for kind in KINDS:
+        assert fam.stats[kind]["steps"] > 0, f"lane {kind} never stepped"
+    assert fam.groups["ngram"].pool.in_use == 0
 
 
 def test_poisson_trace_replay_lossless():

@@ -41,12 +41,13 @@ CASES = [
     ("donation", "donation_bad.py", "donation_clean.py", 3),
     ("proposer-protocol", "proposer_bad.py", "proposer_clean.py", 4),
     ("pytree-axis", "pytree_axis_bad.py", "pytree_axis_clean.py", 1),
+    ("ssm-rollback", "ssm_rollback_bad.py", "ssm_rollback_clean.py", 1),
     ("kernel-static-shape", "kernel_static_bad.py",
      "kernel_static_clean.py", 2),
 ]
 
 
-def test_all_five_rules_are_registered():
+def test_all_six_rules_are_registered():
     assert set(RULES) == {c[0] for c in CASES}
 
 
@@ -142,7 +143,7 @@ def test_checks_cli_green_on_repo():
 @pytest.mark.parametrize("fixture,rc", [
     ("trace_safety_bad.py", 1), ("donation_bad.py", 1),
     ("proposer_bad.py", 1), ("pytree_axis_bad.py", 1),
-    ("kernel_static_bad.py", 1),
+    ("ssm_rollback_bad.py", 1), ("kernel_static_bad.py", 1),
     ("trace_safety_clean.py", 0), ("suppressed.py", 0),
 ])
 def test_checks_cli_gates_fixtures(fixture, rc):

@@ -57,6 +57,8 @@ GATES = [
     ("prefix_cache", "effective_slot_gain", "lower", 0.05),
     ("proposers", "accepted_len.*", "lower", 0.10),
     ("kv_quant", "accepted_len_drift", "higher", 0.50),
+    ("families", "accepted_len.*", "lower", 0.10),
+    ("families", "verify_steps.*", "higher", 0.0),
 ]
 ADVISORY_DRIFT = 0.25     # print advisory metrics drifting past this
 

@@ -1,4 +1,4 @@
-"""The five speclint rules (DESIGN.md §16).
+"""The six speclint rules (DESIGN.md §16).
 
 Each rule encodes one invariant this repo has already paid for by hand —
 the rule docstrings name the CHANGES.md incident class they gate.
@@ -513,7 +513,55 @@ class PytreeAxis(Rule):
 
 
 # --------------------------------------------------------------------------
-# rule 5: kernel-static-shape
+# rule 5: ssm-rollback
+# --------------------------------------------------------------------------
+
+@register
+class SsmRollback(Rule):
+    name = "ssm-rollback"
+    doc = ("SSM recurrent-state writes on the speculative decode/commit "
+           "path carry the speculation-root checkpoint (SSM_CKPT) so a "
+           "rejected chain can restore instead of keeping poisoned state")
+
+    # a dict literal carrying both keys is an SSM cache-entry write (the
+    # conv shift register + the recurrent state, transformer.py §17)
+    STATE_KEYS = {"conv_x", "ssm"}
+    # tree_mask marks the tree-decode signature, path_slots the commit
+    # signature — the two places speculative tokens touch recurrent state
+    SPEC_ARGS = {"tree_mask", "path_slots"}
+    CKPT = ("SSM_CKPT", "_ckpt")
+
+    def check(self, ctx) -> List[Finding]:
+        out: List[Finding] = []
+        for fi in ctx.reach.functions:
+            a = fi.node.args
+            argnames = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+            if not (self.SPEC_ARGS & argnames):
+                continue          # not on the speculative decode/commit path
+            seg = fi.src.segment(fi.node)
+            if any(c in seg for c in self.CKPT):
+                continue          # the function stashes/restores checkpoints
+            for n in walk_no_nested(fi.node):
+                if not isinstance(n, ast.Dict):
+                    continue
+                keys = {k.value for k in n.keys
+                        if isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)}
+                if self.STATE_KEYS <= keys:
+                    out.append(Finding(
+                        self.name, fi.src.rel, n.lineno, n.col_offset,
+                        f"in jit-reachable `{fi.name}`: SSM cache entry "
+                        f"written on the speculative path with no "
+                        f"speculation-root checkpoint in scope; without an "
+                        f"`SSM_CKPT` stash a rejected chain keeps poisoned "
+                        f"recurrent state (DESIGN.md §17 — the rollback "
+                        f"invariant the family torture suite enforces "
+                        f"dynamically)"))
+        return out
+
+
+# --------------------------------------------------------------------------
+# rule 6: kernel-static-shape
 # --------------------------------------------------------------------------
 
 def _has_traced_call(e, tainted) -> bool:
