@@ -129,6 +129,13 @@ class ModelConfig:
     verify_fusion: bool = False    # fold unembed + acceptance into the
                                    # decode kernel epilogue — no [B, T, V]
                                    # logits round-trip (DESIGN.md §15)
+    tp_axis: str = ""              # tensor-parallel decode (DESIGN.md §18):
+                                   # set only on the shard_map-local config
+                                   # built by distributed/tp.py — the model
+                                   # then holds per-shard head/ff/vocab
+                                   # slices and psum/all_gathers over this
+                                   # mesh axis at the row-parallel seams.
+                                   # "" (default) traces no collective.
     max_position: int = 1 << 20    # rope table upper bound (lazy — computed per call)
     # --- attention flavour ---
     full_attention: bool = True    # False for ssm; hybrid is "not full" (sub-quadratic)

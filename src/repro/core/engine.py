@@ -116,6 +116,15 @@ class SpecEngine:
                 raise ValueError(
                     "verify_fusion + accept='sample' requires top_k=0 and "
                     "top_p=1.0 (DESIGN.md §15)")
+        # TP verify epilogue eligibility (DESIGN.md §18): same statistics
+        # contract as the fused kernel — greedy, or untruncated sampling.
+        # Ineligible TP engines fall back to the all-gathered full-logits
+        # walk inside the shard_map body (correct, just not [B,T,V]-free).
+        sp = self.sampling
+        self._tp_stats = bool(cfg.tp_axis) and not self.verify_fusion and (
+            self.accept == "greedy"
+            or (self.accept == "sample"
+                and not sp.top_k and sp.top_p == 1.0))
 
     def _sampling_args(self, temperature=None, top_p=None):
         """(temperature, top_k, top_p) with engine defaults, per-call (or
@@ -290,6 +299,68 @@ class SpecEngine:
                                               row_fn, temperature=temperature)
         return V.greedy_verify_stats(cand, stats, dt)
 
+    def _verify_tp(self, params, cand, hidden, q, key, temperature,
+                   top_k, top_p, dtree=None):
+        """Tensor-parallel acceptance epilogue (DESIGN.md §18).
+
+        Inside the shard_map body the lm_head holds a [d, V/N] vocab slice,
+        so each shard computes warped logits over its columns only and the
+        ``VerifyStats`` reduction crosses shards with collectives: max via
+        a gathered per-shard row-max, first-wins argmax by picking the
+        first shard attaining it (shards hold ascending contiguous vocab
+        slices, so shard order IS global index order), sumexp via psum of
+        rescaled partials, and candidate columns via psum of a one-shard
+        one-hot extraction (every candidate token lives on exactly one
+        shard, so the sum adds exact zeros).  The full [B, T, V] tensor
+        exists on no device — per shard only [B, T, V/N] materialises —
+        and the stats feed the same ``*_stats`` walks as the fused kernel
+        path, so verdicts are token-identical to the single-device engine.
+        """
+        dt = self.dtree if dtree is None else dtree
+        axis = self.cfg.tp_axis
+        B, T = cand.shape
+        wv = self.model.unembed_local(params, self.cfg, hidden)  # [B,T,Vloc]
+        v_loc = wv.shape[-1]
+        if self.accept == "sample":
+            t_arr = jnp.broadcast_to(
+                jnp.asarray(temperature, jnp.float32), (B,))
+            tmax = jnp.maximum(t_arr, 1e-6)
+        else:
+            tmax = jnp.ones((B,), jnp.float32)   # greedy: raw-logit argmax
+        wv = wv.astype(jnp.float32) / tmax[:, None, None]
+        offs = jax.lax.axis_index(axis).astype(jnp.int32) * v_loc
+        m_loc = jnp.max(wv, axis=-1)                              # [B, T]
+        a_loc = jnp.argmax(wv, axis=-1).astype(jnp.int32) + offs
+        ms = jax.lax.all_gather(m_loc, axis)                   # [N, B, T]
+        am = jax.lax.all_gather(a_loc, axis)                   # [N, B, T]
+        first = jnp.argmax(ms, axis=0)       # first shard attaining the max
+        m = jnp.max(ms, axis=0)
+        argm = jnp.take_along_axis(am, first[None], axis=0)[0]
+        l = jax.lax.psum(
+            jnp.sum(jnp.exp(wv - m[:, :, None]), axis=-1), axis)
+        here = (cand >= offs) & (cand < offs + v_loc)             # [B, T]
+        cidx = jnp.clip(cand - offs, 0, v_loc - 1)
+        colw = jnp.take_along_axis(
+            wv, jnp.broadcast_to(cidx[:, None, :], (B, T, T)), axis=-1)
+        cand_w = jax.lax.psum(
+            jnp.where(here[:, None, :], colw, 0.0), axis)      # [B, T, T]
+        stats = V.VerifyStats(argm, m, l, cand_w)
+        rows = jnp.arange(B)
+
+        def row_fn(idx):
+            # one [B, V] row, all-gathered by ``unembed`` — the residual /
+            # bonus resample never needs more than the stopping node's row
+            return self.model.unembed(params, self.cfg, hidden[rows, idx])
+
+        if self.accept == "sample":
+            if self.proposer.q_kind == "logits":
+                return V.sample_verify_chain_stats(
+                    cand, stats, q, dt, key, row_fn,
+                    temperature=temperature, top_k=top_k, top_p=top_p)
+            return V.sample_verify_tree_stats(cand, stats, q, dt, key,
+                                              row_fn, temperature=temperature)
+        return V.greedy_verify_stats(cand, stats, dt)
+
     def step_dtrees(self, levels=()):
         """The adaptive-speculation graph family (DESIGN.md §14): a small,
         static list of ``(gamma, DeviceTree)`` step topologies, ascending,
@@ -355,6 +426,9 @@ class SpecEngine:
         if self.verify_fusion:
             verdict = self._verify_fused(params, cand, hidden, q, k_ver,
                                          t, k, p, dtree=dt)
+        elif self._tp_stats:
+            verdict = self._verify_tp(params, cand, hidden, q, k_ver,
+                                      t, k, p, dtree=dt)
         else:
             logits = self.model.unembed(params, self.cfg, hidden)     # [B, T, V]
             verdict = self._verify(cand, logits, q, k_ver, t, k, p, dtree=dt)
@@ -440,7 +514,8 @@ def build_engine(cfg: ModelConfig, proposer: str = "medusa", *,
                  tb: Optional[TreeBuffers] = None,
                  draft_cfg: Optional[ModelConfig] = None,
                  draft_layers: int = 2, gamma: int = 4, max_n: int = 3,
-                 min_n: int = 1, use_kernel: bool = False,
+                 min_n: int = 1, matcher: str = "auto",
+                 use_kernel: bool = False,
                  accept: str = "greedy",
                  sampling: Optional[SamplingParams] = None,
                  verify_fusion: Optional[bool] = None) -> SpecEngine:
@@ -451,14 +526,17 @@ def build_engine(cfg: ModelConfig, proposer: str = "medusa", *,
     "draft" a ``draft_cfg`` may be supplied; omitted, a ``draft_layers``-
     layer sibling of ``cfg`` is derived (the classic small-draft setup).
     ``tb`` overrides the Medusa tree (default: ``cfg.spec_mode``'s tree);
-    ``gamma``/``max_n``/``min_n`` shape the chain proposers.
+    ``gamma``/``max_n``/``min_n`` shape the chain proposers; ``matcher``
+    picks the ngram lookup structure (scan | automaton | auto — auto
+    switches to the hash-table automaton at history capacity ≥ 8k, where
+    the scan's O(max_n · H) compare sweep starts to dominate the step).
     """
     if proposer == "draft" and draft_cfg is None:
         draft_cfg = dataclasses.replace(
             cfg, num_layers=min(draft_layers, cfg.num_layers),
             name=cfg.name + "-draft")
     p = make_proposer(proposer, cfg, tb=tb, draft_cfg=draft_cfg, gamma=gamma,
-                      max_n=max_n, min_n=min_n)
+                      max_n=max_n, min_n=min_n, matcher=matcher)
     return SpecEngine(cfg, use_kernel=use_kernel, accept=accept,
                       sampling=sampling, proposer=p,
                       verify_fusion=verify_fusion)

@@ -328,6 +328,28 @@ class NgramProposer(Proposer):
     deterministic proposals (DESIGN.md §11, §13); the mprob the proposer
     returns is all-ones and is consumed solely for (trivial) sibling
     ordering, the chain having one child per node.
+
+    Two matchers share the state contract (DESIGN.md §18):
+
+    * ``"scan"``      — the O(max_n · H) elementwise window compare above;
+    * ``"automaton"`` — a suffix-automaton-style index: per n a hash table
+      ``tab[:, n - min_n, :]`` maps the rolling hash of each *completed*
+      window (content present AND its continuation exists) to ``start + 1``
+      (0 = empty bucket, so ``reset_rows``'s zeroing empties the index).
+      ``prime`` builds the tables in one vectorized pass, ``observe``
+      inserts only the ≤ K1 windows each commit completes via an
+      out-of-bounds-dropping ``scatter-max`` (largest start = most recent
+      = the scan's winner; max is associative, so the update order never
+      matters), and ``propose`` drops to O(max_n) hash lookups per step —
+      the H ≥ 8k regime where the scan's compare sweep dominates the step.
+      A lookup re-verifies the stored window's tokens against the pattern,
+      so a hash collision (or a saturated history whose ring overwrites an
+      indexed window) costs a missed proposal, never a wrong candidate —
+      verification stays lossless either way.
+    * ``"auto"``      — ``automaton`` iff ``init_state``'s capacity ≥
+      ``AUTO_THRESHOLD``; the matcher is chosen per state allocation, and
+      ``propose``/``observe`` dispatch on whether the state carries a
+      ``"tab"`` leaf (structure is static under jit).
     """
 
     consumes_key = False
@@ -335,20 +357,72 @@ class NgramProposer(Proposer):
     supports_prefix = True
     primes_from_tokens = True
 
+    AUTO_THRESHOLD = 8192     # capacity at which "auto" switches matcher
+    _MUL = 1000003            # rolling-hash multiplier (uint32, wraps)
+
     def __init__(self, cfg: ModelConfig, gamma: int = 4, max_n: int = 3,
-                 min_n: int = 1):
+                 min_n: int = 1, matcher: str = "scan",
+                 table_bits: int = 14):
         if not (1 <= min_n <= max_n):
             raise ValueError(f"need 1 <= min_n <= max_n, got "
                              f"({min_n}, {max_n})")
+        if matcher not in ("scan", "automaton", "auto"):
+            raise ValueError(f"matcher must be scan | automaton | auto, "
+                             f"got {matcher!r}")
         self.cfg = cfg
         self.gamma = gamma
         self.max_n, self.min_n = max_n, min_n
+        self.matcher = matcher
+        self.nb = 1 << table_bits
         self.tb = chain_tree(gamma)
         self.dtree = V.device_tree(self.tb)
 
+    def _use_tab(self, capacity: int) -> bool:
+        if self.matcher == "auto":
+            return capacity >= self.AUTO_THRESHOLD
+        return self.matcher == "automaton"
+
     def init_state(self, batch: int, capacity: int):
-        return {"hist": jnp.zeros((batch, capacity), jnp.int32),
-                "hlen": jnp.zeros((batch,), jnp.int32)}
+        state = {"hist": jnp.zeros((batch, capacity), jnp.int32),
+                 "hlen": jnp.zeros((batch,), jnp.int32)}
+        if self._use_tab(capacity):
+            ns = self.max_n - self.min_n + 1
+            state["tab"] = jnp.zeros((batch, ns, self.nb), jnp.int32)
+        return state
+
+    # ------------------------------------------------- automaton index
+
+    def _tab_insert(self, tab, hist, hlen, n, starts):
+        """Scatter-max ``starts`` [B, W] (window start candidates for size
+        ``n``) into the n-table; a window inserts only once its content AND
+        first continuation token exist (``s + n <= hlen - 1`` — the scan's
+        eligibility rule, checked at insert time so the stored max never
+        needs a runner-up)."""
+        B, H = hist.shape
+        h = jnp.zeros(starts.shape, jnp.uint32)
+        for k in range(n):
+            tok = jnp.take_along_axis(hist, jnp.clip(starts + k, 0, H - 1),
+                                      axis=1)
+            h = h * jnp.uint32(self._MUL) + tok.astype(jnp.uint32)
+        valid = (starts >= 0) & (starts + n <= hlen[:, None] - 1)
+        bucket = jnp.where(valid,
+                           (h & jnp.uint32(self.nb - 1)).astype(jnp.int32),
+                           self.nb)                     # oob -> dropped
+        rows = jnp.arange(B)[:, None]
+        return tab.at[rows, n - self.min_n, bucket].max(
+            (starts + 1).astype(jnp.int32), mode="drop")
+
+    def _tab_build(self, hist, hlen):
+        """Index every eligible window of ``hist`` — one vectorized pass
+        per n, same O(max_n · H) cost as a single scan ``propose``, paid
+        once at prime instead of every step."""
+        B, H = hist.shape
+        ns = self.max_n - self.min_n + 1
+        tab = jnp.zeros((B, ns, self.nb), jnp.int32)
+        all_s = jnp.broadcast_to(jnp.arange(H)[None, :], (B, H))
+        for n in range(self.min_n, self.max_n + 1):
+            tab = self._tab_insert(tab, hist, hlen, n, all_s)
+        return tab
 
     def prime(self, pp, state, tokens, lengths, tok_lens, hidden, base,
               extra_embeds=None):
@@ -359,7 +433,11 @@ class NgramProposer(Proposer):
         rows = jnp.arange(B)
         pos = jnp.clip(tok_lens, 0, H - 1)
         hist = hist.at[rows, pos].set(base)
-        return {"hist": hist, "hlen": jnp.clip(tok_lens + 1, 0, H)}
+        hlen = jnp.clip(tok_lens + 1, 0, H)
+        out = {"hist": hist, "hlen": hlen}
+        if "tab" in state:
+            out["tab"] = self._tab_build(hist, hlen)
+        return out
 
     def prime_tokens(self, state, tokens, tok_lens, base, mask):
         """History IS the state, so token ids alone rebuild it: re-run
@@ -377,10 +455,9 @@ class NgramProposer(Proposer):
 
         return jax.tree.map(sel, primed, state, axes)
 
-    def propose(self, pp, state, base, key, temperature, top_k, top_p,
-                stochastic, dtree=None):
-        dt = self.dtree if dtree is None else dtree
-        hist, hlen = state["hist"], state["hlen"]
+    def _match_scan(self, hist, hlen):
+        """-> (found [B] bool, cstart [B] i32): the continuation start of
+        the longest-n / most-recent matching window, by brute compare."""
         B, H = hist.shape
         pos = jnp.arange(H)
         found = jnp.zeros((B,), bool)
@@ -403,6 +480,44 @@ class NgramProposer(Proposer):
             take = has & ~found
             cstart = jnp.where(take, (last + n).astype(jnp.int32), cstart)
             found = found | take
+        return found, cstart
+
+    def _match_tab(self, tab, hist, hlen):
+        """Automaton lookup: O(max_n) hashes instead of the O(max_n · H)
+        sweep.  The stored start is re-verified token-by-token against the
+        pattern, so collisions and ring-overwritten windows degrade to "no
+        match" — same failure mode as an empty bucket."""
+        B, H = hist.shape
+        rows = jnp.arange(B)
+        found = jnp.zeros((B,), bool)
+        cstart = jnp.zeros((B,), jnp.int32)
+        for n in range(self.max_n, self.min_n - 1, -1):  # longest match wins
+            pidx = hlen[:, None] - n + jnp.arange(n)[None, :]
+            pat = jnp.take_along_axis(hist, jnp.clip(pidx, 0, H - 1), axis=1)
+            h = jnp.zeros((B,), jnp.uint32)
+            for k in range(n):
+                h = h * jnp.uint32(self._MUL) + pat[:, k].astype(jnp.uint32)
+            bucket = (h & jnp.uint32(self.nb - 1)).astype(jnp.int32)
+            entry = tab[rows, n - self.min_n, bucket]
+            s = entry - 1
+            ok = (entry > 0) & (s + n <= hlen - 1) & (hlen >= n + 1)
+            for k in range(n):
+                sv = hist[rows, jnp.clip(s + k, 0, H - 1)]
+                ok = ok & (sv == pat[:, k])
+            take = ok & ~found
+            cstart = jnp.where(take, (s + n).astype(jnp.int32), cstart)
+            found = found | take
+        return found, cstart
+
+    def propose(self, pp, state, base, key, temperature, top_k, top_p,
+                stochastic, dtree=None):
+        dt = self.dtree if dtree is None else dtree
+        hist, hlen = state["hist"], state["hlen"]
+        B, H = hist.shape
+        if "tab" in state:
+            found, cstart = self._match_tab(state["tab"], hist, hlen)
+        else:
+            found, cstart = self._match_scan(hist, hlen)
         cidx = cstart[:, None] + jnp.arange(self.gamma)[None, :]
         cont = jnp.take_along_axis(hist, jnp.clip(cidx, 0, H - 1), axis=1)
         cont = jnp.where(found[:, None] & (cidx < hlen[:, None]), cont, 0)
@@ -432,14 +547,27 @@ class NgramProposer(Proposer):
             return jax.lax.dynamic_update_slice(h, v, (s,))
 
         hist = jax.vmap(one)(hist, vec.astype(jnp.int32), start)
-        return {"hist": hist, "hlen": jnp.clip(hlen + verdict.acc, 0, H)}
+        new_hlen = jnp.clip(hlen + verdict.acc, 0, H)
+        out = {"hist": hist, "hlen": new_hlen}
+        if "tab" in state:
+            # the commit completed <= K1 windows per n (those whose first
+            # continuation token just landed): starts hlen_old - n + j;
+            # _tab_insert's validity mask drops the j >= acc tail
+            tab = state["tab"]
+            for n in range(self.min_n, self.max_n + 1):
+                starts = hlen[:, None] - n + jnp.arange(K1)[None, :]
+                tab = self._tab_insert(tab, hist, new_hlen, n, starts)
+            out["tab"] = tab
+        return out
 
 
 def make_proposer(kind: str, cfg: ModelConfig, *, tb=None, draft_cfg=None,
-                  gamma: int = 4, max_n: int = 3, min_n: int = 1) -> Proposer:
+                  gamma: int = 4, max_n: int = 3, min_n: int = 1,
+                  matcher: str = "auto") -> Proposer:
     """Build a proposer by name — the ``--proposer {medusa,draft,ngram}``
     dispatch point shared by ``build_engine``, the launcher and the
-    benchmarks."""
+    benchmarks.  ``matcher`` picks the ngram lookup structure (scan |
+    automaton | auto); the default defers to history capacity."""
     if kind == "medusa":
         return MedusaProposer(cfg, tb)
     if kind == "draft":
@@ -447,6 +575,7 @@ def make_proposer(kind: str, cfg: ModelConfig, *, tb=None, draft_cfg=None,
             raise ValueError("proposer='draft' needs draft_cfg")
         return DraftModelProposer(cfg, draft_cfg, gamma=gamma)
     if kind == "ngram":
-        return NgramProposer(cfg, gamma=gamma, max_n=max_n, min_n=min_n)
+        return NgramProposer(cfg, gamma=gamma, max_n=max_n, min_n=min_n,
+                             matcher=matcher)
     raise ValueError(f"unknown proposer {kind!r} "
                      "(expected medusa | draft | ngram)")

@@ -59,15 +59,35 @@ def cache_pspecs(cache_abstract, cfg: ModelConfig, shape: ShapeConfig,
     (flash-decoding style sequence parallelism for the cache sweep).
     batch==1 (long_500k): shard KV-seq over every available axis instead.
 
-    Paged layout (DESIGN.md §12): these per-slot axis rules do not apply to
-    pool-form leaves — the k/v "batch" axis is the global block pool and
-    the seq axis is one page.  The pool is replicated for now (the §12
-    sharding caveat: the paged scatter defeats the §7 scatter-free trick),
-    so every leaf, table included, gets a fully replicated spec.
+    Paged layout (DESIGN.md §12, §18): the per-slot batch/KV-seq axis rules
+    do not apply to pool-form leaves — the k/v "batch" axis is the global
+    block pool and the seq axis is one page, and both are layout, not data
+    parallelism.  The one model-parallel dimension a pool leaf has is its
+    kv-head axis (index 3 of [nu, n_blocks, page, Hkv, hd]), so pool-form
+    k/v shard heads over "model" — int8 scale pools [.., Hkv, 1] ride
+    along on the same axis — while the block table (and any non-pool leaf:
+    SSM state, dense cross K/V) stays replicated.
     """
     if cfg.paged:
-        return jax.tree.map(lambda arr: P(*(None,) * arr.ndim),
-                            cache_abstract)
+        size = int(mesh.shape["model"])
+
+        def pool_spec(role, arr):
+            if role in ("k", "v", "k_scale", "v_scale") and arr.ndim == 5 \
+                    and arr.shape[3] % size == 0:
+                return P(None, None, None, "model", None)
+            return P(*(None,) * arr.ndim)
+
+        def pool_walk(tree, in_cross=False):
+            out = {}
+            for key, val in tree.items():
+                if isinstance(val, dict):
+                    out[key] = pool_walk(val, in_cross=(key == "cross"))
+                else:
+                    role = "cross" if in_cross else key
+                    out[key] = pool_spec(role, val)
+            return out
+
+        return pool_walk(cache_abstract)
     ba = batch_axes(multi_pod)
     b1 = shape.global_batch == 1
     kvseq = (("pod", "data", "model") if multi_pod else ("data", "model")) if b1 \
@@ -108,6 +128,39 @@ def cache_pspecs(cache_abstract, cfg: ModelConfig, shape: ShapeConfig,
                 out[key] = walk(val, in_cross=(key == "cross"))
             else:
                 role = "cross" if (in_cross and key in ("k", "v")) else key
+                out[key] = spec(role, val)
+        return out
+
+    return walk(cache_abstract)
+
+
+def tp_cache_pspecs(cache_abstract, cfg: ModelConfig, mesh, axis: str = "model"):
+    """Cache specs for the tensor-parallel decode step (DESIGN.md §18).
+
+    Under TP the shard_map body runs a *local* model with ``Hkv/tp`` kv
+    heads, so every k/v (+ int8 scale) leaf — pool-form [nu, nb, ps, Hkv,
+    hd] AND dense per-slot [nu, B, S, Hkv, hd] — shards its head axis
+    (index 3) over ``axis``; block tables, SSM state and everything else
+    replicate.  For the paged layout this agrees with ``cache_pspecs``
+    leaf-for-leaf; the dense layout differs deliberately: ``cache_pspecs``'s
+    dense branch encodes flash-decoding KV-seq parallelism for the sharded
+    *cache sweep*, which is incompatible with a head-local attention body.
+    """
+    size = int(mesh.shape[axis])
+
+    def spec(role, arr):
+        if role in ("k", "v", "k_scale", "v_scale") and arr.ndim == 5 \
+                and arr.shape[3] % size == 0:
+            return P(None, None, None, axis, None)
+        return P(*(None,) * arr.ndim)
+
+    def walk(tree, in_cross=False):
+        out = {}
+        for key, val in tree.items():
+            if isinstance(val, dict):
+                out[key] = walk(val, in_cross=(key == "cross"))
+            else:
+                role = "cross" if in_cross else key
                 out[key] = spec(role, val)
         return out
 

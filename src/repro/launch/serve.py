@@ -36,6 +36,57 @@ def proposer_params(kind: str, cfg, model, eng):
     return pp
 
 
+def serve_tp(args, cfg, model, params, axes, sampling):
+    """--tp path: static-batch generation through the shard_map engine
+    (DESIGN.md §18).  Each batch of ``--slots`` prompts runs one jitted
+    ``generate`` whose heads/ffn/vocab/KV shard over the model axis."""
+    import jax.numpy as jnp
+
+    from repro.distributed.tp import build_tp_engine, make_tp_mesh
+    if args.mesh_shape:
+        try:
+            d, m = (int(x) for x in args.mesh_shape.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh-shape wants DATAxMODEL (e.g. '1x4'), "
+                             f"got {args.mesh_shape!r}")
+        if m != args.tp:
+            raise SystemExit(f"--mesh-shape model dim {m} != --tp {args.tp}")
+    else:
+        d, m = 1, args.tp
+    mesh = make_tp_mesh(m, data=d)
+    tpe = build_tp_engine(cfg, mesh, args.proposer, gamma=args.gamma,
+                          accept=args.accept, sampling=sampling)
+    sp = tpe.shard_params(params, axes)
+    pp = proposer_params(args.proposer, cfg, model, tpe)
+    pp = tpe.replicate(pp) if pp is not None else None
+    B = args.slots
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 48))).astype(np.int32)
+               for _ in range(args.requests)]
+    t0 = time.time()
+    toks = 0
+    for i in range(0, len(prompts), B):
+        batch = prompts[i:i + B]
+        S = max(len(p) for p in batch)
+        tok = np.zeros((B, S), np.int32)
+        plen = np.zeros((B,), np.int32)
+        for j, p in enumerate(batch):
+            tok[j, :len(p)] = p
+            plen[j] = len(p)
+        for j in range(len(batch), B):      # ragged tail: duplicate row 0
+            tok[j], plen[j] = tok[0], plen[0]
+        cache = tpe.init_cache(B, args.max_len)
+        _, n_out, _ = tpe.generate(sp, pp, tpe.replicate(jnp.asarray(tok)),
+                                   tpe.replicate(jnp.asarray(plen)), cache,
+                                   args.max_new)
+        toks += int(np.asarray(n_out)[: len(batch)].sum())
+    dt = time.time() - t0
+    print(f"tp={args.tp} mesh=({d}x{m}) proposer={args.proposer}: "
+          f"{len(prompts)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s across {d * m} devices)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="openpangu-7b", choices=ALL_ARCHS)
@@ -100,6 +151,24 @@ def main():
                          "epilogue — no [B, T, V] logits round-trip; "
                          "requires top-p 1.0 under accept=sample "
                          "(DESIGN.md §15)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through a prefix-affinity ReplicaRouter "
+                         "over this many independent server replicas: "
+                         "requests route to the replica whose pool already "
+                         "holds their prompt-prefix blocks, least-loaded "
+                         "otherwise, with queue-depth backpressure "
+                         "(DESIGN.md §18); 0 = single server")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel decode: run the speculative step "
+                         "under shard_map on a tp-way model axis — heads, "
+                         "ffn, vocab and the KV pools shard; the verify "
+                         "reduction is a psum epilogue (DESIGN.md §18). "
+                         "0 = single device.  Needs tp devices (CPU: set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="explicit DATAxMODEL device mesh for --tp (e.g. "
+                         "'2x4'); default '1x<tp>'")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -110,11 +179,18 @@ def main():
                                   page_size=args.page_size,
                                   verify_fusion=args.verify_fusion)
     model = get_model(cfg)
-    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    params, axes = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
     sampling = SamplingParams(temperature=args.temperature, top_p=args.top_p)
     sched = SchedulerParams(chunk_size=args.chunk_size,
                             preemption=args.preemption,
                             adaptive_gamma=args.adaptive_gamma)
+    kinds = [k.strip() for k in args.families.split(",") if k.strip()]
+    if args.tp:
+        if kinds or args.replicas:
+            raise SystemExit("--tp serves static batches through the sharded "
+                             "engine; it does not combine with --families "
+                             "or --replicas")
+        return serve_tp(args, cfg, model, params, axes, sampling)
 
     def make_server(kind):
         eng = build_engine(cfg, kind, gamma=args.gamma, accept=args.accept,
@@ -124,18 +200,34 @@ def main():
                           max_len=args.max_len, admission=args.admission,
                           prefix_cache=args.prefix_cache, sched=sched)
 
-    kinds = [k.strip() for k in args.families.split(",") if k.strip()]
-    if kinds:
+    if args.replicas and kinds:
+        raise SystemExit("--replicas routes across single-proposer replicas; "
+                         "it does not combine with --families")
+    if args.replicas:
+        # prefix-affinity front door over N independent replicas (§18)
+        from repro.serving.router import ReplicaRouter
+        srv = ReplicaRouter(
+            {f"r{i}": make_server(args.proposer)
+             for i in range(args.replicas)},
+            page_size=args.page_size)
+    elif kinds:
         # one façade, one slot-group lane per proposer kind (DESIGN.md §17)
         srv = FamilySpecServer({k: make_server(k) for k in kinds})
     else:
         srv = make_server(args.proposer)
     rng = np.random.default_rng(0)
+    # under the router, requests share a handful of prompt-prefix chains so
+    # affinity has something to bite on (the §12 prefix-cache demo shape)
+    bases = [rng.integers(0, cfg.vocab_size,
+                          size=2 * args.page_size).astype(np.int32)
+             for _ in range(4)] if args.replicas else []
     t0 = time.time()
     rids = []
     for r in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=int(rng.integers(4, 48))).astype(np.int32)
+        if bases:
+            prompt = np.concatenate([bases[r % len(bases)], prompt])
         kw = dict(max_new=args.max_new, temperature=args.temperature,
                   top_p=args.top_p)
         if cfg.family == "encdec":
@@ -151,6 +243,14 @@ def main():
     toks = sum(len(r.output) for r in done if r.status == "done")
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({iters} scheduler iterations, {toks/dt:.1f} tok/s on CPU)")
+    if args.replicas:
+        snap = srv.snapshot()
+        total = snap["affinity_hits"] + snap["affinity_misses"]
+        print(f"router (DESIGN.md §18): {snap['affinity_hits']}/{total} "
+              f"affinity hits, {snap['rebalances']} rebalances, "
+              f"{snap['requeues']} requeues; routed "
+              + ", ".join(f"{n}={c}" for n, c in snap["routed"].items()))
+        return
     if kinds:
         for k in kinds:
             st = srv.stats[k]

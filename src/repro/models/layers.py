@@ -17,6 +17,22 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import Param, logical
 
+
+def tp_reduce(y, cfg: ModelConfig):
+    """Finish a row-parallel contraction under tensor parallelism.
+
+    When the config carries a ``tp_axis`` (the shard_map-local config built
+    by ``distributed/tp.py`` — DESIGN.md §18), the heads/ff dimension that
+    was just contracted held only this shard's slice, so the partial
+    [B, S, d] output must be psum-reduced across the axis *before* the
+    residual add.  Single-device configs (``tp_axis == ""``) trace no
+    collective, keeping the graph bit-identical to pre-TP builds.
+    """
+    if cfg.tp_axis:
+        return jax.lax.psum(y, cfg.tp_axis)
+    return y
+
+
 # ---------------------------------------------------------------------------
 # init helpers
 # ---------------------------------------------------------------------------
@@ -199,7 +215,8 @@ def attention_full(p, x, cfg: ModelConfig, positions=None, causal=True,
         out = _gqa_scores_to_out(q, k, v, mask, scale)
     out = (logical(out, "batch", None, "act_heads", None) if heads_ok
            else logical(out, "batch", "seq", None, None))
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = tp_reduce(jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)),
+                  cfg)
     y = logical(y, "batch", "seq", "act_embed")
     if return_kv:
         return y, (k, v)
@@ -271,7 +288,8 @@ def attention_decode(p, x, cfg: ModelConfig, cache_k, cache_v, length,
     else:
         mask = decode_mask(tree_mask, length, T, S_max)[None]
         out = _gqa_scores_to_out(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask, scale)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = tp_reduce(jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)),
+                  cfg)
     return y, cache_k, cache_v
 
 
@@ -343,7 +361,7 @@ def mlp(p, x, cfg: ModelConfig):
     else:
         h = _act(h, cfg.act)
     h = logical(h, "batch", None, "act_ff")
-    y = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+    y = tp_reduce(jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype)), cfg)
     return logical(y, "batch", "seq", "act_embed")
 
 

@@ -145,12 +145,27 @@ def embed_tokens(params, cfg: ModelConfig, tokens):
     return x
 
 
-def unembed(params, cfg: ModelConfig, hidden):
+def unembed_local(params, cfg: ModelConfig, hidden):
+    """Logits over whatever vocab slice this shard's lm_head holds —
+    [..., V] on a single device, [..., V/N] inside a TP shard_map body
+    (DESIGN.md §18).  The TP verify epilogue consumes this directly so the
+    full [B, T, V] tensor never materialises per device."""
     w = params.get("lm_head")
     if w is None:
         w = params["embed"].T
     logits = jnp.einsum("...d,dv->...v", hidden, w.astype(hidden.dtype))
     return logical(logits, "batch", "seq", "act_vocab") if logits.ndim == 3 else logits
+
+
+def unembed(params, cfg: ModelConfig, hidden):
+    logits = unembed_local(params, cfg, hidden)
+    if cfg.tp_axis and logits.shape[-1] != cfg.vocab_size:
+        # vocab-sharded lm_head under TP: gather the column slices so every
+        # full-logits consumer (prefill base token, row resample, fallback
+        # verify) sees the same [..., V] row as a single device would
+        logits = jax.lax.all_gather(logits, cfg.tp_axis, axis=logits.ndim - 1,
+                                    tiled=True)
+    return logits
 
 
 def frontend_prefix(params, cfg: ModelConfig, extra_embeds):
@@ -510,7 +525,8 @@ def attention_decode_batched(p, x, cfg, entry, lengths, masks, tree_mask,
         from repro.kernels.ops import tree_attention
         out = tree_attention(q, new_k, new_v, tree_mask, lengths, scale,
                              k_tree=k, v_tree=v, block_tables=table)
-        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        y = L.tp_reduce(
+            jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), cfg)
         new_entry["k_new"], new_entry["v_new"] = k, v
         return y, new_entry
     q, k, v = L._project_qkv(p, x, cfg)
@@ -554,7 +570,8 @@ def attention_decode_batched(p, x, cfg, entry, lengths, masks, tree_mask,
         else:
             ck, cv = _read_cache(new_entry, q.dtype, table=table)
             out = L._gqa_scores_to_out(q, ck, cv, masks, scale)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = L.tp_reduce(
+        jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), cfg)
     new_entry["k_new"], new_entry["v_new"] = k, v
     return y, new_entry
 

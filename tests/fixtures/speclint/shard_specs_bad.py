@@ -1,0 +1,35 @@
+"""Seeded shard-specs violations (speclint fixture): literal in_specs /
+out_specs tuples that disagree with the wrapped callable's arity."""
+import functools
+
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.collectives import shard_map_compat
+
+mesh = object()
+
+
+def step(params, cache):
+    return cache
+
+
+def triple(params, cache, lengths):
+    return cache, lengths, params
+
+
+# 3 specs for a 2-argument def
+f1 = shard_map_compat(step, mesh=mesh, in_specs=(P(), P(), P()),
+                      out_specs=P())
+
+# 1 spec for a 2-argument lambda
+f2 = shard_map_compat(lambda a, b: a, mesh=mesh, in_specs=(P(),),
+                      out_specs=P())
+
+# partial binds 1 of 3 positionals -> arity 2, but 3 specs remain
+f3 = shard_map_compat(functools.partial(triple, None), mesh=mesh,
+                      in_specs=(P(), P(), P()),
+                      out_specs=(P(), P(), P()))
+
+# wrapped fn returns a literal 3-tuple, out_specs carries 2 specs
+f4 = shard_map_compat(triple, mesh=mesh, in_specs=(P(), P(), P()),
+                      out_specs=(P(), P()))

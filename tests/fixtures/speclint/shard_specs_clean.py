@@ -1,0 +1,39 @@
+"""Clean shard-specs fixture: arities line up; dynamic or unresolvable
+shapes are skipped rather than guessed at."""
+import functools
+
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.collectives import shard_map_compat
+
+mesh = object()
+
+
+def step(params, cache, key=None):
+    return cache
+
+
+def pair(params, cache):
+    return cache, params
+
+
+def varargs(*xs):
+    return xs
+
+
+ok = shard_map_compat(step, mesh=mesh, in_specs=(P(), P(), P()),
+                      out_specs=P())
+# the defaulted trailing arg may be omitted: 2 specs also bind cleanly
+ok_default = shard_map_compat(step, mesh=mesh, in_specs=(P(), P()),
+                              out_specs=P())
+ok_pair = shard_map_compat(pair, mesh=mesh, in_specs=(P(), P()),
+                           out_specs=(P(), P()))
+ok_partial = shard_map_compat(functools.partial(pair, None), mesh=mesh,
+                              in_specs=(P(),), out_specs=(P(), P()))
+# *args target: arity is not statically known, site is skipped
+ok_varargs = shard_map_compat(varargs, mesh=mesh, in_specs=(P(), P()),
+                              out_specs=P())
+# non-literal in_specs: nothing to count, site is skipped
+SPECS = (P(), P())
+ok_dynamic = shard_map_compat(pair, mesh=mesh, in_specs=SPECS,
+                              out_specs=(P(), P()))

@@ -1,0 +1,241 @@
+"""ReplicaRouter unit tests (DESIGN.md §18): affinity, least-loaded
+fallback, backpressure rebalance + ownership transfer, replica-death
+requeue — all against duck-typed stub replicas — plus one integration
+pass over real ``SpecServer`` replicas.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serving.router import ReplicaRouter
+
+PS = 4   # tiny page size keeps test prompts readable
+
+
+class _Slot:
+    def __init__(self):
+        self.free = True
+
+
+class StubReplica:
+    """Minimal replica surface: submit enqueues, step_once finishes one
+    queued request, result returns done-only (like ``SpecServer``)."""
+
+    def __init__(self, n_slots: int = 2):
+        self.queue = []
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.done = {}
+        self._rid = 0
+        self.submitted = []           # (inner rid, prompt) in arrival order
+
+    def submit(self, prompt, max_new, **kw):
+        self._rid += 1
+        self.queue.append(self._rid)
+        self.submitted.append((self._rid, np.asarray(prompt, np.int32)))
+        return self._rid
+
+    def result(self, rid):
+        return self.done.get(rid)
+
+    @property
+    def busy(self):
+        return bool(self.queue) or any(not s.free for s in self.slots)
+
+    def step_once(self):
+        if self.queue:
+            rid = self.queue.pop(0)
+            self.done[rid] = SimpleNamespace(status="done", rid=rid)
+
+
+def _router(n=2, **kw):
+    reps = {f"r{i}": StubReplica() for i in range(n)}
+    kw.setdefault("page_size", PS)
+    return ReplicaRouter(reps, **kw), reps
+
+
+def _prompt(block_ids, tail=1):
+    """Prompt of len(block_ids) full blocks (each block constant-valued)
+    plus ``tail`` extra tokens so the last block is never part of a key."""
+    parts = [np.full(PS, b, np.int32) for b in block_ids] + [
+        np.full(tail, 99, np.int32)]
+    return np.concatenate(parts)
+
+
+# ------------------------------------------------------------------ keys
+
+def test_chain_keys_exclude_final_token():
+    router, _ = _router()
+    # exactly one block: the final token would be inside it -> no keys
+    assert router._chain_keys(np.arange(PS, dtype=np.int32)) == []
+    # one block + 1 token: one key, the full first block
+    keys = router._chain_keys(np.arange(PS + 1, dtype=np.int32))
+    assert keys == [np.arange(PS, dtype=np.int32).tobytes()]
+    # deepest chain first
+    keys = router._chain_keys(_prompt([7, 8]))
+    assert len(keys) == 2
+    assert keys[0] == _prompt([7, 8])[: 2 * PS].tobytes()
+    assert keys[1] == _prompt([7])[:PS].tobytes()
+
+
+# -------------------------------------------------------------- affinity
+
+def test_affinity_repeat_prefix_sticks():
+    router, _ = _router()
+    r1 = router.submit(_prompt([1, 2]), max_new=4)
+    name1 = router.routes[r1][0]
+    # same prefix again: must land on the owner even though the sibling
+    # is now strictly less loaded
+    r2 = router.submit(_prompt([1, 2], tail=3), max_new=4)
+    assert router.routes[r2][0] == name1
+    assert router.stats["affinity_hits"] == 1
+    assert router.stats["affinity_misses"] == 1
+
+
+def test_affinity_deepest_registered_prefix_wins():
+    router, _ = _router()
+    p = _prompt([1, 2])
+    shallow, deep = router._chain_keys(p)[1], router._chain_keys(p)[0]
+    router.owners[shallow] = "r0"
+    router.owners[deep] = "r1"
+    rid = router.submit(p, max_new=4)
+    assert router.routes[rid][0] == "r1"
+    assert router.stats["affinity_hits"] == 1
+
+
+def test_dead_owner_falls_through_to_shallower_key():
+    router, _ = _router(n=3)
+    p = _prompt([1, 2])
+    shallow, deep = router._chain_keys(p)[1], router._chain_keys(p)[0]
+    router.owners[deep] = "r2"
+    router.owners[shallow] = "r1"
+    router.live.discard("r2")
+    rid = router.submit(p, max_new=4)
+    assert router.routes[rid][0] == "r1"
+
+
+# -------------------------------------------------------------- fallback
+
+def test_least_loaded_fallback_on_miss():
+    router, reps = _router()
+    for _ in range(3):                        # pile unrelated work onto r0
+        reps["r0"].submit(_prompt([5]), max_new=4)
+    rid = router.submit(_prompt([1]), max_new=4)
+    assert router.routes[rid][0] == "r1"
+    assert router.stats["affinity_misses"] == 1
+    assert router.stats["affinity_hits"] == 0
+
+
+def test_occupied_slots_count_toward_load():
+    router, reps = _router()
+    reps["r0"].slots[0].free = False
+    reps["r0"].slots[1].free = False
+    rid = router.submit(_prompt([1]), max_new=4)
+    assert router.routes[rid][0] == "r1"
+
+
+# ---------------------------------------------------------- backpressure
+
+def test_backpressure_rebalances_and_transfers_ownership():
+    router, reps = _router(max_queue=2)
+    p = _prompt([1, 2])
+    first = router.submit(p, max_new=4)
+    owner = router.routes[first][0]
+    other = "r1" if owner == "r0" else "r0"
+    # fill the owner's queue to the cap with unrelated direct work
+    while len(reps[owner].queue) < router.max_queue:
+        reps[owner].submit(_prompt([9]), max_new=4)
+    rid = router.submit(p, max_new=4)
+    assert router.routes[rid][0] == other
+    assert router.stats["rebalances"] == 1
+    # ownership followed the rebalance: once load equalises, the prefix
+    # routes to the new owner, not the old one
+    for key in router._chain_keys(p):
+        assert router.owners[key] == other
+
+
+# ----------------------------------------------------------- mark_dead
+
+def test_mark_dead_harvests_finished_and_requeues_rest():
+    router, reps = _router()
+    p = _prompt([1, 2])
+    done_rid = router.submit(p, max_new=4)
+    owner = router.routes[done_rid][0]
+    survivor = "r1" if owner == "r0" else "r0"
+    reps[owner].step_once()                    # finish the first request
+    assert router.result(done_rid).status == "done"
+    pend_rid = router.submit(p, max_new=4)     # affinity -> same owner
+    assert router.routes[pend_rid][0] == owner
+
+    router.mark_dead(owner)
+
+    # finished result survives the crash via the harvest
+    assert router.result(done_rid).status == "done"
+    # pending request was requeued onto the survivor with its prompt
+    assert router.routes[pend_rid][0] == survivor
+    inner = router.routes[pend_rid][1]
+    np.testing.assert_array_equal(dict(reps[survivor].submitted)[inner], p)
+    assert router.stats["requeues"] == 1
+    # dead replica's ownership is gone; the survivor owns the chain now
+    assert all(v == survivor for v in router.owners.values())
+    # draining the survivor completes the requeued request
+    router.run()
+    assert router.result(pend_rid).status == "done"
+
+
+def test_mark_dead_unknown_or_last_replica_raises():
+    router, _ = _router()
+    with pytest.raises(ValueError):
+        router.mark_dead("nope")
+    router.mark_dead("r0")
+    with pytest.raises(RuntimeError):
+        router.mark_dead("r1")
+    with pytest.raises(ValueError):            # already dead
+        router.mark_dead("r0")
+
+
+def test_result_of_unharvested_dead_request_is_none():
+    router, reps = _router()
+    rid = router.submit(_prompt([1]), max_new=4)
+    owner = router.routes[rid][0]
+    # simulate the harvest window missing it: kill, then ask directly
+    router.live.discard(owner)
+    assert router.result(rid) is None
+
+
+# ---------------------------------------------------------- integration
+
+def test_router_over_real_specservers():
+    import jax
+    from repro.configs.registry import get_config
+    from repro.core.engine import build_engine
+    from repro.distributed.sharding import split_params
+    from repro.models.api import get_model
+    from repro.serving.scheduler import SpecServer
+
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    model = get_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+
+    def make_server():
+        eng = build_engine(cfg, "ngram", gamma=4)
+        return SpecServer(eng, params, None, batch_slots=2, max_len=96)
+
+    ps = 16
+    router = ReplicaRouter({"r0": make_server(), "r1": make_server()},
+                           page_size=ps)
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, cfg.vocab_size, size=ps + 4).astype(np.int32)
+    rids = [router.submit(base, max_new=4) for _ in range(3)]
+    rids.append(router.submit(
+        rng.integers(0, cfg.vocab_size, size=ps + 2).astype(np.int32),
+        max_new=4))
+    router.run()
+    reqs = [router.result(r) for r in rids]
+    assert all(r is not None and r.status == "done" for r in reqs)
+    # repeats of the shared prefix stuck to one replica
+    assert len({router.routes[r][0] for r in rids[:3]}) == 1
+    assert router.stats["affinity_hits"] >= 2
+    snap = router.snapshot()
+    assert snap["live"] == ["r0", "r1"]
+    assert sum(snap["routed"].values()) == len(rids)

@@ -44,10 +44,11 @@ CASES = [
     ("ssm-rollback", "ssm_rollback_bad.py", "ssm_rollback_clean.py", 1),
     ("kernel-static-shape", "kernel_static_bad.py",
      "kernel_static_clean.py", 2),
+    ("shard-specs", "shard_specs_bad.py", "shard_specs_clean.py", 4),
 ]
 
 
-def test_all_six_rules_are_registered():
+def test_every_rule_has_a_fixture_pair():
     assert set(RULES) == {c[0] for c in CASES}
 
 
@@ -144,7 +145,9 @@ def test_checks_cli_green_on_repo():
     ("trace_safety_bad.py", 1), ("donation_bad.py", 1),
     ("proposer_bad.py", 1), ("pytree_axis_bad.py", 1),
     ("ssm_rollback_bad.py", 1), ("kernel_static_bad.py", 1),
-    ("trace_safety_clean.py", 0), ("suppressed.py", 0),
+    ("shard_specs_bad.py", 1),
+    ("trace_safety_clean.py", 0), ("shard_specs_clean.py", 0),
+    ("suppressed.py", 0),
 ])
 def test_checks_cli_gates_fixtures(fixture, rc):
     r = _cli("-m", "tools.checks", str(FIX / fixture))

@@ -59,6 +59,8 @@ GATES = [
     ("kv_quant", "accepted_len_drift", "higher", 0.50),
     ("families", "accepted_len.*", "lower", 0.10),
     ("families", "verify_steps.*", "higher", 0.0),
+    ("tp", "model.hbm_reduction_tp4", "lower", 0.05),
+    ("tp", "affinity.hit_rate", "lower", 0.05),
 ]
 ADVISORY_DRIFT = 0.25     # print advisory metrics drifting past this
 

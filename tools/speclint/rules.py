@@ -1,4 +1,4 @@
-"""The six speclint rules (DESIGN.md §16).
+"""The speclint rules (DESIGN.md §16).
 
 Each rule encodes one invariant this repo has already paid for by hand —
 the rule docstrings name the CHANGES.md incident class they gate.
@@ -641,4 +641,106 @@ class KernelStaticShape(Rule):
                             "grid extent is built from a traced value; "
                             "grids must be static so the kernel keeps one "
                             "compiled graph (§2)"))
+        return out
+
+# --------------------------------------------------------------------------
+# rule 7: shard-specs
+# --------------------------------------------------------------------------
+
+def _literal_tuple_len(node):
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+@register
+class ShardSpecs(Rule):
+    name = "shard-specs"
+    doc = ("shard_map_compat literal in_specs tuples match the wrapped "
+           "callable's positional arity; literal out_specs tuples match "
+           "its literal tuple returns")
+
+    def check(self, ctx) -> List[Finding]:
+        out: List[Finding] = []
+        for src in ctx.files:
+            defs = {}
+            for node in ast.walk(src.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    defs.setdefault(node.name, node)
+            for node in ast.walk(src.tree):
+                if (isinstance(node, ast.Call)
+                        and last_name(node.func) == "shard_map_compat"):
+                    out += self._check_site(src, node, defs)
+        return out
+
+    @staticmethod
+    def _arity(target, defs):
+        """-> (min_args, max_args, fn_node): the positional-arity window
+        of the wrapped callable, (None, None, fn) when not statically
+        known (*args, **-splat partial, unresolved name, attribute)."""
+        if isinstance(target, ast.Lambda):
+            a = target.args
+            if a.vararg is not None:
+                return None, None, target
+            n = len(a.posonlyargs + a.args)
+            return n - len(a.defaults), n, target
+        if isinstance(target, ast.Name):
+            fn = defs.get(target.id)
+            if fn is None or fn.args.vararg is not None:
+                return None, None, fn
+            a = fn.args
+            n = len(a.posonlyargs + a.args)
+            return n - len(a.defaults), n, fn
+        if (isinstance(target, ast.Call)
+                and last_name(target.func) == "partial"):
+            if not target.args or any(kw.arg is None
+                                      for kw in target.keywords):
+                return None, None, None
+            lo, hi, fn = ShardSpecs._arity(target.args[0], defs)
+            if hi is None:
+                return None, None, fn
+            bound = len(target.args) - 1 + len(target.keywords)
+            return max(min(lo, hi - bound), 0), max(hi - bound, 0), fn
+        return None, None, None
+
+    @staticmethod
+    def _return_arities(fn):
+        """Literal-tuple return lengths of the wrapped callable; empty
+        (out_specs unchecked) when any return is not a literal tuple."""
+        if isinstance(fn, ast.Lambda):
+            return ([len(fn.body.elts)]
+                    if isinstance(fn.body, ast.Tuple) else [])
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return []
+        lens = []
+        for n in walk_no_nested(fn):
+            if isinstance(n, ast.Return) and n.value is not None:
+                if not isinstance(n.value, ast.Tuple):
+                    return []
+                lens.append(len(n.value.elts))
+        return lens
+
+    def _check_site(self, src, call, defs) -> List[Finding]:
+        if not call.args:
+            return []
+        lo, hi, fn = self._arity(call.args[0], defs)
+        kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+        out = []
+        n_in = _literal_tuple_len(kwargs.get("in_specs"))
+        if hi is not None and n_in is not None and not lo <= n_in <= hi:
+            want = str(hi) if lo == hi else f"{lo}..{hi}"
+            out.append(Finding(
+                self.name, src.rel, call.lineno, call.col_offset,
+                f"in_specs carries {n_in} spec(s) but the wrapped callable "
+                f"takes {want} positional argument(s); shard_map zips "
+                f"specs to arguments, so an arity mismatch misbinds every "
+                f"spec after the gap"))
+        n_out = _literal_tuple_len(kwargs.get("out_specs"))
+        rets = self._return_arities(fn)
+        if n_out is not None and rets and all(r != n_out for r in rets):
+            out.append(Finding(
+                self.name, src.rel, call.lineno, call.col_offset,
+                f"out_specs carries {n_out} spec(s) but the wrapped "
+                f"callable returns a literal {rets[0]}-tuple; every output "
+                f"leaf needs its own spec"))
         return out
